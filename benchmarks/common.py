@@ -1,0 +1,24 @@
+"""Benchmark harness utilities: timing + CSV output."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def time_fn(fn: Callable, warmup: int = 3, iters: int = 10) -> float:
+    """Median wall time in seconds (paper methodology: warm-up + timed)."""
+    for _ in range(warmup):
+        fn()
+    ts: List[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    return row

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
+
+  bench_vs_interp     — Fig. 10: compiled vs interpretation (C1)
+  bench_spadd3        — Fig. 10c: fused vs pairwise adds (C2)
+  bench_load_balance  — §II-D: universe vs non-zero partitions (C3)
+  bench_mismatch      — §II-D: data vs computation distribution (C4)
+  bench_weak_scaling  — Fig. 13: banded SpMV weak scaling
+  bench_pallas_kernels— leaf/packing microbench
+
+Scale flag: ``--quick`` shrinks inputs for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+
+    from . import (bench_load_balance, bench_mismatch, bench_pallas_kernels,
+                   bench_spadd3, bench_vs_interp, bench_weak_scaling)
+
+    print("name,us_per_call,derived")
+    suites = {
+        "vs_interp": lambda: bench_vs_interp.run(
+            *((4000, 4000, 8) if args.quick else (20000, 20000, 16)),
+            dims3=(400, 300, 200) if args.quick else (1200, 900, 500)),
+        "spadd3": lambda: bench_spadd3.run(
+            *( (2000, 2000) if args.quick else (8000, 8000) )),
+        "load_balance": bench_load_balance.run,
+        "mismatch": bench_mismatch.run,
+        "weak_scaling": lambda: bench_weak_scaling.run(
+            base_n=8000 if args.quick else 40000),
+        "pallas_kernels": lambda: bench_pallas_kernels.run(
+            n=4000 if args.quick else 20000),
+    }
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001 — report, keep the harness going
+            print(f"{name}_ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

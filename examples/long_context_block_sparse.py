@@ -1,0 +1,41 @@
+"""Block-sparse sliding-window attention from the paper's format machinery
+(models/sparse_attention.py) — the long_500k path for full-attention archs.
+
+Builds the banded block mask as a block-CSR core.Tensor, packs it ELL-style
+(same layout as the TPU kernels), runs attention over only the listed
+blocks, and validates against a dense masked reference.
+
+    PYTHONPATH=src python examples/long_context_block_sparse.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.sparse_attention import (band_plan, block_sparse_attention,
+                                           mask_to_ell)
+
+B, S, H, hd = 2, 1024, 4, 32
+Q_BLOCK, WINDOW = 128, 256
+
+mask = band_plan(S, Q_BLOCK, WINDOW)
+print(f"block mask: {mask.shape[0]}x{mask.shape[1]} blocks, "
+      f"{mask.nnz} present ({mask.nnz / mask.shape[0]**2:.1%} of dense)")
+idx = mask_to_ell(mask)
+
+key = jax.random.PRNGKey(0)
+q, k, v = (jax.random.normal(kk, (B, S, H, hd), jnp.float32)
+           for kk in jax.random.split(key, 3))
+out = jax.jit(lambda q, k, v: block_sparse_attention(
+    q, k, v, idx, Q_BLOCK, window=WINDOW))(q, k, v)
+
+# dense reference with the same mask
+scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / hd ** 0.5
+pos = np.arange(S)
+m = (pos[None, :] <= pos[:, None]) & (pos[None, :] > pos[:, None] - WINDOW)
+ref = jnp.einsum("bhqk,bkhd->bqhd",
+                 jax.nn.softmax(jnp.where(m[None, None], scores, -1e30), -1),
+                 v)
+err = float(jnp.abs(out - ref).max())
+print(f"max |err| vs dense windowed reference: {err:.2e}")
+assert err < 1e-4
+print("OK — compute scales with S*window, not S^2")

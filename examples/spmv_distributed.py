@@ -1,0 +1,53 @@
+"""Row-based vs non-zero-based distributed SpMV (paper §II-D) on a skewed
+matrix, including real shard_map SPMD execution when multiple devices are
+available (run with XLA_FLAGS=--xla_force_host_platform_device_count=8 to
+see the multi-device path on CPU).
+
+    PYTHONPATH=src python examples/spmv_distributed.py
+"""
+import numpy as np
+
+import repro.core as rc
+from repro.core.lower import default_nnz_schedule, default_row_schedule, lower
+from repro.core.tensor import Tensor
+from repro.data.spdata import powerlaw_matrix
+
+pieces = 8
+M = rc.Machine(("x", pieces))
+
+B = powerlaw_matrix("B", 4000, 4000, avg_nnz_per_row=12, seed=0)
+c = Tensor.from_dense("c", np.random.default_rng(1)
+                      .standard_normal(4000).astype(np.float32))
+a = Tensor.zeros_dense("a", (4000,))
+stmt = rc.parse_tin("a(i) = B(i,j) * c(j)", a=a, B=B, c=c)
+expected = B.to_dense() @ np.asarray(c.to_dense())
+
+for name, sched in [("row-based", default_row_schedule(stmt, M)),
+                    ("nnz-based", default_nnz_schedule(stmt, M))]:
+    k = lower(stmt, M, schedule=sched)
+    y = k.run()
+    assert np.allclose(y, expected, atol=1e-3)
+    vb = k.plans["B"].vals_bounds
+    counts = vb[:, 1] - vb[:, 0]
+    print(f"{name:10s} leaf={k.leaf_name:10s} imbalance="
+          f"{k.imbalance():5.2f} shard nnz: min={counts.min()} "
+          f"max={counts.max()}  comm={k.comm.total_network_bytes()}B")
+
+# --- real SPMD execution when the host exposes enough devices ---------------
+import jax  # noqa: E402
+
+if len(jax.devices()) >= pieces:
+    from repro.distributed.executor import to_spmd
+    from repro.distributed.mesh import machine_to_mesh
+
+    mesh = machine_to_mesh(M)
+    for name, sched in [("row-based", default_row_schedule(stmt, M)),
+                        ("nnz-based", default_nnz_schedule(stmt, M))]:
+        k = lower(stmt, M, schedule=sched)
+        y = to_spmd(k, mesh)()
+        assert np.allclose(y, expected, atol=1e-3)
+        print(f"{name} via shard_map on {pieces} devices: OK")
+else:
+    print(f"(single device — rerun with XLA_FLAGS="
+          f"--xla_force_host_platform_device_count={pieces} "
+          f"for the shard_map path)")

@@ -1,0 +1,53 @@
+"""End-to-end training driver: a ~100M-param dense LM for a few hundred
+steps with checkpoint/restart (deliverable b).
+
+Defaults are sized for this single-CPU container (~10M params, 300 steps,
+loss visibly decreasing on the structured synthetic corpus). Scale up with
+--dmodel/--layers/--steps; on a pod the same Trainer shards over the
+production mesh automatically.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 300
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.train import Trainer
+from repro.runtime.fault import RestartPolicy
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--dmodel", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=6)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = ArchConfig(
+        name="e2e-dense", family="dense", n_layers=args.layers,
+        d_model=args.dmodel, n_heads=max(args.dmodel // 64, 1),
+        n_kv_heads=max(args.dmodel // 128, 1), d_ff=args.dmodel * 4,
+        vocab_size=8192, remat=False, dtype="float32")
+    print(f"params ≈ {cfg.param_count()/1e6:.1f}M")
+    shape = ShapeConfig("e2e", "train", seq_len=args.seq,
+                        global_batch=args.batch)
+    tr = Trainer(cfg, shape, ckpt_dir=args.ckpt, ckpt_every=100,
+                 total_steps=args.steps, peak_lr=1e-3)
+    RestartPolicy(max_restarts=2).run_with_restarts(
+        lambda: tr.run(args.steps),
+        on_restart=lambda n: print(f"[restart {n}]"))
+    if not tr.metrics_log:
+        print(f"checkpoint already at step {tr.step} ≥ {args.steps}; "
+              f"nothing to train (use a fresh --ckpt dir to restart)")
+        return
+    first = tr.metrics_log[0]["loss"]
+    last = tr.metrics_log[-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

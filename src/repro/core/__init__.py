@@ -1,0 +1,39 @@
+"""SpDISTAL core — the paper's contribution as a composable JAX module.
+
+Four independent sub-languages (paper §II):
+  - computation:  :mod:`repro.core.tin`       (tensor index notation)
+  - formats:      :mod:`repro.core.formats`   (per-level Dense/Compressed)
+  - distribution: :mod:`repro.core.tdn`       (universe/nnz/fused TDN)
+  - scheduling:   :mod:`repro.core.schedule`  (divide/distribute/communicate)
+
+plus the compilation machinery:
+  - :mod:`repro.core.partition` — dependent partitioning (image/preimage)
+  - :mod:`repro.core.lower`     — scheduled TIN → executable SPMD JAX
+  - :mod:`repro.core.interp`    — CTF-analog interpretation baseline
+"""
+from . import formats
+from .formats import (COO, CSC, CSF, CSR, DCSR, DDC, Compressed, Dense,
+                      DenseMat, DenseND, DenseVec, Format, Singleton,
+                      SparseVec)
+from .interp import interpret
+from .lower import (LoweredKernel, default_nnz_schedule, default_row_schedule,
+                    lower)
+from .partition import (ShardedTensor, TensorPartition, image,
+                        partition_by_bounds, partition_tensor_nonzeros,
+                        partition_tensor_rows, preimage, replicate_tensor)
+from .schedule import CPUThread, Schedule, TPUGrid, VectorLanes
+from .tdn import Distribution, Machine, dist
+from .tensor import Tensor, TensorVar
+from .tin import Access, Assignment, IndexVar, index_vars, parse_tin
+
+__all__ = [
+    "formats", "COO", "CSC", "CSF", "CSR", "DCSR", "DDC", "Compressed",
+    "Dense", "DenseMat", "DenseND", "DenseVec", "Format", "Singleton",
+    "SparseVec", "interpret", "LoweredKernel", "default_nnz_schedule",
+    "default_row_schedule", "lower", "image", "preimage",
+    "partition_by_bounds", "partition_tensor_nonzeros",
+    "partition_tensor_rows", "replicate_tensor", "CPUThread", "Schedule",
+    "TPUGrid", "VectorLanes", "Distribution", "Machine", "dist", "Tensor",
+    "TensorVar", "Access", "Assignment", "IndexVar", "index_vars",
+    "parse_tin", "ShardedTensor", "TensorPartition",
+]

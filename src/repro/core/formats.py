@@ -1,0 +1,161 @@
+"""Format language — per-dimension level formats (paper §II-B, §III-B).
+
+A tensor's *coordinate tree* has one level per dimension (in storage order).
+Each level is stored with a *level format*:
+
+- ``Dense``      — all coordinates of the level exist; stored implicitly as an
+                   index range ``dom = [0, size)``.
+- ``Compressed`` — only non-zero coordinates stored, with TACO's ``pos``/
+                   ``crd`` arrays. Following the paper (§III-B, Fig. 7) the
+                   ``pos`` region conceptually stores *(lo, hi)* range tuples
+                   so dependent-partitioning ``image``/``preimage`` apply; we
+                   keep the standard length-(parent+1) monotone ``pos`` array
+                   and expose the (lo, hi) view as ``pos[i], pos[i+1]-1``.
+
+A :class:`Format` is an ordered list of level formats plus a dimension
+ordering (``mode_ordering``), so CSR/CSC/DCSR/CSF/COO are all spellable —
+Figure 3 of the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+
+class LevelFormat:
+    """Base class for level formats. Subclasses are stateless singletons."""
+
+    name: str = "?"
+    compressed: bool = False
+    # COO-style levels that share the position space with their parent
+    # (LevelFormat Singleton from Chou et al. [27]); used for fused levels.
+    singleton: bool = False
+
+    def __repr__(self) -> str:
+        return self.name
+
+
+class _Dense(LevelFormat):
+    name = "Dense"
+    compressed = False
+
+
+class _Compressed(LevelFormat):
+    name = "Compressed"
+    compressed = True
+
+
+class _Singleton(LevelFormat):
+    """COO trailing level: one coordinate per parent position."""
+
+    name = "Singleton"
+    compressed = True
+    singleton = True
+
+
+Dense = _Dense()
+Compressed = _Compressed()
+Singleton = _Singleton()
+
+_BY_NAME = {"Dense": Dense, "Compressed": Compressed, "Singleton": Singleton}
+
+
+def level_format(x) -> LevelFormat:
+    if isinstance(x, LevelFormat):
+        return x
+    if isinstance(x, str) and x in _BY_NAME:
+        return _BY_NAME[x]
+    raise ValueError(f"unknown level format {x!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Format:
+    """An ordered tuple of level formats + optional mode ordering.
+
+    ``mode_ordering[lvl]`` gives the tensor dimension stored at coordinate
+    tree level ``lvl``; identity if omitted (row-major-like). CSC is
+    ``Format((Dense, Compressed), mode_ordering=(1, 0))``.
+    """
+
+    levels: Tuple[LevelFormat, ...]
+    mode_ordering: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "levels", tuple(level_format(l) for l in self.levels)
+        )
+        if self.mode_ordering is None:
+            object.__setattr__(
+                self, "mode_ordering", tuple(range(len(self.levels)))
+            )
+        if sorted(self.mode_ordering) != list(range(len(self.levels))):
+            raise ValueError(f"bad mode ordering {self.mode_ordering}")
+
+    @property
+    def order(self) -> int:
+        return len(self.levels)
+
+    @property
+    def is_sparse(self) -> bool:
+        return any(l.compressed for l in self.levels)
+
+    @property
+    def is_all_dense(self) -> bool:
+        return not self.is_sparse
+
+    def level_of_dim(self, dim: int) -> int:
+        return self.mode_ordering.index(dim)
+
+    def dim_of_level(self, lvl: int) -> int:
+        return self.mode_ordering[lvl]
+
+    def __repr__(self) -> str:
+        lv = ",".join(l.name for l in self.levels)
+        if self.mode_ordering != tuple(range(len(self.levels))):
+            return f"Format([{lv}], order={self.mode_ordering})"
+        return f"Format([{lv}])"
+
+
+# -- Common named formats (paper Fig. 3 and §VI) ----------------------------
+
+def DenseVec() -> Format:
+    return Format((Dense,))
+
+
+def SparseVec() -> Format:
+    return Format((Compressed,))
+
+
+def DenseMat() -> Format:
+    return Format((Dense, Dense))
+
+
+def CSR() -> Format:
+    return Format((Dense, Compressed))
+
+
+def CSC() -> Format:
+    return Format((Dense, Compressed), mode_ordering=(1, 0))
+
+
+def DCSR() -> Format:
+    return Format((Compressed, Compressed))
+
+
+def COO(order: int = 2) -> Format:
+    """COO: compressed outer level, singleton trailing levels."""
+    return Format((Compressed,) + (Singleton,) * (order - 1))
+
+
+def CSF(order: int = 3) -> Format:
+    """Compressed sparse fiber — all levels compressed (FROSTT tensors)."""
+    return Format((Dense,) + (Compressed,) * (order - 1))
+
+
+def DDC() -> Format:
+    """Two dense outer levels + compressed inner ("patents" in the paper)."""
+    return Format((Dense, Dense, Compressed))
+
+
+def DenseND(order: int) -> Format:
+    return Format((Dense,) * order)

@@ -1,0 +1,596 @@
+"""Lowering scheduled TIN statements to executable JAX (paper §IV).
+
+This is the Fig. 9a code-generation algorithm adapted to XLA's static-SPMD
+model (DESIGN.md §2):
+
+1. **Plan**: for the distributed index variable, create the *initial level
+   partition* — universe partitions for coordinate-value loops, non-zero
+   partitions for coordinate-position loops — then derive full
+   coordinate-tree partitions of every accessed tensor with
+   image/preimage (``partition_tensor_rows`` / ``partition_tensor_nonzeros``)
+   and replicate tensors not indexed by the distributed variable
+   (``partitionRemainingCoordinateTrees`` → TDN replication).
+2. **Materialize**: pack per-color sub-tensors into stacked padded arrays.
+3. **Emit**: select the specialized leaf kernel for (expression signature ×
+   strategy space × format), wrap it in the distributed loop — `jax.vmap`
+   over the color axis for the single-process simulation backend, or
+   `jax.shard_map` over a real mesh axis for SPMD execution — and place the
+   collectives implied by ``communicate`` (replication = all-gather ahead of
+   the loop; overlapping output roots = reduction after it).
+
+The result is a *bespoke compiled function* per (computation, format,
+data distribution, computation distribution) — the paper's compilation
+thesis, versus interpretation (see core/interp.py for the CTF analog).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import formats as fmt
+from .partition import (ShardedTensor, TensorPartition,
+                        materialize_coo_nnz, materialize_csr_rows,
+                        materialize_dense_rows, materialize_replicated,
+                        partition_by_bounds, partition_tensor_nonzeros,
+                        partition_tensor_rows, replicate_tensor)
+from .schedule import DistStrategy, Schedule
+from .tdn import Distribution, Machine
+from .tensor import Tensor
+from .tin import Assignment, IndexVar
+from ..kernels import ref as K
+
+
+@dataclasses.dataclass
+class CommStats:
+    """Communication model for the lowered kernel (drives §Roofline).
+
+    ``replicate_bytes``: payload all-gathered to every color before the
+    distributed loop (paper's `communicate` at the loop).
+    ``reduce_bytes``: overlapping-output payload reduced after the loop
+    (non-zero strategies).
+    ``redistribute_bytes``: data-vs-computation distribution mismatch cost
+    (paper §II-D final paragraph — legal but costed)."""
+
+    pieces: int = 1
+    replicate_bytes: int = 0
+    reduce_bytes: int = 0
+    redistribute_bytes: int = 0
+
+    def total_network_bytes(self) -> int:
+        # all-gather of b bytes to P nodes moves b*(P-1); reductions likewise
+        p = max(self.pieces - 1, 0)
+        return (self.replicate_bytes + self.reduce_bytes) * p + \
+            self.redistribute_bytes
+
+    def as_dict(self) -> Dict[str, int]:
+        return {
+            "pieces": self.pieces,
+            "replicate_bytes": self.replicate_bytes,
+            "reduce_bytes": self.reduce_bytes,
+            "redistribute_bytes": self.redistribute_bytes,
+            "total_network_bytes": self.total_network_bytes(),
+        }
+
+
+@dataclasses.dataclass
+class LoweredKernel:
+    """A compiled distributed sparse kernel + its plan artifacts."""
+
+    stmt: Assignment
+    strategy: DistStrategy
+    machine: Machine
+    plans: Dict[str, TensorPartition]
+    shards: Dict[str, ShardedTensor]
+    runner: Callable[[], Any]
+    comm: CommStats
+    leaf_name: str
+
+    def run(self):
+        return self.runner()
+
+    def imbalance(self) -> float:
+        name = self._dist_sparse_name()
+        return self.plans[name].imbalance() if name in self.plans else 0.0
+
+    def _dist_sparse_name(self) -> Optional[str]:
+        for acc in self.stmt.rhs.accesses():
+            if acc.tensor.format.is_sparse:
+                return acc.tensor.name
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Helpers
+# ---------------------------------------------------------------------------
+
+def _scatter_rows(global_shape, blocks, row_start, row_count):
+    """Assemble per-color padded row blocks into the global output (the
+    inverse of the row partition; disjoint rows → add == set; overlapping
+    rows (nnz strategy) → correct reduction)."""
+    P, max_rows = blocks.shape[0], blocks.shape[1]
+    out = jnp.zeros(global_shape, dtype=blocks.dtype)
+    idx = row_start[:, None] + jnp.arange(max_rows, dtype=row_start.dtype)[None, :]
+    mask = jnp.arange(max_rows)[None, :] < row_count[:, None]
+    idx = jnp.clip(idx, 0, global_shape[0] - 1)
+    flat_blocks = blocks.reshape((P * max_rows,) + blocks.shape[2:])
+    flat_idx = idx.reshape(-1)
+    flat_mask = mask.reshape(-1)
+    mshape = (-1,) + (1,) * (blocks.ndim - 2)
+    return out.at[flat_idx].add(flat_blocks * flat_mask.reshape(mshape).astype(blocks.dtype))
+
+
+def _scatter_vals(total_nnz, val_blocks, nnz_start, nnz_count):
+    P, max_nnz = val_blocks.shape
+    out = jnp.zeros((total_nnz,), dtype=val_blocks.dtype)
+    idx = nnz_start[:, None] + jnp.arange(max_nnz, dtype=nnz_start.dtype)[None, :]
+    mask = jnp.arange(max_nnz)[None, :] < nnz_count[:, None]
+    idx = jnp.clip(idx, 0, max(total_nnz - 1, 0))
+    return out.at[idx.reshape(-1)].add((val_blocks * mask).reshape(-1))
+
+
+def _nbytes(t: Tensor) -> int:
+    if t.format.is_all_dense:
+        return int(np.prod(t.shape)) * t.vals.dtype.itemsize
+    n = t.nnz * (t.vals.dtype.itemsize + 4)  # vals + one crd per level approx
+    for ld in t.levels:
+        if ld.pos is not None:
+            n += ld.pos.nbytes
+    return n
+
+
+# ---------------------------------------------------------------------------
+# The lowering entry point
+# ---------------------------------------------------------------------------
+
+def lower(
+    stmt: Assignment,
+    machine: Machine,
+    schedule: Optional[Schedule] = None,
+    distributions: Optional[Dict[str, Distribution]] = None,
+    jit: bool = True,
+) -> LoweredKernel:
+    """Compile a scheduled TIN statement into a distributed executable.
+
+    ``distributions`` declares the *data* distribution per tensor (TDN). The
+    *computation* distribution comes from the schedule. Where they disagree
+    the kernel stays correct but `comm.redistribute_bytes` charges the
+    reshuffle (paper §II-D)."""
+    if schedule is None:
+        schedule = default_row_schedule(stmt, machine)
+    strat = schedule.strategy()
+    pieces = strat.pieces
+    sig = stmt.signature()
+
+    out_t: Tensor = stmt.lhs.tensor
+    plans: Dict[str, TensorPartition] = {}
+    shards: Dict[str, ShardedTensor] = {}
+    comm = CommStats(pieces=pieces)
+
+    # ---- Step 1 & 2 of Fig. 9a: initial + derived partitions --------------
+    dist_var = strat.var
+    if strat.space == "universe":
+        # coordinate-value loop -> createInitialUniversePartitions
+        n = stmt.var_extent(dist_var)
+        bounds = partition_by_bounds(n, pieces)
+        for acc in stmt.accesses():
+            t = acc.tensor
+            if t.name in plans:
+                continue
+            if dist_var in acc.idx:
+                lvl_dim = acc.idx.index(dist_var)
+                if t.format.level_of_dim(lvl_dim) == 0:
+                    plans[t.name] = partition_tensor_rows(t, bounds)
+                    continue
+            # not indexed by the distributed var at the root -> communicate
+            # fetches the whole tensor per color (replication)
+            plans[t.name] = replicate_tensor(t, pieces)
+    else:
+        # coordinate-position loop -> createInitialNonZeroPartition of the
+        # position-space (sparse) tensor, then partition the remaining
+        # coordinate trees from its derived root partition.
+        pos_tensor = None
+        for acc in stmt.rhs.accesses():
+            if acc.tensor.format.is_sparse:
+                pos_tensor = acc.tensor
+                break
+        if pos_tensor is None:
+            raise ValueError("nnz schedule requires a sparse rhs tensor")
+        p = partition_tensor_nonzeros(pos_tensor, pieces)
+        plans[pos_tensor.name] = p
+        root_bounds = p.root_coord_bounds
+        for acc in stmt.accesses():
+            t = acc.tensor
+            if t.name in plans:
+                continue
+            if (t is out_t and not t.format.is_sparse
+                    and stmt.lhs.idx
+                    and stmt.lhs.idx[0] == pos_tensor_root_var(stmt, pos_tensor)):
+                plans[t.name] = partition_tensor_rows(t, root_bounds)
+            else:
+                plans[t.name] = replicate_tensor(t, pieces)
+
+    # ---- materialize -------------------------------------------------------
+    for name, plan in plans.items():
+        t = plan.tensor
+        if t is out_t and _output_is_assembled(sig):
+            continue  # outputs assembled from leaf results, not materialized
+        if plan.replicated:
+            shards[name] = materialize_replicated(t, pieces)
+            comm.replicate_bytes += _nbytes(t)
+        elif strat.space == "nnz" and t.format.is_sparse:
+            shards[name] = materialize_coo_nnz(t, plan)
+        elif t.format.is_all_dense:
+            shards[name] = materialize_dense_rows(t, plan.root_coord_bounds)
+        else:
+            shards[name] = materialize_csr_rows(t, plan)
+
+    # data-vs-computation distribution mismatch cost (C4)
+    if distributions:
+        for name, d in distributions.items():
+            want = plans.get(name)
+            if want is None or want.replicated:
+                continue
+            have = d.plan(plans[name].tensor)
+            if not _plans_equal(want, have):
+                comm.redistribute_bytes += _nbytes(plans[name].tensor)
+
+    if strat.space == "nnz":
+        # overlapping output rows reduced across colors
+        ov = plans[next(iter(plans))]  # position tensor plan
+        comm.reduce_bytes += int(
+            (ov.root_coord_bounds[:, 1] - ov.root_coord_bounds[:, 0]).sum()
+            - (ov.root_coord_bounds[:, 1].max() - ov.root_coord_bounds[:, 0].min())
+        ) * 4
+
+    # ---- emit: pick leaf + build runner ------------------------------------
+    leaf_name, runner = _emit(stmt, strat, plans, shards, jit=jit)
+    return LoweredKernel(
+        stmt=stmt, strategy=strat, machine=machine, plans=plans,
+        shards=shards, runner=runner, comm=comm, leaf_name=leaf_name,
+    )
+
+
+def pos_tensor_root_var(stmt: Assignment, pos_tensor: Tensor) -> IndexVar:
+    for acc in stmt.rhs.accesses():
+        if acc.tensor is pos_tensor:
+            return acc.idx[0]
+    raise KeyError(pos_tensor.name)
+
+
+def _output_is_assembled(sig: str) -> bool:
+    # sparse outputs (sddmm, spttv, spadd3) are assembled from leaf results
+    return sig.startswith("s")
+
+
+def _plans_equal(a: TensorPartition, b: TensorPartition) -> bool:
+    if a.replicated != b.replicated:
+        return False
+    if (a.vals_bounds is None) != (b.vals_bounds is None):
+        return False
+    if a.vals_bounds is not None and not np.array_equal(a.vals_bounds, b.vals_bounds):
+        return False
+    if (a.root_coord_bounds is None) != (b.root_coord_bounds is None):
+        return False
+    if a.root_coord_bounds is not None and \
+            not np.array_equal(a.root_coord_bounds, b.root_coord_bounds):
+        return False
+    return True
+
+
+def default_row_schedule(stmt: Assignment, machine: Machine) -> Schedule:
+    """The paper's Fig. 1 schedule generalized: divide the first result
+    variable over the machine's first dimension, distribute, communicate."""
+    i = stmt.result_vars[0]
+    io, ii = IndexVar(f"{i.name}o"), IndexVar(f"{i.name}i")
+    s = Schedule(stmt, machine)
+    s.divide(i, io, ii, machine.dims[0]).distribute(io)
+    s.communicate(stmt.tensors(), io)
+    return s
+
+
+def default_nnz_schedule(stmt: Assignment, machine: Machine) -> Schedule:
+    """Fuse all sparse loops and split non-zeros evenly (paper §II-D)."""
+    spa = stmt.sparse_accesses()[0]
+    s = Schedule(stmt, machine)
+    vs = list(spa.idx)
+    f = vs[0]
+    for v in vs[1:]:
+        nf = IndexVar(f"{f.name}{v.name}")
+        s.fuse(f, v, nf)
+        f = nf
+    fo, fi = IndexVar(f"{f.name}o"), IndexVar(f"{f.name}i")
+    s.pos_split(f, fo, fi, machine.dims[0]).distribute(fo)
+    s.communicate(stmt.tensors(), fo)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Leaf emission — the specialization table (expression × strategy × format)
+# ---------------------------------------------------------------------------
+
+def _emit(stmt, strat, plans, shards, jit=True) -> Tuple[str, Callable]:
+    sig = stmt.signature()
+    space = strat.space
+    key = (sig, space)
+    table = {
+        ("d1(i)=s2(i,j)*d1(j)", "universe"): _emit_spmv_rows,
+        ("d1(i)=s2(i,j)*d1(j)", "nnz"): _emit_spmv_nnz,
+        ("d2(i,j)=s2(i,k)*d2(k,j)", "universe"): _emit_spmm_rows,
+        ("d2(i,j)=s2(i,k)*d2(k,j)", "nnz"): _emit_spmm_nnz,
+        ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "universe"): _emit_spadd3_rows,
+        ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "nnz"): _emit_sddmm_nnz,
+        ("s2(i,j)=s3(i,j,k)*d1(k)", "universe"): _emit_spttv_rows,
+        ("s2(i,j)=s3(i,j,k)*d1(k)", "nnz"): _emit_spttv_nnz,
+        ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "universe"): _emit_spmttkrp_rows,
+        ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "nnz"): _emit_spmttkrp_nnz,
+    }
+    emitter = table.get(key)
+    if emitter is None:
+        emitter = _emit_generic_fallback
+        name = f"generic[{sig}|{space}]"
+    else:
+        name = emitter.__name__.replace("_emit_", "")
+    runner = emitter(stmt, strat, plans, shards, jit=jit)
+    return name, runner
+
+
+def _jit(fn, jit):
+    return jax.jit(fn) if jit else fn
+
+
+def _emit_spmv_rows(stmt, strat, plans, shards, jit=True):
+    B = shards[stmt.rhs.accesses()[0].tensor.name]
+    c = shards[stmt.rhs.accesses()[1].tensor.name]
+    n = stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    cv = c.arrays["vals"]
+
+    def fn(pos, crd, vals, cvec, row_start, row_count):
+        blocks = jax.vmap(K.leaf_spmv_rows, in_axes=(0, 0, 0, None))(
+            pos, crd, vals, cvec)
+        return _scatter_rows((n,), blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["vals"], cv,
+                                a["row_start"], a["row_count"]))
+
+
+def _emit_spmv_nnz(stmt, strat, plans, shards, jit=True):
+    B = shards[stmt.rhs.accesses()[0].tensor.name]
+    c = shards[stmt.rhs.accesses()[1].tensor.name]
+    n = stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    max_rows = B.meta["max_rows"]
+    cv = c.arrays["vals"]
+
+    def fn(rows, cols, vals, cvec, row_start, row_count):
+        rl = jnp.clip(rows - row_start[:, None], 0, max_rows - 1)
+        blocks = jax.vmap(K.leaf_spmv_nnz, in_axes=(0, 0, 0, None, None))(
+            rl, cols, vals, cvec, max_rows)
+        return _scatter_rows((n,), blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["dim0"], a["dim1"], a["vals"], cv,
+                                a["row_start"], a["row_count"]))
+
+
+def _emit_spmm_rows(stmt, strat, plans, shards, jit=True):
+    Bacc, Cacc = stmt.rhs.accesses()
+    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    Cv = C.arrays["vals"]
+
+    def fn(pos, crd, vals, Cmat, row_start, row_count):
+        blocks = jax.vmap(K.leaf_spmm_rows, in_axes=(0, 0, 0, None))(
+            pos, crd, vals, Cmat)
+        return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["vals"], Cv,
+                                a["row_start"], a["row_count"]))
+
+
+def _emit_spmm_nnz(stmt, strat, plans, shards, jit=True):
+    Bacc, Cacc = stmt.rhs.accesses()
+    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    max_rows = B.meta["max_rows"]
+    Cv = C.arrays["vals"]
+
+    def fn(rows, cols, vals, Cmat, row_start, row_count):
+        rl = jnp.clip(rows - row_start[:, None], 0, max_rows - 1)
+        blocks = jax.vmap(K.leaf_spmm_nnz, in_axes=(0, 0, 0, None, None))(
+            rl, cols, vals, Cmat, max_rows)
+        return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["dim0"], a["dim1"], a["vals"], Cv,
+                                a["row_start"], a["row_count"]))
+
+
+def _emit_spadd3_rows(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    Bs = [shards[acc.tensor.name] for acc in accs]
+    n_rows, n_cols = stmt.lhs.tensor.shape
+
+    def fn(args):
+        (p1, c1, v1), (p2, c2, v2), (p3, c3, v3), rs, rc = args
+        leaf = partial(K.leaf_spadd3_rows, n_cols=n_cols)
+        return jax.vmap(leaf)(p1, c1, v1, p2, c2, v2, p3, c3, v3)
+
+    f = _jit(fn, jit)
+
+    def run():
+        args = tuple(
+            (S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"]) for S in Bs
+        ) + (Bs[0].arrays["row_start"], Bs[0].arrays["row_count"])
+        rows, cols, vals, counts = (np.asarray(x) for x in f(args))
+        # global assembly: offset shard-local rows by row_start
+        out_rows, out_cols, out_vals = [], [], []
+        rs = np.asarray(Bs[0].arrays["row_start"])
+        for p in range(rows.shape[0]):
+            k = int(counts[p])
+            out_rows.append(rows[p, :k] + rs[p])
+            out_cols.append(cols[p, :k])
+            out_vals.append(vals[p, :k])
+        coords = np.stack([np.concatenate(out_rows), np.concatenate(out_cols)], 1)
+        return Tensor.from_coo(stmt.lhs.tensor.name, (n_rows, n_cols),
+                               coords, np.concatenate(out_vals),
+                               fmt.CSR(), dedupe=True)
+
+    return run
+
+
+def _emit_sddmm_nnz(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    a = B.arrays
+    Bt = accs[0].tensor
+    Cv, Dv = C.arrays["vals"], D.arrays["vals"]
+    vb = plans[Bt.name].vals_bounds
+    total_nnz = Bt.nnz
+    nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
+
+    def fn(rows, cols, vals, Cm, Dm, counts):
+        out = jax.vmap(K.leaf_sddmm_nnz, in_axes=(0, 0, 0, None, None))(
+            rows, cols, vals, Cm, Dm)
+        return _scatter_vals(total_nnz, out, nnz_start, counts)
+
+    f = _jit(fn, jit)
+
+    def run():
+        new_vals = np.asarray(f(a["dim0"], a["dim1"], a["vals"], Cv, Dv,
+                                a["nnz_count"]))
+        out = stmt.lhs.tensor
+        return Tensor(out.name, Bt.shape, Bt.format, Bt.levels, new_vals,
+                      Bt.dtype)
+
+    return run
+
+
+def _emit_spttv_rows(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    c = shards[accs[1].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    cv = c.arrays["vals"]
+    # output pattern = B's (i,j) level; vals live at level-1 positions
+    ij_bounds = plans[Bt.name].levels[1].pos_bounds
+    total_ij = Bt.levels[1].nnz
+    ij_start = jnp.asarray(ij_bounds[:, 0].astype(np.int32))
+    ij_count = jnp.asarray((ij_bounds[:, 1] - ij_bounds[:, 0]).astype(np.int32))
+
+    def fn(pos1, crd1, pos2, crd2, vals, cvec):
+        out = jax.vmap(K.leaf_spttv_rows, in_axes=(0, 0, 0, 0, 0, None))(
+            pos1, crd1, pos2, crd2, vals, cvec)
+        return _scatter_vals(total_ij, out, ij_start, ij_count)
+
+    f = _jit(fn, jit)
+
+    def run():
+        new_vals = np.asarray(f(a["pos1"], a["crd1"], a["pos2"], a["crd2"],
+                                a["vals"], cv))
+        # output tensor: (i,j) matrix with B's ij pattern (CSR)
+        import copy
+        lv = [copy.copy(Bt.levels[0]), copy.copy(Bt.levels[1])]
+        return Tensor(stmt.lhs.tensor.name, Bt.shape[:2], fmt.CSR(), lv,
+                      new_vals, Bt.dtype)
+
+    return run
+
+
+def _emit_spttv_nnz(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    c = shards[accs[1].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    cv = c.arrays["vals"]
+    # leaf computes per-nnz products; (i,j) assembly happens on host (the
+    # result pattern is B's ij level; duplicates merge in from_coo)
+    def fn(dk, vals, cvec):
+        return vals * jnp.take(cvec, dk, axis=0)
+
+    f = _jit(fn, jit)
+
+    def run():
+        prod = np.asarray(f(a["dim2"], a["vals"], cv)).ravel()
+        di = np.asarray(a["dim0"]).ravel().astype(np.int64)
+        dj = np.asarray(a["dim1"]).ravel().astype(np.int64)
+        counts = np.asarray(a["nnz_count"])
+        mask = np.zeros(prod.shape[0], bool)
+        mn = a["dim0"].shape[1]
+        for p in range(counts.shape[0]):
+            mask[p * mn: p * mn + counts[p]] = True
+        coords = np.stack([di[mask], dj[mask]], 1)
+        return Tensor.from_coo(stmt.lhs.tensor.name, Bt.shape[:2], coords,
+                               prod[mask], fmt.CSR(), dedupe=True)
+
+    return run
+
+
+def _emit_spmttkrp_rows(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    Cv, Dv = C.arrays["vals"], D.arrays["vals"]
+
+    def fn(pos1, crd1, pos2, crd2, vals, Cm, Dm, row_start, row_count):
+        blocks = jax.vmap(
+            K.leaf_spmttkrp_rows, in_axes=(0, 0, 0, 0, 0, None, None))(
+            pos1, crd1, pos2, crd2, vals, Cm, Dm)
+        return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["pos2"], a["crd2"],
+                                a["vals"], Cv, Dv, a["row_start"],
+                                a["row_count"]))
+
+
+def _emit_spmttkrp_nnz(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    max_rows = B.meta["max_rows"]
+    Cv, Dv = C.arrays["vals"], D.arrays["vals"]
+
+    def fn(di, dj, dk, vals, Cm, Dm, row_start, row_count):
+        rl = jnp.clip(di - row_start[:, None], 0, max_rows - 1)
+        blocks = jax.vmap(
+            K.leaf_spmttkrp_nnz, in_axes=(0, 0, 0, 0, None, None, None))(
+            rl, dj, dk, vals, Cm, Dm, max_rows)
+        return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["dim0"], a["dim1"], a["dim2"], a["vals"],
+                                Cv, Dv, a["row_start"], a["row_count"]))
+
+
+def _emit_generic_fallback(stmt, strat, plans, shards, jit=True):
+    """Correctness fallback for arbitrary TIN: densify and einsum.
+
+    Kept for generality (the paper supports *all* of tensor algebra); not a
+    performance path and flagged as such by leaf_name."""
+    del strat, plans, shards
+
+    def run():
+        from .interp import interpret
+        return interpret(stmt)
+
+    return run

@@ -1,0 +1,509 @@
+"""Dependent partitioning for sparse coordinate trees (paper §III-A, §IV).
+
+This module is the TPU/XLA adaptation of Legion's dependent partitioning:
+instead of runtime colorings of dynamically-sized regions, we compute — at
+*plan time*, on host — per-color ``(lo, hi)`` interval bounds for every level
+of every tensor's coordinate tree, then *materialize* statically-shaped,
+padded per-shard arrays that `jax.shard_map` can consume.
+
+The level functions mirror paper Table I exactly:
+
+- ``partition_by_bounds``        — Dense init (universe or nnz split)
+- ``partition_by_value_ranges``  — Compressed universe init (bucket crd)
+- ``image(pos, P_pos)``          — Compressed ``partitionFromParent``
+- ``preimage(pos, P_crd)``       — Compressed ``partitionFromChild``
+
+All partitions here are *interval* partitions (each color owns a contiguous
+range). This covers every schedule in the paper's evaluation; arbitrary
+colorings degrade to replication (communication-safe over-approximation),
+which is Legion's coherence story made explicit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import formats as fmt
+from .tensor import Tensor, INT
+
+Bounds = np.ndarray  # (P, 2) int64, [lo, hi) per color
+
+
+# ---------------------------------------------------------------------------
+# Initial level partitions (paper: init/create/finalize *Partition entries)
+# ---------------------------------------------------------------------------
+
+def partition_by_bounds(n: int, pieces: int) -> Bounds:
+    """Equal split of ``[0, n)`` into ``pieces`` colors (universe partition).
+
+    Matches the paper's generated code: ``iLo = io * (dim / pieces)`` with
+    ceil-div chunks so all elements are covered.
+    """
+    chunk = -(-n // pieces) if pieces else n
+    lo = np.minimum(np.arange(pieces, dtype=np.int64) * chunk, n)
+    hi = np.minimum(lo + chunk, n)
+    return np.stack([lo, hi], axis=1)
+
+
+def partition_nonzeros(nnz: int, pieces: int,
+                       weights: Optional[np.ndarray] = None) -> Bounds:
+    """Split of the position space ``[0, nnz)`` — the tilde operator.
+
+    ``weights`` (pieces,) generalizes the equal split to heterogeneous
+    shard speeds: shard p receives ~weights[p]/Σw of the non-zeros. This is
+    the straggler-mitigation path (runtime/fault.StragglerMitigator emits
+    the weights; re-lowering with them is the re-plan)."""
+    if weights is None:
+        return partition_by_bounds(nnz, pieces)
+    w = np.asarray(weights, dtype=np.float64)
+    assert w.shape == (pieces,) and (w > 0).all()
+    ends = np.floor(np.cumsum(w / w.sum()) * nnz).astype(np.int64)
+    ends[-1] = nnz
+    starts = np.concatenate([[0], ends[:-1]])
+    return np.stack([starts, ends], axis=1)
+
+
+def partition_by_value_ranges(crd: np.ndarray, value_bounds: Bounds) -> Bounds:
+    """Universe partition of a Compressed level: bucket sorted ``crd`` values
+    into coordinate ranges (paper Table I, Compressed/universe).
+
+    Requires globally sorted ``crd`` (true for root compressed levels such as
+    a sparse vector or the fused level of COO).
+    """
+    lo = np.searchsorted(crd, value_bounds[:, 0], side="left")
+    hi = np.searchsorted(crd, value_bounds[:, 1], side="left")
+    return np.stack([lo, hi], axis=1).astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Dependent partitioning (paper §III-A; Table I derived partitions)
+# ---------------------------------------------------------------------------
+
+def image(pos: np.ndarray, parent_bounds: Bounds) -> Bounds:
+    """``image(S, P_S, D)``: color crd positions pointed to by parent entries.
+
+    For an interval partition of parent entries ``[lo, hi)``, the pointed-to
+    crd positions are exactly ``[pos[lo], pos[hi])`` because ``pos`` is
+    monotone — the contiguity that makes static materialization possible.
+    """
+    pos = np.asarray(pos, dtype=np.int64)
+    return np.stack(
+        [pos[parent_bounds[:, 0]], pos[parent_bounds[:, 1]]], axis=1
+    )
+
+
+def preimage(pos: np.ndarray, child_bounds: Bounds) -> Bounds:
+    """``preimage(S, P_D, D)``: color parent entries whose pos-range
+    intersects each child (position-space) interval ``[plo, phi)``.
+
+    Returns possibly *overlapping* intervals — a parent entry straddling a
+    boundary belongs to both colors (paper Fig. 6b). Empty child intervals
+    produce empty parent intervals.
+    """
+    pos = np.asarray(pos, dtype=np.int64)
+    plo, phi = child_bounds[:, 0], child_bounds[:, 1]
+    # first parent whose end > plo ; first parent whose start >= phi
+    lo = np.searchsorted(pos[1:], plo, side="right")
+    hi = np.searchsorted(pos[:-1], phi, side="left")
+    hi = np.maximum(hi, lo)  # empty intervals stay empty
+    empty = plo >= phi
+    lo = np.where(empty, 0, lo)
+    hi = np.where(empty, 0, hi)
+    return np.stack([lo, hi], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Full coordinate-tree partitions (paper §IV-A intuition + Fig. 9a)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LevelPartition:
+    """Interval bounds for one level.
+
+    ``coord_bounds``: bounds in the level's *coordinate* space (only
+    meaningful for Dense levels / the root); ``pos_bounds``: bounds in the
+    level's *position* space (crd/vals indices) for compressed levels.
+    """
+
+    coord_bounds: Optional[Bounds] = None
+    pos_bounds: Optional[Bounds] = None
+    replicated: bool = False
+
+
+@dataclasses.dataclass
+class TensorPartition:
+    """A full coordinate-tree partition of one tensor (or replication)."""
+
+    tensor: Tensor
+    pieces: int
+    levels: List[LevelPartition]
+    replicated: bool = False
+    # For nnz-partitions: bounds of the values/position space at the leaf.
+    vals_bounds: Optional[Bounds] = None
+    # Bounds over the *root coordinate space* (output-row ownership etc.).
+    root_coord_bounds: Optional[Bounds] = None
+    overlapping_root: bool = False  # preimage-derived roots may overlap
+
+    def max_counts(self) -> Dict[str, int]:
+        out = {}
+        if self.vals_bounds is not None:
+            out["vals"] = int((self.vals_bounds[:, 1] - self.vals_bounds[:, 0]).max())
+        if self.root_coord_bounds is not None:
+            out["rows"] = int(
+                (self.root_coord_bounds[:, 1] - self.root_coord_bounds[:, 0]).max()
+            )
+        return out
+
+    def imbalance(self) -> float:
+        """max/mean − 1 of per-color vals counts — the paper's load-balance
+        story (§II-D): universe partitions of skewed tensors → large value;
+        non-zero partitions → ~0."""
+        if self.vals_bounds is None:
+            return 0.0
+        counts = (self.vals_bounds[:, 1] - self.vals_bounds[:, 0]).astype(np.float64)
+        if counts.mean() == 0:
+            return 0.0
+        return float(counts.max() / counts.mean() - 1.0)
+
+
+def _dense_prefix(tensor: Tensor) -> int:
+    return sum(1 for lf in tensor.format.levels if not lf.compressed)
+
+
+def partition_tensor_rows(tensor: Tensor, row_bounds: Bounds) -> TensorPartition:
+    """Universe partition of the ROOT level by coordinate intervals, derived
+    downward through the whole tree (paper: ``partitionFromParent`` chain).
+
+    Works for any supported format (leading dense prefix + compressed
+    suffix). Rows = coordinates of storage level 0.
+    """
+    pieces = row_bounds.shape[0]
+    levels: List[LevelPartition] = []
+    order = tensor.order
+    n_dense = _dense_prefix(tensor)
+
+    # Dense prefix: coordinate bounds multiply down (row-major position math).
+    levels.append(LevelPartition(coord_bounds=row_bounds.copy()))
+    pos_bounds = row_bounds.astype(np.int64)
+    for l in range(1, n_dense):
+        size = tensor.levels[l].size
+        pos_bounds = pos_bounds * size
+        levels.append(LevelPartition(coord_bounds=None, pos_bounds=pos_bounds.copy()))
+    # Compressed suffix: image through each pos array.
+    for l in range(n_dense, order):
+        ld = tensor.levels[l]
+        if ld.kind.singleton:
+            levels.append(LevelPartition(pos_bounds=pos_bounds.copy()))
+            continue
+        pos_bounds = image(ld.pos, pos_bounds)
+        levels.append(LevelPartition(pos_bounds=pos_bounds.copy()))
+    if tensor.format.is_all_dense:
+        # leaf position space = linearized dense positions
+        for l in range(n_dense, order):  # pragma: no cover (n_dense == order)
+            pass
+        vb = row_bounds.astype(np.int64)
+        for l in range(1, order):
+            vb = vb * tensor.levels[l].size
+        vals_bounds = vb
+    else:
+        vals_bounds = pos_bounds
+    return TensorPartition(
+        tensor=tensor,
+        pieces=pieces,
+        levels=levels,
+        vals_bounds=vals_bounds,
+        root_coord_bounds=row_bounds.copy(),
+        overlapping_root=False,
+    )
+
+
+def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
+                              weights: Optional[np.ndarray] = None,
+                              fused_levels: Optional[int] = None,
+                              ) -> TensorPartition:
+    """Non-zero partition of the (fully or partially) fused coordinate tree.
+
+    Default: split the leaf position space (vals) evenly, then derive
+    upward with preimage (paper: coordinate fusion `xy→f` + tilde split,
+    Fig. 5c / Fig. 8b). ``weights`` gives a heterogeneous split (straggler
+    re-plan). ``fused_levels`` < order realizes PARTIAL fusion (paper
+    Fig. 5's "non-zero tubes": T_xyz with xy→f splits the level-2 position
+    space evenly, then derives the leaf via image and the root via
+    preimage)."""
+    if tensor.format.is_all_dense:
+        raise ValueError("non-zero partition of a dense tensor — use rows")
+    order = tensor.order
+    n_dense = _dense_prefix(tensor)
+    split_level = order - 1 if fused_levels is None else fused_levels - 1
+    if not tensor.levels[split_level].kind.compressed:
+        raise ValueError("partial fusion must end at a compressed level")
+    n_at = (tensor.levels[split_level].nnz
+            if tensor.levels[split_level].crd is not None else tensor.nnz)
+    init_bounds = partition_nonzeros(n_at, pieces, weights)
+    levels: List[LevelPartition] = [LevelPartition() for _ in range(order)]
+    # derive DOWNWARD from the split level to the leaf (image chain)
+    down = init_bounds.astype(np.int64)
+    levels[split_level] = LevelPartition(pos_bounds=down.copy())
+    for l in range(split_level + 1, order):
+        ld = tensor.levels[l]
+        if ld.kind.singleton:
+            levels[l] = LevelPartition(pos_bounds=down.copy())
+            continue
+        down = image(ld.pos, down)
+        levels[l] = LevelPartition(pos_bounds=down.copy())
+    vals_bounds = down
+    # walk upward through compressed levels (preimage chain)
+    pos_bounds = init_bounds.astype(np.int64)
+    for l in range(split_level, n_dense - 1, -1):
+        ld = tensor.levels[l]
+        if levels[l].pos_bounds is None:
+            levels[l] = LevelPartition(pos_bounds=pos_bounds.copy())
+        if ld.kind.singleton:
+            continue  # position space shared with parent
+        pos_bounds = preimage(ld.pos, pos_bounds)
+    # dense prefix: divide position bounds back into coordinates
+    root_bounds = pos_bounds
+    for l in range(n_dense - 1, 0, -1):
+        size = tensor.levels[l].size
+        lo = root_bounds[:, 0] // size
+        hi = -(-root_bounds[:, 1] // size)
+        root_bounds = np.stack([lo, hi], axis=1)
+        levels[l] = LevelPartition(pos_bounds=root_bounds.copy())
+    if n_dense:
+        levels[0] = LevelPartition(coord_bounds=root_bounds.copy())
+    else:
+        # root is compressed; coordinates owned = crd[slice] range
+        levels[0].pos_bounds = (
+            levels[0].pos_bounds if levels[0].pos_bounds is not None else pos_bounds
+        )
+        crd0 = tensor.levels[0].crd
+        pb = levels[0].pos_bounds
+        lo = np.where(pb[:, 0] < pb[:, 1], crd0[np.minimum(pb[:, 0], len(crd0) - 1)], 0)
+        hi = np.where(pb[:, 0] < pb[:, 1], crd0[np.maximum(pb[:, 1] - 1, 0)] + 1, 0)
+        root_bounds = np.stack([lo, hi], axis=1).astype(np.int64)
+    return TensorPartition(
+        tensor=tensor,
+        pieces=pieces,
+        levels=levels,
+        vals_bounds=vals_bounds,
+        root_coord_bounds=root_bounds.astype(np.int64),
+        overlapping_root=True,
+    )
+
+
+def replicate_tensor(tensor: Tensor, pieces: int) -> TensorPartition:
+    """Every color sees the whole tensor (TDN replication, paper Fig. 1
+    ``ReplDense``)."""
+    order = tensor.order
+    return TensorPartition(
+        tensor=tensor,
+        pieces=pieces,
+        levels=[LevelPartition(replicated=True) for _ in range(order)],
+        replicated=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Materialization: partitions -> stacked, padded, statically-shaped shards
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardedTensor:
+    """Statically-shaped stacked shards, ready for shard_map.
+
+    ``kind`` selects the leaf-kernel calling convention:
+      - ``dense_rows``: dense tensor split by leading-dim intervals.
+      - ``csr_rows``  : CSR/CSF-style shard per color (local pos rebased).
+      - ``coo_nnz``   : equal-nnz COO shard (rows/cols/vals + row offsets).
+      - ``replicated``: single copy broadcast to every color.
+    Arrays all have leading dim = pieces (except replicated).
+    """
+
+    kind: str
+    pieces: int
+    arrays: Dict[str, np.ndarray]
+    meta: Dict[str, int]
+    partition: TensorPartition
+
+    def padding_waste(self) -> float:
+        """Fraction of materialized value slots that are padding."""
+        if self.kind in ("replicated",):
+            return 0.0
+        vb = self.partition.vals_bounds
+        if vb is None or "vals" not in self.arrays:
+            return 0.0
+        real = float((vb[:, 1] - vb[:, 0]).sum())
+        alloc = float(np.prod(self.arrays["vals"].shape))
+        return 0.0 if alloc == 0 else 1.0 - real / alloc
+
+
+def _pad_to(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
+    pad = n - arr.shape[0]
+    if pad <= 0:
+        return arr[:n]
+    return np.concatenate([arr, np.full((pad,) + arr.shape[1:], fill, dtype=arr.dtype)])
+
+
+def materialize_dense_rows(tensor: Tensor, bounds: Bounds,
+                           pad_rows: Optional[int] = None) -> ShardedTensor:
+    dense = tensor.to_dense()
+    pieces = bounds.shape[0]
+    counts = bounds[:, 1] - bounds[:, 0]
+    max_rows = int(pad_rows if pad_rows is not None else counts.max())
+    shards = np.zeros((pieces, max_rows) + dense.shape[1:], dtype=dense.dtype)
+    for p in range(pieces):
+        lo, hi = int(bounds[p, 0]), int(bounds[p, 1])
+        shards[p, : hi - lo] = dense[lo:hi]
+    tp = TensorPartition(tensor, pieces, [LevelPartition(coord_bounds=bounds)],
+                         root_coord_bounds=bounds,
+                         vals_bounds=None)
+    return ShardedTensor(
+        kind="dense_rows",
+        pieces=pieces,
+        arrays={
+            "vals": shards,
+            "row_start": bounds[:, 0].astype(INT),
+            "row_count": counts.astype(INT),
+        },
+        meta={"max_rows": max_rows, "n_rows": dense.shape[0]},
+        partition=tp,
+    )
+
+
+def materialize_csr_rows(tensor: Tensor, part: TensorPartition) -> ShardedTensor:
+    """CSR / CSF shard per color from a row-interval partition.
+
+    Local ``pos`` arrays are rebased to the shard's crd window and padded so
+    out-of-range rows are empty. Multi-level (CSF) shards keep one pos/crd
+    pair per compressed level.
+    """
+    pieces = part.pieces
+    rb = part.root_coord_bounds
+    row_counts = rb[:, 1] - rb[:, 0]
+    max_rows = int(row_counts.max())
+    n_dense = _dense_prefix(tensor)
+    order = tensor.order
+
+    arrays: Dict[str, np.ndarray] = {
+        "row_start": rb[:, 0].astype(INT),
+        "row_count": row_counts.astype(INT),
+    }
+    # inner dense sizes multiply row interval into position interval
+    inner_dense = 1
+    for l in range(1, n_dense):
+        inner_dense *= tensor.levels[l].size
+
+    # per compressed level: slice pos (rebased), crd
+    for l in range(n_dense, order):
+        ld = tensor.levels[l]
+        lp = part.levels[l]
+        if ld.kind.singleton:
+            continue  # handled with the vals/pos space of parent
+        parent_bounds = (
+            rb.astype(np.int64) * inner_dense if l == n_dense
+            else part.levels[l - 1].pos_bounds
+        )
+        pb = lp.pos_bounds
+        max_parent = int((parent_bounds[:, 1] - parent_bounds[:, 0]).max())
+        max_nnz_l = int((pb[:, 1] - pb[:, 0]).max())
+        pos_shards = np.zeros((pieces, max_parent + 1), dtype=INT)
+        crd_shards = np.zeros((pieces, max_nnz_l), dtype=INT)
+        for p in range(pieces):
+            plo, phi = int(parent_bounds[p, 0]), int(parent_bounds[p, 1])
+            clo, chi = int(pb[p, 0]), int(pb[p, 1])
+            local_pos = ld.pos[plo: phi + 1].astype(np.int64) - clo
+            local_pos = _pad_to(local_pos.astype(INT), max_parent + 1,
+                                fill=int(local_pos[-1]) if local_pos.size else 0)
+            pos_shards[p] = local_pos
+            crd_shards[p, : chi - clo] = ld.crd[clo:chi]
+        arrays[f"pos{l}"] = pos_shards
+        arrays[f"crd{l}"] = crd_shards
+        # singleton children share this position space; emit their crd too
+        for ls in range(l + 1, order):
+            if not tensor.levels[ls].kind.singleton:
+                break
+            s_crd = np.zeros((pieces, max_nnz_l), dtype=INT)
+            for p in range(pieces):
+                clo, chi = int(pb[p, 0]), int(pb[p, 1])
+                s_crd[p, : chi - clo] = tensor.levels[ls].crd[clo:chi]
+            arrays[f"crd{ls}"] = s_crd
+
+    vb = part.vals_bounds
+    max_nnz = int((vb[:, 1] - vb[:, 0]).max())
+    vals_shards = np.zeros((pieces, max_nnz), dtype=tensor.vals.dtype)
+    nnz_counts = (vb[:, 1] - vb[:, 0]).astype(INT)
+    for p in range(pieces):
+        lo, hi = int(vb[p, 0]), int(vb[p, 1])
+        vals_shards[p, : hi - lo] = tensor.vals[lo:hi]
+    arrays["vals"] = vals_shards
+    arrays["nnz_count"] = nnz_counts
+    return ShardedTensor(
+        kind="csr_rows",
+        pieces=pieces,
+        arrays=arrays,
+        meta={"max_rows": max_rows, "max_nnz": max_nnz,
+              "n_rows": tensor.shape[tensor.format.dim_of_level(0)]},
+        partition=part,
+    )
+
+
+def materialize_coo_nnz(tensor: Tensor, part: TensorPartition) -> ShardedTensor:
+    """Equal-nnz COO shards from a non-zero (fused) partition.
+
+    Emits per-color coordinate columns (dimension order) + vals, padded to
+    the uniform chunk size, plus the preimage-derived root row interval so
+    leaves can compute into a local output slice that is later reduced
+    (paper §II-D: "perfect load balance at the cost of communication to
+    reduce into the output").
+    """
+    pieces = part.pieces
+    coords = tensor.coords()  # (nnz, order), dimension order, storage-sorted
+    vb = part.vals_bounds
+    counts = vb[:, 1] - vb[:, 0]
+    max_nnz = int(counts.max())
+    arrays: Dict[str, np.ndarray] = {}
+    for d in range(tensor.order):
+        col = np.zeros((pieces, max_nnz), dtype=INT)
+        for p in range(pieces):
+            lo, hi = int(vb[p, 0]), int(vb[p, 1])
+            col[p, : hi - lo] = coords[lo:hi, d]
+        arrays[f"dim{d}"] = col
+    vals = np.zeros((pieces, max_nnz), dtype=tensor.vals.dtype)
+    for p in range(pieces):
+        lo, hi = int(vb[p, 0]), int(vb[p, 1])
+        vals[p, : hi - lo] = tensor.vals[lo:hi]
+    arrays["vals"] = vals
+    arrays["nnz_count"] = counts.astype(INT)
+    rb = part.root_coord_bounds
+    arrays["row_start"] = rb[:, 0].astype(INT)
+    arrays["row_count"] = (rb[:, 1] - rb[:, 0]).astype(INT)
+    return ShardedTensor(
+        kind="coo_nnz",
+        pieces=pieces,
+        arrays=arrays,
+        meta={"max_nnz": max_nnz,
+              "max_rows": int((rb[:, 1] - rb[:, 0]).max()),
+              "n_rows": tensor.shape[tensor.format.dim_of_level(0)]},
+        partition=part,
+    )
+
+
+def materialize_replicated(tensor: Tensor, pieces: int) -> ShardedTensor:
+    if tensor.format.is_all_dense:
+        arrays = {"vals": tensor.to_dense()}
+    else:
+        arrays = {"vals": tensor.vals}
+        for l, ld in enumerate(tensor.levels):
+            if ld.pos is not None:
+                arrays[f"pos{l}"] = ld.pos
+            if ld.crd is not None:
+                arrays[f"crd{l}"] = ld.crd
+    return ShardedTensor(
+        kind="replicated",
+        pieces=pieces,
+        arrays=arrays,
+        meta={},
+        partition=replicate_tensor(tensor, pieces),
+    )

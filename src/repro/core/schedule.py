@@ -1,0 +1,178 @@
+"""Scheduling language (paper §II-C).
+
+Transformations: ``divide``/``split`` (universe or non-zero strip-mining),
+``fuse`` (coordinate/loop fusion), ``distribute`` (map a loop onto machine
+dimensions), ``communicate`` (placement of data movement), ``parallelize``
+(leaf parallelism), ``reorder``, ``precompute``.
+
+A `Schedule` records the transformation list applied to a TIN statement and
+canonicalizes it into a `DistStrategy` that the lowering engine (lower.py)
+consumes — mirroring how SpDISTAL's scheduling commands drive the Fig. 9a
+code-generation algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .tdn import Machine, MachineDim
+from .tin import Assignment, IndexVar
+
+
+class ParallelUnit:
+    """Leaf-level parallel hardware (paper: CPUThread, GPUBlock, ...).
+
+    On TPU the leaf unit is the vector lane / MXU tile driven by a Pallas
+    grid — ``TPUGrid`` — or XLA's auto-vectorization — ``VectorLanes``.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self) -> str:
+        return self.name
+
+
+CPUThread = ParallelUnit("CPUThread")
+TPUGrid = ParallelUnit("TPUGrid")
+VectorLanes = ParallelUnit("VectorLanes")
+
+
+@dataclasses.dataclass
+class ScheduleOp:
+    kind: str
+    args: tuple
+
+
+@dataclasses.dataclass
+class DistStrategy:
+    """Canonical distribution strategy extracted from a schedule.
+
+    ``space`` is 'universe' (coordinate-value distributed loop → universe
+    partitions) or 'nnz' (coordinate-position loop → non-zero partitions),
+    paper §IV-C. ``var`` is the pre-divide loop variable being distributed
+    (the fused variable for nnz strategies)."""
+
+    space: str                      # 'universe' | 'nnz'
+    var: IndexVar                   # distributed index variable (outer)
+    machine_dims: Tuple[MachineDim, ...]
+    fused_vars: Optional[Tuple[IndexVar, ...]] = None   # for nnz via fusion
+    communicate_at: Dict[str, str] = dataclasses.field(default_factory=dict)
+    leaf_unit: Optional[ParallelUnit] = None
+    # Tensors the schedule pins to a matching data distribution (C4: when
+    # data distribution ≠ computation distribution, lowering inserts a
+    # redistribution collective and charges its bytes).
+
+    @property
+    def pieces(self) -> int:
+        p = 1
+        for d in self.machine_dims:
+            p *= d.size
+        return p
+
+
+class Schedule:
+    """Fluent scheduling API bound to a TIN statement (paper Fig. 1)."""
+
+    def __init__(self, stmt: Assignment, machine: Machine):
+        self.stmt = stmt
+        self.machine = machine
+        self.ops: List[ScheduleOp] = []
+        # derived state
+        self._divided: Dict[str, Tuple[IndexVar, IndexVar, MachineDim, str]] = {}
+        self._fused: Dict[str, Tuple[IndexVar, ...]] = {}
+        self._distributed: List[IndexVar] = []
+        self._communicate: Dict[str, str] = {}
+        self._leaf_unit: Optional[ParallelUnit] = None
+        self._reorder: Optional[Tuple[IndexVar, ...]] = None
+
+    # -- transformations ----------------------------------------------------
+    def fuse(self, i: IndexVar, j: IndexVar, f: IndexVar) -> "Schedule":
+        """Collapse loops i, j into f (coordinate fusion when i, j index a
+        sparse tensor's levels — enables non-zero divides)."""
+        prior = self._fused.get(i.name)
+        base = prior if prior is not None else (i,)
+        self._fused[f.name] = tuple(base) + (j,)
+        self.ops.append(ScheduleOp("fuse", (i, j, f)))
+        return self
+
+    def divide(self, i: IndexVar, io: IndexVar, ii: IndexVar,
+               mdim: MachineDim, space: str = "universe") -> "Schedule":
+        """Split loop ``i`` into ``pieces`` chunks (outer ``io``).
+
+        ``space='universe'`` splits the coordinate range (paper divide);
+        ``space='nnz'`` strip-mines non-zero positions (Senanayake et al.'s
+        pos-split variant), used after ``fuse`` for non-zero distribution."""
+        if space not in ("universe", "nnz"):
+            raise ValueError(space)
+        self._divided[io.name] = (i, ii, mdim, space)
+        self.ops.append(ScheduleOp("divide", (i, io, ii, mdim, space)))
+        return self
+
+    # paper spells the nnz variant `split`/`pos`; alias for readability
+    def pos_split(self, i: IndexVar, io: IndexVar, ii: IndexVar,
+                  mdim: MachineDim) -> "Schedule":
+        return self.divide(i, io, ii, mdim, space="nnz")
+
+    def distribute(self, *vars: IndexVar) -> "Schedule":
+        for v in vars:
+            if v.name not in self._divided:
+                raise ValueError(
+                    f"distribute({v}): variable must be the outer result of "
+                    "a divide/pos_split")
+            self._distributed.append(v)
+        self.ops.append(ScheduleOp("distribute", vars))
+        return self
+
+    def communicate(self, tensors: Sequence, at: IndexVar) -> "Schedule":
+        for t in tensors:
+            self._communicate[t.name] = at.name
+        self.ops.append(ScheduleOp("communicate", (tuple(tensors), at)))
+        return self
+
+    def parallelize(self, v: IndexVar, unit: ParallelUnit) -> "Schedule":
+        self._leaf_unit = unit
+        self.ops.append(ScheduleOp("parallelize", (v, unit)))
+        return self
+
+    def reorder(self, *vars: IndexVar) -> "Schedule":
+        self._reorder = tuple(vars)
+        self.ops.append(ScheduleOp("reorder", vars))
+        return self
+
+    def precompute(self, expr, i: IndexVar, iw: IndexVar) -> "Schedule":
+        self.ops.append(ScheduleOp("precompute", (expr, i, iw)))
+        return self
+
+    # -- canonicalization ---------------------------------------------------
+    def strategy(self) -> DistStrategy:
+        if not self._distributed:
+            raise ValueError("schedule has no distribute() — nothing to lower")
+        mdims: List[MachineDim] = []
+        spaces = set()
+        outer_vars = []
+        for io in self._distributed:
+            i, ii, mdim, space = self._divided[io.name]
+            mdims.append(mdim)
+            spaces.add(space)
+            outer_vars.append(i)
+        if len(spaces) != 1:
+            raise NotImplementedError("mixed universe/nnz distribution")
+        space = spaces.pop()
+        var = outer_vars[0]
+        fused = self._fused.get(var.name)
+        if space == "nnz" and fused is None and len(self._fused) == 0:
+            # nnz split directly on a single sparse loop variable
+            fused = (var,)
+        return DistStrategy(
+            space=space,
+            var=var,
+            machine_dims=tuple(mdims),
+            fused_vars=fused,
+            communicate_at=dict(self._communicate),
+            leaf_unit=self._leaf_unit,
+        )
+
+    def __repr__(self) -> str:
+        return "Schedule[" + "; ".join(
+            f"{op.kind}{op.args}" for op in self.ops) + "]"

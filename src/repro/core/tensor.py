@@ -1,0 +1,290 @@
+"""Sparse/dense tensor data structure — pos/crd/vals regions (paper §III).
+
+A :class:`Tensor` stores one coordinate-tree level per dimension, in
+``format.mode_ordering`` order. Supported level layouts (covers every format
+used in the paper's evaluation — CSR, CSC, DCSR, CSF, DDC, COO, dense):
+
+- a (possibly empty) *leading prefix of Dense levels*, stored implicitly;
+- followed by Compressed / Singleton levels with explicit ``pos``/``crd``.
+
+Regions (paper Fig. 7):
+  ``pos[lvl]``  int32, length = parent position count + 1, monotone. The
+                paper's (lo, hi) tuple view of entry ``i`` is
+                ``(pos[i], pos[i+1]-1)``.
+  ``crd[lvl]``  int32, length = number of stored coordinates at the level.
+  ``vals``      values at the last level's positions; for trailing dense
+                levels after the last compressed level vals is a block.
+
+Assembly is host-side numpy (this is the paper's "format conversion" /
+assembly phase); compute kernels consume the arrays as jnp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import formats as fmt
+from .formats import Format
+from .tin import Access, IndexVar
+
+INT = np.int32
+
+
+@dataclasses.dataclass
+class LevelData:
+    """Physical storage for one coordinate-tree level."""
+
+    kind: fmt.LevelFormat
+    size: int  # dimension extent (universe size of this level)
+    pos: Optional[np.ndarray] = None  # int32 (parent_count + 1,)
+    crd: Optional[np.ndarray] = None  # int32 (stored_coords,)
+
+    @property
+    def nnz(self) -> Optional[int]:
+        return None if self.crd is None else int(self.crd.shape[0])
+
+
+class Tensor:
+    """A tensor with a TACO-style per-level sparse encoding."""
+
+    def __init__(
+        self,
+        name: str,
+        shape: Sequence[int],
+        format: Format,
+        levels: List[LevelData],
+        vals: np.ndarray,
+        dtype=np.float32,
+    ):
+        self.name = name
+        self.shape = tuple(int(s) for s in shape)
+        self.format = format
+        self.levels = levels
+        self.vals = vals
+        self.dtype = dtype
+
+    # ------------------------------------------------------------------
+    # Constructors
+    # ------------------------------------------------------------------
+    @staticmethod
+    def from_dense(name: str, arr: np.ndarray, format: Optional[Format] = None,
+                   ) -> "Tensor":
+        arr = np.asarray(arr)
+        if format is None:
+            format = fmt.DenseND(arr.ndim)
+        if format.is_all_dense:
+            levels = [
+                LevelData(format.levels[l], arr.shape[format.dim_of_level(l)])
+                for l in range(arr.ndim)
+            ]
+            # store vals in storage (level) order
+            vals = np.transpose(arr, format.mode_ordering).astype(arr.dtype)
+            return Tensor(name, arr.shape, format, levels, vals, arr.dtype)
+        coords = np.argwhere(arr != 0).astype(INT)
+        vals = arr[tuple(coords.T)]
+        return Tensor.from_coo(name, arr.shape, coords, vals, format)
+
+    @staticmethod
+    def from_coo(
+        name: str,
+        shape: Sequence[int],
+        coords: np.ndarray,
+        vals: np.ndarray,
+        format: Format,
+        dedupe: bool = True,
+    ) -> "Tensor":
+        """Assemble from (nnz, order) coordinates in *dimension* order."""
+        shape = tuple(int(s) for s in shape)
+        order = len(shape)
+        coords = np.asarray(coords, dtype=np.int64).reshape(-1, order)
+        vals = np.asarray(vals)
+        if format.is_all_dense:
+            dense = np.zeros(shape, dtype=vals.dtype)
+            if coords.size:
+                np.add.at(dense, tuple(coords.T), vals)
+            return Tensor.from_dense(name, dense, format)
+
+        # Reorder columns into storage order and sort lexicographically.
+        perm = np.array(format.mode_ordering)
+        sc = coords[:, perm]
+        sizes = [shape[format.dim_of_level(l)] for l in range(order)]
+        # linearize for sort / dedupe
+        lin = np.zeros(sc.shape[0], dtype=np.int64)
+        for l in range(order):
+            lin = lin * sizes[l] + sc[:, l]
+        sort_idx = np.argsort(lin, kind="stable")
+        lin, sc, v = lin[sort_idx], sc[sort_idx], vals[sort_idx]
+        if dedupe and lin.size:
+            uniq, inv = np.unique(lin, return_inverse=True)
+            vsum = np.zeros(uniq.shape[0], dtype=v.dtype)
+            np.add.at(vsum, inv, v)
+            keep = np.searchsorted(lin, uniq)
+            sc, v = sc[keep], vsum
+
+        # Split leading dense prefix from compressed suffix.
+        n_dense = 0
+        for l, lf in enumerate(format.levels):
+            if lf.compressed:
+                break
+            n_dense += 1
+        if any(not lf.compressed for lf in format.levels[n_dense:]):
+            raise NotImplementedError(
+                f"format {format}: Dense level after a Compressed level is "
+                "not supported (not needed for any paper format)"
+            )
+
+        levels: List[LevelData] = [
+            LevelData(format.levels[l], sizes[l]) for l in range(n_dense)
+        ]
+        dense_count = int(np.prod([sizes[l] for l in range(n_dense)], dtype=np.int64)) \
+            if n_dense else 1
+
+        # linear parent key over the dense prefix for each nnz
+        parent_key = np.zeros(sc.shape[0], dtype=np.int64)
+        for l in range(n_dense):
+            parent_key = parent_key * sizes[l] + sc[:, l]
+        parent_count = dense_count
+
+        for l in range(n_dense, order):
+            lf = format.levels[l]
+            c = sc[:, l]
+            if lf.singleton:
+                levels.append(LevelData(lf, sizes[l], pos=None,
+                                        crd=c.astype(INT)))
+                # position space unchanged; parent_key extends per-coordinate
+                parent_key = parent_key * sizes[l] + c
+                parent_count = sc.shape[0]
+                continue
+            # Compressed: distinct (parent_key, c) pairs are exactly the rows
+            # (input already deduped + sorted), unless deeper levels follow.
+            # A Compressed level followed by Singleton levels (COO) is
+            # non-unique: it stores one coordinate per nnz position.
+            next_singleton = l + 1 < order and format.levels[l + 1].singleton
+            if l == order - 1 or next_singleton:
+                seg_key = parent_key
+                child_key = c
+                keep = np.ones(sc.shape[0], dtype=bool)
+            else:
+                full = parent_key * sizes[l] + c
+                keep = np.ones(full.shape[0], dtype=bool)
+                if full.size:
+                    keep[1:] = full[1:] != full[:-1]
+                seg_key = parent_key[keep]
+                child_key = c[keep]
+            counts = np.zeros(parent_count, dtype=np.int64)
+            if seg_key.size:
+                np.add.at(counts, seg_key, 1)
+            pos = np.zeros(parent_count + 1, dtype=INT)
+            np.cumsum(counts, out=pos[1:])
+            levels.append(LevelData(lf, sizes[l], pos=pos,
+                                    crd=child_key.astype(INT)))
+            # next level's parent positions = stored coords of this level
+            new_parent_key = np.cumsum(keep) - 1  # position index per nnz row
+            parent_key = new_parent_key
+            parent_count = int(child_key.shape[0])
+
+        return Tensor(name, shape, format, levels, v, v.dtype)
+
+    @staticmethod
+    def zeros_dense(name: str, shape: Sequence[int], dtype=np.float32,
+                    format: Optional[Format] = None) -> "Tensor":
+        return Tensor.from_dense(name, np.zeros(shape, dtype=dtype), format)
+
+    # ------------------------------------------------------------------
+    # Introspection / conversion
+    # ------------------------------------------------------------------
+    @property
+    def order(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nnz(self) -> int:
+        if self.format.is_all_dense:
+            return int(np.prod(self.shape))
+        return int(self.vals.shape[0])
+
+    def level(self, lvl: int) -> LevelData:
+        return self.levels[lvl]
+
+    def coords(self) -> np.ndarray:
+        """(nnz, order) coordinates in *dimension* order."""
+        if self.format.is_all_dense:
+            idx = np.indices(self.shape).reshape(self.order, -1).T
+            return idx.astype(INT)
+        # Walk levels, expanding positions to coordinates (storage order).
+        n_dense = sum(1 for lf in self.format.levels if not lf.compressed)
+        cols: List[np.ndarray] = []
+        # positions at current level
+        if n_dense:
+            sizes = [self.levels[l].size for l in range(n_dense)]
+            dense_count = int(np.prod(sizes))
+        else:
+            dense_count = 1
+        parent_ids = np.arange(dense_count, dtype=np.int64)
+        # expand through compressed levels
+        level_coord: List[np.ndarray] = []
+        for l in range(n_dense, self.order):
+            ld = self.levels[l]
+            if ld.kind.singleton:
+                level_coord.append(ld.crd.astype(np.int64))
+                continue
+            counts = np.diff(ld.pos.astype(np.int64))
+            parent_ids = np.repeat(parent_ids, counts)
+            # previously recorded coords share the parent position space and
+            # must be expanded to the new position space too
+            level_coord = [np.repeat(c, counts) for c in level_coord]
+            level_coord.append(ld.crd.astype(np.int64))
+        # decode dense prefix from parent_ids
+        out = np.zeros((self.nnz, self.order), dtype=np.int64)
+        rem = parent_ids
+        for l in reversed(range(n_dense)):
+            out[:, l] = rem % self.levels[l].size
+            rem = rem // self.levels[l].size
+        for j, c in enumerate(level_coord):
+            out[:, n_dense + j] = c
+        # storage order -> dimension order
+        dimcols = np.zeros_like(out)
+        for l in range(self.order):
+            dimcols[:, self.format.dim_of_level(l)] = out[:, l]
+        return dimcols.astype(INT)
+
+    def to_dense(self) -> np.ndarray:
+        if self.format.is_all_dense:
+            inv = np.argsort(self.format.mode_ordering)
+            return np.transpose(
+                self.vals.reshape([self.levels[l].size for l in range(self.order)]),
+                inv,
+            )
+        dense = np.zeros(self.shape, dtype=self.vals.dtype)
+        c = self.coords()
+        if c.size:
+            np.add.at(dense, tuple(c.T), self.vals)
+        return dense
+
+    # TIN access sugar: B(i, j)
+    def __call__(self, *idx: IndexVar) -> Access:
+        return Access(self, idx)
+
+    def __repr__(self) -> str:
+        return (f"Tensor({self.name}, shape={self.shape}, {self.format}, "
+                f"nnz={self.nnz})")
+
+
+class TensorVar:
+    """Shape/format-only stand-in used by the dry-run (no data allocated)."""
+
+    def __init__(self, name: str, shape: Sequence[int], format: Format,
+                 dtype=np.float32, nnz: Optional[int] = None):
+        self.name = name
+        self.shape = tuple(int(s) for s in shape)
+        self.format = format
+        self.dtype = dtype
+        self.nnz = nnz
+
+    def __call__(self, *idx: IndexVar) -> Access:
+        return Access(self, idx)
+
+    def __repr__(self) -> str:
+        return f"TensorVar({self.name}, shape={self.shape}, {self.format})"

@@ -1,0 +1,3 @@
+from . import pipeline, spdata
+
+__all__ = ["pipeline", "spdata"]

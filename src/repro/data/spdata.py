@@ -1,0 +1,73 @@
+"""Sparse matrix/tensor generators for benchmarks and tests.
+
+Stand-ins for the paper's SuiteSparse / FROSTT / Freebase datasets
+(Table II), matched on the structural properties that drive the paper's
+results: skewed row degrees (power-law — web graphs like arabic-2005),
+banded PDE matrices (nlpkkt240; also the weak-scaling matrix of Fig. 13),
+and uniform random. All generators are deterministic in ``seed``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..core import formats as F
+from ..core.tensor import Tensor
+
+
+def uniform_sparse(name: str, shape: Tuple[int, ...], density: float,
+                   seed: int = 0, fmt=None) -> Tensor:
+    rng = np.random.default_rng(seed)
+    nnz = max(int(np.prod([float(s) for s in shape]) * density), 1)
+    coords = np.stack([rng.integers(0, s, nnz) for s in shape], axis=1)
+    vals = rng.standard_normal(nnz).astype(np.float32)
+    fmt = fmt or (F.CSR() if len(shape) == 2 else F.CSF(len(shape)))
+    return Tensor.from_coo(name, shape, coords, vals, fmt)
+
+
+def powerlaw_matrix(name: str, n: int, m: int, avg_nnz_per_row: int = 16,
+                    alpha: float = 1.6, seed: int = 0) -> Tensor:
+    """Zipf-distributed row degrees — the load-imbalance regime where the
+    paper's non-zero partitions beat universe partitions (§II-D)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.zipf(alpha, size=n).astype(np.float64)
+    deg = np.minimum(np.maximum(
+        (raw / raw.mean() * avg_nnz_per_row).astype(np.int64), 1), m)
+    rows = np.repeat(np.arange(n, dtype=np.int64), deg)
+    cols = rng.integers(0, m, size=rows.shape[0])
+    vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+    return Tensor.from_coo(name, (n, m),
+                           np.stack([rows, cols], 1), vals, F.CSR())
+
+
+def banded_matrix(name: str, n: int, bandwidth: int = 5,
+                  seed: int = 0) -> Tensor:
+    """The weak-scaling matrix of paper Fig. 13 (synthetic banded)."""
+    rng = np.random.default_rng(seed)
+    offs = np.arange(-bandwidth, bandwidth + 1)
+    rows = np.repeat(np.arange(n, dtype=np.int64), offs.shape[0])
+    cols = rows + np.tile(offs, n)
+    keep = (cols >= 0) & (cols < n)
+    rows, cols = rows[keep], cols[keep]
+    vals = rng.standard_normal(rows.shape[0]).astype(np.float32)
+    return Tensor.from_coo(name, (n, n),
+                           np.stack([rows, cols], 1), vals, F.CSR())
+
+
+def powerlaw_tensor3(name: str, dims: Tuple[int, int, int],
+                     avg_nnz_per_slice: int = 64, alpha: float = 1.8,
+                     seed: int = 0) -> Tensor:
+    """FROSTT-like 3-tensor with skewed slice sizes."""
+    rng = np.random.default_rng(seed)
+    n = dims[0]
+    raw = rng.zipf(alpha, size=n).astype(np.float64)
+    deg = np.minimum(np.maximum(
+        (raw / raw.mean() * avg_nnz_per_slice).astype(np.int64), 1),
+        dims[1] * dims[2])
+    i = np.repeat(np.arange(n, dtype=np.int64), deg)
+    j = rng.integers(0, dims[1], size=i.shape[0])
+    k = rng.integers(0, dims[2], size=i.shape[0])
+    vals = rng.standard_normal(i.shape[0]).astype(np.float32)
+    return Tensor.from_coo(name, dims, np.stack([i, j, k], 1), vals,
+                           F.CSF(3))

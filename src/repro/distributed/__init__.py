@@ -1,0 +1,3 @@
+from . import collectives, mesh, planner
+
+__all__ = ["collectives", "mesh", "planner"]

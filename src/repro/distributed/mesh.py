@@ -1,0 +1,46 @@
+"""Mesh utilities — the bridge between the paper's abstract Machine grids
+and `jax.sharding.Mesh`.
+
+`machine_to_mesh` realizes a TDN Machine as a JAX mesh (axis names map
+one-to-one), so the same Machine object drives both the sparse-kernel
+partition plans and the SPMD executor. All mesh constructors are FUNCTIONS
+— importing this module never touches jax device state (the dry-run must
+set XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import AxisType, Mesh
+
+from ..core.tdn import Machine
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def machine_to_mesh(machine: Machine) -> Mesh:
+    return make_mesh([d.size for d in machine.dims],
+                     [d.name for d in machine.dims])
+
+
+def mesh_to_machine(mesh: Mesh) -> Machine:
+    return Machine(*[(n, s) for n, s in
+                     zip(mesh.axis_names, mesh.devices.shape)])
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes used for data parallelism ('pod' composes with 'data')."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def axis_size(mesh: Mesh, *axes: str) -> int:
+    s = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            s *= mesh.devices.shape[mesh.axis_names.index(a)]
+    return s

@@ -1,0 +1,216 @@
+"""Sharding planner — PartitionSpec trees for params / optimizer / batch /
+cache, rule-based by leaf path + shape.
+
+Layout (DESIGN.md §5): FSDP × TP. Every 2-D weight is sharded over both the
+'data' axis (FSDP — weights gathered per layer under scan) and the 'model'
+axis (megatron TP — contraction-parallel dim). Stacked layer/group leading
+axes are never sharded. Every rule checks divisibility and falls back to
+replication for that dim, so one planner covers all ten archs (56-head
+llava and 4-head xlstm included) on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from .mesh import axis_size, data_axes
+
+
+def _div(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    ax = (axes,) if isinstance(axes, str) else tuple(axes)
+    s = axis_size(mesh, *ax)
+    return s > 0 and dim % s == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axes):
+    return axes if axes is not None and _div(dim, mesh, axes) else None
+
+
+# weight rules: (name match, trailing-rank, per-dim logical axes)
+# logical 'fsdp' = data axes, 'tp' = model axis.
+_W2_RULES = [
+    # name fragment        -> (in_axis, out_axis) for (in, out) matrices
+    ("unembed", ("fsdp", "tp")),
+    ("embed", ("tp", "fsdp")),      # (vocab, d)
+    ("wq", ("fsdp", "tp")),
+    ("wk", ("fsdp", "tp")),
+    ("wv", ("fsdp", "tp")),
+    ("wo_gate", ("fsdp", "tp")),
+    ("wo", ("tp", "fsdp")),         # (proj_out, d)
+    ("wg", ("fsdp", "tp")),
+    ("wu", ("fsdp", "tp")),
+    ("wd", ("tp", "fsdp")),
+    ("wx", ("fsdp", "tp")),
+    ("wz", ("fsdp", "tp")),
+    ("wB", ("fsdp", None)),
+    ("wC", ("fsdp", None)),
+    ("wdt", ("fsdp", None)),
+    ("wi", ("fsdp", None)),
+    ("wf", ("fsdp", None)),
+    ("proj", ("fsdp", "tp")),
+    ("router", ("fsdp", None)),
+]
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def _resolve(axis: Optional[str], mesh: Mesh, serve: bool = False):
+    if axis == "fsdp":
+        if serve:
+            # §Perf iteration 6: FSDP re-gathers weights on EVERY forward —
+            # right for training (amortized against optimizer state), wrong
+            # for serving where it re-pays the gather per decoded token.
+            # Serving params are TP-only (replicated across data).
+            return None
+        da = data_axes(mesh)
+        return da if da else None
+    if axis == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    return axis
+
+
+def param_spec_for(path, leaf, mesh: Mesh, serve: bool = False) -> P:
+    name = _leaf_name(path)
+    shape = leaf.shape
+    rank = len(shape)
+    if rank == 0:
+        return P()
+    base = name.rsplit("/", 1)[-1]
+    # match trailing-2 dims for matrices; experts get a leading E rule
+    rule = None
+    for frag, axes in _W2_RULES:
+        if base == frag or base.startswith(frag):
+            rule = axes
+            break
+    if rule is None or rank < 2:
+        return P(*([None] * rank))
+    in_ax = _resolve(rule[0], mesh, serve)
+    out_ax = _resolve(rule[1], mesh, serve)
+    lead = rank - 2
+    spec = [None] * rank
+    # MoE expert stacks: (..., E, d, f) — shard E on model (expert
+    # parallelism) and d on fsdp; drops TP on f in exchange for EP.
+    # Expert weights stay d-sharded EVEN for serving (weight-stationary):
+    # llama4-scout's 96B of experts cannot replicate across data at
+    # 16 GB/chip, and GSPMD reduces the small (g,e,C,f) partial outputs
+    # instead of gathering the weights.
+    moe_expert = "moe" in name and base in ("wg", "wu", "wd")
+    if moe_expert:
+        e_dim = lead - 1 if lead >= 1 else None
+        if e_dim is not None and _div(shape[e_dim], mesh, "model") \
+                and "model" in mesh.axis_names:
+            spec[e_dim] = "model"
+        fs = _resolve("fsdp", mesh, serve=False)
+        d_pos = rank - 2 if base in ("wg", "wu") else rank - 1
+        if fs is not None and _div(shape[d_pos], mesh, fs):
+            spec[d_pos] = fs
+        return P(*spec)
+    spec[rank - 2] = _maybe(shape[rank - 2], mesh, in_ax)
+    spec[rank - 1] = _maybe(shape[rank - 1], mesh, out_ax)
+    # avoid duplicate axis use within one spec
+    if spec[rank - 2] == spec[rank - 1]:
+        spec[rank - 1] = None
+    return P(*spec)
+
+
+def params_pspecs(abstract_params, mesh: Mesh, serve: bool = False):
+    """PartitionSpec tree for a params pytree (abstract or concrete).
+
+    ``serve=True`` selects the TP-only layout (no FSDP weight regather per
+    forward — see _resolve)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec_for(path, leaf, mesh, serve),
+        abstract_params)
+
+
+def opt_pspecs(abstract_opt, abstract_params, mesh: Mesh):
+    """Optimizer state mirrors the param layout (step scalar replicated)."""
+    pspec = params_pspecs(abstract_params, mesh)
+    return type(abstract_opt)(step=P(), mu=pspec,
+                              nu=jax.tree.map(lambda s: s, pspec))
+
+
+def batch_pspec(mesh: Mesh, global_batch: int) -> P:
+    da = data_axes(mesh)
+    if da and global_batch % axis_size(mesh, *da) == 0:
+        return P(da, None)
+    return P(None, None)
+
+
+def frontend_pspec(mesh: Mesh, global_batch: int) -> P:
+    da = data_axes(mesh)
+    if da and global_batch % axis_size(mesh, *da) == 0:
+        return P(da, None, None)
+    return P(None, None, None)
+
+
+def cache_pspecs(abstract_cache, mesh: Mesh, batch: int):
+    """Cache tree specs: batch on data axes when divisible; attention-cache
+    sequence dim on 'model' (plus data axes when batch can't shard — the
+    long_500k sequence-parallel layout); SSM state heads on 'model'."""
+    da = data_axes(mesh)
+    batch_ok = bool(da) and batch % axis_size(mesh, *da) == 0 and batch > 1
+
+    def spec(path, leaf):
+        name = _leaf_name(path).rsplit("/", 1)[-1]
+        shape = leaf.shape
+        rank = len(shape)
+        if name == "pos" or rank <= 1:
+            return P(*([None] * rank))
+        if name in ("k", "v", "shared_k", "shared_v", "enc_k", "enc_v"):
+            # (..., B, S, H, hd)
+            sp = [None] * rank
+            b_dim, s_dim = rank - 4, rank - 3
+            if batch_ok:
+                sp[b_dim] = da
+                if _div(shape[s_dim], mesh, "model") and \
+                        "model" in mesh.axis_names:
+                    sp[s_dim] = "model"
+            else:
+                seq_axes = tuple(da) + (("model",) if "model" in
+                                        mesh.axis_names else ())
+                if seq_axes and _div(shape[s_dim], mesh, seq_axes):
+                    sp[s_dim] = seq_axes
+            return P(*sp)
+        if name.startswith("ssm") or name.startswith("tail"):
+            # (G, [gs], B, H, N, P) states — trailing 4 dims fixed
+            sp = [None] * rank
+            b_dim, h_dim = rank - 4, rank - 3
+            if batch_ok and rank >= 4:
+                sp[b_dim] = da
+            if rank >= 4 and _div(shape[h_dim], mesh, "model") and \
+                    "model" in mesh.axis_names:
+                sp[h_dim] = "model"
+            return P(*sp)
+        if name.startswith("x"):
+            # xLSTM states: (G, B, ...) — mLSTM (G,B,H,hd,hd+1), sLSTM
+            # (G,B,2,d); batch is always dim 1, heads dim 2 only for rank≥5
+            sp = [None] * rank
+            if batch_ok and rank >= 2 and _div(shape[1], mesh, da):
+                sp[1] = da
+            if rank >= 5 and _div(shape[2], mesh, "model") and \
+                    "model" in mesh.axis_names:
+                sp[2] = "model"
+            return P(*sp)
+        return P(*([None] * rank))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_cache)
+
+
+def shardings_from(pspec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,19 @@
+"""SpDISTAL leaf kernels.
+
+Per kernel: ``<name>.py`` (pl.pallas_call + BlockSpec, TPU target, validated
+under interpret=True), ``ops.py`` (jit'd wrappers, impl="xla"|"pallas"),
+``ref.py`` (pure-jnp oracles). ``layout.py`` holds the TPU-facing row-block
+ELL / padded-COO packers.
+"""
+from . import layout, ref
+
+__all__ = ["layout", "ops", "ref"]
+
+
+def __getattr__(name):
+    # ops imports jax at module scope; defer so `import repro.kernels.ref`
+    # stays cheap for pure-numpy users.
+    if name == "ops":
+        import importlib
+        return importlib.import_module(".ops", __name__)
+    raise AttributeError(name)

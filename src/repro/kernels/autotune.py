@@ -1,0 +1,115 @@
+"""Plan-level layout autotuner for the TPU sparse kernels.
+
+Block shapes trade MXU alignment against ELL padding waste, and the right
+choice depends on the matrix's row-degree distribution — a structural
+property known at plan time. The tuner scores candidate (block_r, block_n)
+pairs by a VMEM-aware cost model over the ACTUAL pos array (no execution
+needed — this is a materialization-time decision, like the partitioner's
+imbalance metric):
+
+    cost = padded_nnz · (1 + onehot_overhead) subject to VMEM fit,
+
+where padded_nnz counts ELL slots (compute ∝ slots on a static grid) and
+onehot_overhead = block_r/block_n accounts for the one-hot matmul rows.
+Heavy-row matrices therefore prefer small row blocks (less per-block
+padding); uniform matrices prefer larger ones (fewer grid steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+VMEM_BYTES = 16 * 2**20          # ~16 MiB/core usable
+DEFAULT_BLOCK_R = (4, 8, 16, 32)
+DEFAULT_BLOCK_N = (128, 256, 512)
+
+
+@dataclasses.dataclass
+class TuneResult:
+    block_r: int
+    block_n: int
+    padded_nnz: int
+    waste: float
+    cost: float
+    feasible: bool
+
+
+def ell_cost(pos: np.ndarray, block_r: int, block_n: int,
+             dense_cols_bytes: int = 0) -> TuneResult:
+    """Cost of one (block_r, block_n) ELL layout for a CSR pos array."""
+    pos = np.asarray(pos, dtype=np.int64)
+    n_rows = pos.shape[0] - 1
+    nnz = int(pos[-1])
+    n_rb = max(-(-n_rows // block_r), 1)
+    bpos = pos[np.minimum(np.arange(n_rb + 1) * block_r, n_rows)]
+    bcounts = np.diff(bpos)
+    bnnz = int(bcounts.max()) if bcounts.size else 0
+    bnnz = max(-(-bnnz // block_n) * block_n, block_n)
+    padded = n_rb * bnnz
+    waste = 0.0 if padded == 0 else 1.0 - nnz / padded
+    # VMEM: 3 nnz blocks (rows/crd/vals) + one-hot tile + output block
+    vmem = 3 * block_n * 4 + block_r * block_n * 4 + block_r * 4 \
+        + dense_cols_bytes
+    onehot_overhead = block_r / block_n
+    cost = padded * (1.0 + onehot_overhead)
+    return TuneResult(block_r, block_n, padded, waste, cost,
+                      feasible=vmem <= VMEM_BYTES)
+
+
+def tune_ell(pos: np.ndarray, *,
+             block_r_candidates: Sequence[int] = DEFAULT_BLOCK_R,
+             block_n_candidates: Sequence[int] = DEFAULT_BLOCK_N,
+             dense_cols_bytes: int = 0) -> TuneResult:
+    """Pick the cheapest feasible (block_r, block_n) for this matrix."""
+    best: Optional[TuneResult] = None
+    for br in block_r_candidates:
+        for bn in block_n_candidates:
+            r = ell_cost(pos, br, bn, dense_cols_bytes)
+            if not r.feasible:
+                continue
+            if best is None or r.cost < best.cost:
+                best = r
+    if best is None:  # fall back to the smallest tile
+        best = ell_cost(pos, min(block_r_candidates),
+                        min(block_n_candidates), dense_cols_bytes)
+    return best
+
+
+def heavy_row_split(pos: np.ndarray, crd: np.ndarray, vals: np.ndarray,
+                    threshold_factor: float = 8.0):
+    """Split heavy rows into a COO overflow lane (the ELL waste fix noted
+    in DESIGN.md §9): rows with degree > threshold·mean keep only the
+    first ``threshold`` entries in the ELL part; the tail goes to a sorted
+    COO list handled by the two-phase segmented-reduction kernel.
+
+    Returns ((pos', crd', vals'), (rows_t, cols_t, vals_t)) — ELL part +
+    COO tail. Results combine by addition (both kernels scatter-add)."""
+    pos = np.asarray(pos, dtype=np.int64)
+    deg = np.diff(pos)
+    n = deg.shape[0]
+    mean = max(deg.mean(), 1.0)
+    cap = int(max(np.ceil(threshold_factor * mean), 1))
+    keep_counts = np.minimum(deg, cap)
+    new_pos = np.zeros(n + 1, np.int64)
+    np.cumsum(keep_counts, out=new_pos[1:])
+    new_crd = np.zeros(int(new_pos[-1]), crd.dtype)
+    new_vals = np.zeros(int(new_pos[-1]), vals.dtype)
+    t_rows, t_cols, t_vals = [], [], []
+    for r in range(n):
+        lo, hi = int(pos[r]), int(pos[r + 1])
+        k = int(keep_counts[r])
+        new_crd[new_pos[r]: new_pos[r] + k] = crd[lo: lo + k]
+        new_vals[new_pos[r]: new_pos[r] + k] = vals[lo: lo + k]
+        if hi - lo > k:
+            t_rows.append(np.full(hi - lo - k, r, np.int32))
+            t_cols.append(crd[lo + k: hi])
+            t_vals.append(vals[lo + k: hi])
+    if t_rows:
+        tail = (np.concatenate(t_rows), np.concatenate(t_cols),
+                np.concatenate(t_vals))
+    else:
+        tail = (np.zeros(0, np.int32), np.zeros(0, crd.dtype),
+                np.zeros(0, vals.dtype))
+    return (new_pos.astype(np.int32), new_crd, new_vals), tail

@@ -1,0 +1,106 @@
+"""TPU kernel-facing sparse layouts.
+
+The paper's CSR leaves walk variable-length rows — natural on CPUs, adequate
+on GPUs with atomics, but hostile to the TPU's static-shape, MXU-aligned
+execution model. The TPU adaptation (DESIGN.md §2) re-blocks a CSR shard
+into a **row-block ELL** layout:
+
+- rows are grouped into blocks of ``block_r`` (MXU sublane-aligned);
+- each row block's non-zeros are padded to the max across blocks, rounded up
+  to a multiple of ``block_n`` (lane-aligned);
+- per non-zero we store the *relative row* within its block (``rows_rel``),
+  the column (``crd``) and the value.
+
+A Pallas kernel then processes a (row-block × nnz-block) grid where the
+segmented reduction becomes a dense one-hot matmul on the MXU:
+``out[block_r] += onehot(rows_rel)[block_r, block_n] @ prod[block_n]``.
+Padding slots carry ``rows_rel = block_r`` (no row selected) and
+``vals = 0``.
+
+``ell_pack`` is a plan/materialize-time transformation (host numpy), i.e.
+part of the format machinery, not the compute hot path. Its padding waste is
+reported just like partition imbalance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+INT = np.int32
+
+
+@dataclasses.dataclass
+class EllBlocks:
+    """Row-block ELL arrays: all shaped (n_rblocks, bnnz)."""
+
+    rows_rel: np.ndarray   # relative row in block; == block_r marks padding
+    crd: np.ndarray        # column (or inner coordinate) per nnz
+    vals: np.ndarray
+    block_r: int
+    n_rows: int
+
+    @property
+    def n_rblocks(self) -> int:
+        return self.rows_rel.shape[0]
+
+    @property
+    def bnnz(self) -> int:
+        return self.rows_rel.shape[1]
+
+    def padding_waste(self) -> float:
+        alloc = self.vals.size
+        real = int((self.rows_rel < self.block_r).sum())
+        return 0.0 if alloc == 0 else 1.0 - real / alloc
+
+
+def ell_pack(pos: np.ndarray, crd: np.ndarray, vals: np.ndarray,
+             block_r: int = 8, block_n: int = 128,
+             extra: Tuple[np.ndarray, ...] = ()) -> Tuple[EllBlocks, ...]:
+    """Re-block a CSR-like (pos, crd, vals) into row-block ELL.
+
+    ``extra`` carries additional per-nnz arrays (e.g. the second coordinate
+    of a CSF tensor) packed with the same permutation. Returns
+    ``(EllBlocks, *extra_packed)``.
+    """
+    pos = np.asarray(pos, dtype=np.int64)
+    n_rows = pos.shape[0] - 1
+    nnz = int(pos[-1])
+    n_rblocks = max(-(-n_rows // block_r), 1)
+    # nnz per row block
+    bpos = pos[np.minimum(np.arange(n_rblocks + 1) * block_r, n_rows)]
+    bcounts = np.diff(bpos)
+    bnnz = int(bcounts.max()) if n_rblocks else 0
+    bnnz = max(-(-bnnz // block_n) * block_n, block_n)
+
+    rows = np.repeat(np.arange(n_rows, dtype=np.int64), np.diff(pos))
+    rr = np.full((n_rblocks, bnnz), block_r, dtype=INT)
+    cc = np.zeros((n_rblocks, bnnz), dtype=INT)
+    vv = np.zeros((n_rblocks, bnnz), dtype=vals.dtype)
+    packed_extra = [np.zeros((n_rblocks, bnnz), dtype=INT) for _ in extra]
+    for b in range(n_rblocks):
+        lo, hi = int(bpos[b]), int(bpos[b + 1])
+        k = hi - lo
+        rr[b, :k] = (rows[lo:hi] - b * block_r).astype(INT)
+        cc[b, :k] = crd[lo:hi]
+        vv[b, :k] = vals[lo:hi]
+        for e, src in enumerate(extra):
+            packed_extra[e][b, :k] = src[lo:hi]
+    blocks = EllBlocks(rows_rel=rr, crd=cc, vals=vv, block_r=block_r,
+                       n_rows=n_rows)
+    return (blocks, *packed_extra)
+
+
+def coo_block_pad(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
+                  block_n: int = 128):
+    """Pad sorted COO arrays to a multiple of ``block_n`` for the two-phase
+    segmented-reduction kernel (padding rows get a sentinel id)."""
+    nnz = rows.shape[0]
+    n = max(-(-nnz // block_n) * block_n, block_n)
+    sentinel = int(rows.max()) + 1 if nnz else 0
+    r = np.full(n, sentinel, dtype=INT)
+    c = np.zeros(n, dtype=INT)
+    v = np.zeros(n, dtype=vals.dtype)
+    r[:nnz], c[:nnz], v[:nnz] = rows, cols, vals
+    return r, c, v, sentinel

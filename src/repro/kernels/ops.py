@@ -1,0 +1,184 @@
+"""Jit'd wrappers over the sparse kernels — the public compute API.
+
+Every op takes ``impl``:
+  - ``"xla"``    — the pure-jnp leaves from ref.py, jitted. Fast on this
+                   CPU container; also the lowering used inside pjit'd model
+                   code (XLA ops shard/fuse under GSPMD).
+  - ``"pallas"`` — the TPU Pallas kernels, run with ``interpret=True`` off
+                   TPU. This is the production TPU path; interpret mode
+                   exists to validate kernel logic on CPU (per-kernel
+                   allclose tests sweep shapes/dtypes against ref.py).
+
+Layout packing (CSR → row-block ELL / padded COO) happens here so callers
+hand over plain CSR/COO shard arrays.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .layout import coo_block_pad, ell_pack
+from .sddmm import sddmm_coo
+from .spadd3 import spadd3_dense_tiles
+from .spmm import spmm_ell
+from .spmttkrp import spmttkrp_ell
+from .spmv import spmv_coo_phase1, spmv_ell
+
+def _interpret() -> bool:
+    """Pallas interpret mode everywhere but real TPUs. Evaluated lazily so
+    importing this module never initializes the JAX device topology (the
+    dry-run must set XLA_FLAGS first)."""
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# SpMV
+# ---------------------------------------------------------------------------
+
+def spmv(pos, crd, vals, c, impl: str = "xla",
+         block_r: int = 8, block_n: int = 128):
+    """y(n,) = CSR(pos, crd, vals) @ c."""
+    if impl == "xla":
+        return jax.jit(ref.leaf_spmv_rows)(jnp.asarray(pos), jnp.asarray(crd),
+                                           jnp.asarray(vals), jnp.asarray(c))
+    blocks, = ell_pack(np.asarray(pos), np.asarray(crd), np.asarray(vals),
+                       block_r=block_r, block_n=block_n)
+    y = spmv_ell(jnp.asarray(blocks.rows_rel), jnp.asarray(blocks.crd),
+                 jnp.asarray(blocks.vals), jnp.asarray(c),
+                 block_r=block_r, block_n=block_n, interpret=_interpret())
+    return y[: pos.shape[0] - 1]
+
+
+def spmv_nnz(rows, cols, vals, c, n_rows: int, impl: str = "xla",
+             block_n: int = 128):
+    """y(n,) from sorted COO — the non-zero strategy leaf + merge."""
+    if impl == "xla":
+        f = jax.jit(partial(ref.leaf_spmv_nnz, max_rows=n_rows))
+        return f(jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+                 jnp.asarray(c))
+    r, cc, v, _ = coo_block_pad(np.asarray(rows), np.asarray(cols),
+                                np.asarray(vals), block_n=block_n)
+    psum, prow = spmv_coo_phase1(jnp.asarray(r), jnp.asarray(cc),
+                                 jnp.asarray(v), jnp.asarray(c),
+                                 block_n=block_n, interpret=_interpret())
+    return jax.ops.segment_sum(psum.ravel(), prow.ravel(),
+                               num_segments=n_rows)
+
+
+# ---------------------------------------------------------------------------
+# SpMM
+# ---------------------------------------------------------------------------
+
+def spmm(pos, crd, vals, C, impl: str = "xla",
+         block_r: int = 8, block_n: int = 128, block_j: int = 128):
+    """Y(n, J) = CSR @ C(K, J)."""
+    if impl == "xla":
+        return jax.jit(ref.leaf_spmm_rows)(jnp.asarray(pos), jnp.asarray(crd),
+                                           jnp.asarray(vals), jnp.asarray(C))
+    blocks, = ell_pack(np.asarray(pos), np.asarray(crd), np.asarray(vals),
+                       block_r=block_r, block_n=block_n)
+    y = spmm_ell(jnp.asarray(blocks.rows_rel), jnp.asarray(blocks.crd),
+                 jnp.asarray(blocks.vals), jnp.asarray(C),
+                 block_r=block_r, block_n=block_n, block_j=block_j,
+                 interpret=_interpret())
+    return y[: pos.shape[0] - 1]
+
+
+# ---------------------------------------------------------------------------
+# SDDMM
+# ---------------------------------------------------------------------------
+
+def sddmm(rows, cols, vals, C, D, impl: str = "xla", block_n: int = 128):
+    """out_vals(nnz,) = vals ⊙ (C @ D) sampled at (rows, cols)."""
+    if impl == "xla":
+        return jax.jit(ref.leaf_sddmm_nnz)(
+            jnp.asarray(rows), jnp.asarray(cols), jnp.asarray(vals),
+            jnp.asarray(C), jnp.asarray(D))
+    nnz = rows.shape[0]
+    r, cc, v, _ = coo_block_pad(np.asarray(rows), np.asarray(cols),
+                                np.asarray(vals), block_n=block_n)
+    out = sddmm_coo(jnp.asarray(r), jnp.asarray(cc), jnp.asarray(v),
+                    jnp.asarray(C), jnp.asarray(D), block_n=block_n,
+                    interpret=_interpret())
+    return out[:nnz]
+
+
+# ---------------------------------------------------------------------------
+# SpAdd3 (fused three-way add)
+# ---------------------------------------------------------------------------
+
+def spadd3_dense(csr1, csr2, csr3, n_rows: int, n_cols: int,
+                 impl: str = "xla", block_r: int = 8, block_m: int = 128):
+    """Dense(n, m) = B + C + D from three CSR triples (pos, crd, vals)."""
+    if impl == "xla":
+        f = jax.jit(partial(ref.leaf_spadd3_dense_rows, n_cols=n_cols))
+        return f(*(jnp.asarray(x) for t in (csr1, csr2, csr3) for x in t))
+    packed = []
+    for pos, crd, vals in (csr1, csr2, csr3):
+        blocks, = ell_pack(np.asarray(pos), np.asarray(crd), np.asarray(vals),
+                           block_r=block_r, block_n=block_m)
+        packed += [jnp.asarray(blocks.rows_rel), jnp.asarray(blocks.crd),
+                   jnp.asarray(blocks.vals)]
+    return spadd3_dense_tiles(*packed, n_rows=n_rows, n_cols=n_cols,
+                              block_r=block_r, block_m=block_m,
+                              interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# SpTTV — reuses the SpMV ELL kernel over level-1 positions
+# ---------------------------------------------------------------------------
+
+def spttv(pos1, crd1, pos2, crd2, vals, c, impl: str = "xla",
+          block_r: int = 8, block_n: int = 128):
+    """out_vals aligned with B's (i,j) positions (pattern-preserving)."""
+    if impl == "xla":
+        return jax.jit(ref.leaf_spttv_rows)(
+            jnp.asarray(pos1), jnp.asarray(crd1), jnp.asarray(pos2),
+            jnp.asarray(crd2), jnp.asarray(vals), jnp.asarray(c))
+    n_ij = crd1.shape[0]
+    blocks, = ell_pack(np.asarray(pos2), np.asarray(crd2), np.asarray(vals),
+                       block_r=block_r, block_n=block_n)
+    out = spmv_ell(jnp.asarray(blocks.rows_rel), jnp.asarray(blocks.crd),
+                   jnp.asarray(blocks.vals), jnp.asarray(c),
+                   block_r=block_r, block_n=block_n, interpret=_interpret())
+    return out[:n_ij]
+
+
+# ---------------------------------------------------------------------------
+# SpMTTKRP
+# ---------------------------------------------------------------------------
+
+def spmttkrp(pos1, crd1, pos2, crd2, vals, C, D, impl: str = "xla",
+             block_r: int = 8, block_n: int = 128):
+    """A(n, L) = B(i,j,k)·C(j,l)·D(k,l) from a CSF shard."""
+    if impl == "xla":
+        return jax.jit(ref.leaf_spmttkrp_rows)(
+            jnp.asarray(pos1), jnp.asarray(crd1), jnp.asarray(pos2),
+            jnp.asarray(crd2), jnp.asarray(vals), jnp.asarray(C),
+            jnp.asarray(D))
+    # flatten CSF: per-nnz (i, j, k); rows = i from pos1∘pos2
+    pos1_np, pos2_np = np.asarray(pos1, np.int64), np.asarray(pos2, np.int64)
+    i_of_ij = np.repeat(np.arange(pos1_np.shape[0] - 1), np.diff(pos1_np))
+    ij_of_nnz = np.repeat(np.arange(pos2_np.shape[0] - 1), np.diff(pos2_np))
+    i_per_nnz = i_of_ij[ij_of_nnz]
+    j_per_nnz = np.asarray(crd1)[ij_of_nnz]
+    # rebuild a pos over i for ell packing
+    n_rows = pos1_np.shape[0] - 1
+    counts = np.bincount(i_per_nnz, minlength=n_rows)
+    pos_i = np.zeros(n_rows + 1, np.int64)
+    np.cumsum(counts, out=pos_i[1:])
+    blocks, kk = ell_pack(pos_i, j_per_nnz.astype(np.int32),
+                          np.asarray(vals), block_r=block_r,
+                          block_n=block_n,
+                          extra=(np.asarray(crd2, np.int32),))
+    out = spmttkrp_ell(jnp.asarray(blocks.rows_rel), jnp.asarray(blocks.crd),
+                       jnp.asarray(kk), jnp.asarray(blocks.vals),
+                       jnp.asarray(C), jnp.asarray(D),
+                       block_r=block_r, block_n=block_n,
+                       interpret=_interpret())
+    return out[:n_rows]

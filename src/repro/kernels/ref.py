@@ -1,0 +1,197 @@
+"""Pure-jnp reference oracles for every SpDISTAL leaf kernel.
+
+Two families:
+
+1. **Dense oracles** (`dense_*`) — straight jnp.einsum on densified inputs.
+   These define semantics for the paper's six evaluated expressions and are
+   what every kernel (XLA leaf or Pallas) is asserted against.
+
+2. **Shard leaves** (`leaf_*`) — per-shard, statically-shaped jnp
+   implementations operating on the padded shard layouts produced by
+   `core.partition`. These are the "generated leaf kernel" equivalents used
+   by the simulation backend; Pallas kernels replace them on TPU.
+
+Padding convention: padded nnz slots have ``vals == 0`` and ``crd == 0`` so
+multiplicative kernels are unaffected; padded rows have empty pos ranges.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Dense oracles (semantics of the paper's evaluation kernels, §VI-A)
+# ---------------------------------------------------------------------------
+
+def dense_spmv(B, c):
+    return jnp.einsum("ij,j->i", B, c)
+
+
+def dense_spmm(B, C):
+    return jnp.einsum("ik,kj->ij", B, C)
+
+
+def dense_spadd3(B, C, D):
+    return B + C + D
+
+
+def dense_sddmm(Bpat, C, D):
+    """A(i,j) = B(i,j) * C(i,k) * D(k,j) — sample dense product at B's nnz."""
+    return Bpat * jnp.einsum("ik,kj->ij", C, D)
+
+
+def dense_spttv(B, c):
+    return jnp.einsum("ijk,k->ij", B, c)
+
+
+def dense_spmttkrp(B, C, D):
+    return jnp.einsum("ijk,jl,kl->il", B, C, D)
+
+
+# ---------------------------------------------------------------------------
+# Shard-leaf helpers
+# ---------------------------------------------------------------------------
+
+def rows_from_pos(pos: jnp.ndarray, n_positions: int) -> jnp.ndarray:
+    """Expand a local pos array to a per-position parent index.
+
+    ``pos``: (R+1,) monotone int32. Returns (n_positions,) row ids; padded
+    positions (>= pos[-1]) clip to the last row, harmless since their vals
+    are zero."""
+    p = jnp.arange(n_positions, dtype=pos.dtype)
+    r = jnp.searchsorted(pos, p, side="right") - 1
+    return jnp.clip(r, 0, pos.shape[0] - 2)
+
+
+# ---------------------------------------------------------------------------
+# Shard leaves — rows (universe) strategy
+# ---------------------------------------------------------------------------
+
+def leaf_spmv_rows(pos, crd, vals, c):
+    """y_local(R,) from a CSR row shard; c replicated (paper Fig. 9b leaf)."""
+    R = pos.shape[0] - 1
+    rows = rows_from_pos(pos, crd.shape[0])
+    prod = vals * jnp.take(c, crd, axis=0)
+    return jax.ops.segment_sum(prod, rows, num_segments=R)
+
+
+def leaf_spmv_nnz(rows_local, cols, vals, c, max_rows):
+    """y_local(max_rows,) from an equal-nnz COO shard; rows_local already
+    rebased to the shard's root interval (overlap handled by caller
+    reduction — paper §II-D non-zero algorithm)."""
+    prod = vals * jnp.take(c, cols, axis=0)
+    return jax.ops.segment_sum(prod, rows_local, num_segments=max_rows)
+
+
+def leaf_spmm_rows(pos, crd, vals, C):
+    """Y_local(R, J) = local CSR @ C, C(K, J) replicated."""
+    R = pos.shape[0] - 1
+    rows = rows_from_pos(pos, crd.shape[0])
+    gathered = jnp.take(C, crd, axis=0)            # (N, J)
+    prod = vals[:, None] * gathered
+    return jax.ops.segment_sum(prod, rows, num_segments=R)
+
+
+def leaf_spmm_nnz(rows_local, cols, vals, C, max_rows):
+    gathered = jnp.take(C, cols, axis=0)
+    prod = vals[:, None] * gathered
+    return jax.ops.segment_sum(prod, rows_local, num_segments=max_rows)
+
+
+def leaf_sddmm_nnz(rows, cols, vals, C, D):
+    """out_vals(N,) = vals * <C[rows,:], D[:,cols]> — the fused SDDMM leaf
+    (non-zero distributed algorithm, paper §VI-A)."""
+    Cg = jnp.take(C, rows, axis=0)                 # (N, K)
+    Dg = jnp.take(D, cols, axis=1).T               # (N, K)
+    return vals * jnp.sum(Cg * Dg, axis=1)
+
+
+def leaf_spadd3_rows(pos1, crd1, v1, pos2, crd2, v2, pos3, crd3, v3, n_cols):
+    """Fused three-way sparse add over a row shard.
+
+    Two-phase union assembly (Chou et al. [28]) fused across all three
+    operands: lexsort concatenated (row, col) pairs, dedupe, segment-sum.
+    Output is a padded union COO (rows, cols, vals, count). Static output
+    size = N1+N2+N3. int32 throughout (TPU-friendly; no fused int64 key)."""
+    R = pos1.shape[0] - 1
+    rows = jnp.concatenate([
+        rows_from_pos(pos1, crd1.shape[0]),
+        rows_from_pos(pos2, crd2.shape[0]),
+        rows_from_pos(pos3, crd3.shape[0]),
+    ])
+    cols = jnp.concatenate([crd1, crd2, crd3])
+    vals = jnp.concatenate([v1, v2, v3])
+    # padded slots: vals==0; push them past every valid row so they sort last
+    valid = jnp.concatenate([
+        jnp.arange(crd1.shape[0]) < (pos1[-1] - pos1[0]),
+        jnp.arange(crd2.shape[0]) < (pos2[-1] - pos2[0]),
+        jnp.arange(crd3.shape[0]) < (pos3[-1] - pos3[0]),
+    ])
+    rows = jnp.where(valid, rows, R).astype(jnp.int32)
+    order = jnp.lexsort((cols, rows))
+    rows_s, cols_s, vals_s = rows[order], cols[order], vals[order]
+    valid_s = valid[order]
+    newseg = jnp.concatenate([
+        jnp.array([True]),
+        (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1]),
+    ])
+    n = rows.shape[0]
+    seg_id = jnp.cumsum(newseg) - 1
+    out_vals = jax.ops.segment_sum(vals_s, seg_id, num_segments=n)
+    first = jax.ops.segment_min(jnp.arange(n, dtype=jnp.int32), seg_id,
+                                num_segments=n)
+    first = jnp.clip(first, 0, n - 1)
+    out_rows = jnp.take(rows_s, first)
+    out_cols = jnp.take(cols_s, first)
+    count = jnp.sum((newseg & valid_s).astype(jnp.int32))
+    in_range = jnp.arange(n) < count
+    out_rows = jnp.where(in_range, out_rows, 0).astype(jnp.int32)
+    out_cols = jnp.where(in_range, out_cols, 0).astype(jnp.int32)
+    out_vals = jnp.where(in_range, out_vals, 0)
+    return out_rows, out_cols, out_vals, count
+
+
+def leaf_spadd3_dense_rows(pos1, crd1, v1, pos2, crd2, v2, pos3, crd3, v3,
+                           n_cols):
+    """Dense-row-accumulate variant (the Pallas-kernel contract): scatter all
+    three operands into dense local rows. Used when the output is consumed
+    densely or re-compressed by XLA."""
+    R = pos1.shape[0] - 1
+    out = jnp.zeros((R, n_cols), dtype=v1.dtype)
+    for pos, crd, v in ((pos1, crd1, v1), (pos2, crd2, v2), (pos3, crd3, v3)):
+        rows = rows_from_pos(pos, crd.shape[0])
+        out = out.at[rows, crd].add(v)
+    return out
+
+
+def leaf_spttv_rows(pos1, crd1, pos2, crd2, vals, c):
+    """A(i,j) = B(i,j,k)·c(k) over a CSF row shard. Output sparsity equals
+    B's (i,j) pattern (paper §V-B) → returns vals aligned with level-1
+    positions."""
+    n_ij = crd1.shape[0]
+    ij_of_nnz = rows_from_pos(pos2, crd2.shape[0])
+    prod = vals * jnp.take(c, crd2, axis=0)
+    return jax.ops.segment_sum(prod, ij_of_nnz, num_segments=n_ij)
+
+
+def leaf_spttv_nnz(ij_local, k, vals, c, max_ij):
+    prod = vals * jnp.take(c, k, axis=0)
+    return jax.ops.segment_sum(prod, ij_local, num_segments=max_ij)
+
+
+def leaf_spmttkrp_rows(pos1, crd1, pos2, crd2, vals, C, D):
+    """A(i,l) = B(i,j,k)·C(j,l)·D(k,l) over a CSF row shard → (R, L)."""
+    R = pos1.shape[0] - 1
+    ij_of_nnz = rows_from_pos(pos2, crd2.shape[0])   # level-1 position per nnz
+    i_of_ij = rows_from_pos(pos1, crd1.shape[0])     # row per level-1 position
+    j = jnp.take(crd1, ij_of_nnz, axis=0)
+    i = jnp.take(i_of_ij, ij_of_nnz, axis=0)
+    contrib = vals[:, None] * jnp.take(C, j, axis=0) * jnp.take(D, crd2, axis=0)
+    return jax.ops.segment_sum(contrib, i, num_segments=R)
+
+
+def leaf_spmttkrp_nnz(i_local, j, k, vals, C, D, max_rows):
+    contrib = vals[:, None] * jnp.take(C, j, axis=0) * jnp.take(D, k, axis=0)
+    return jax.ops.segment_sum(contrib, i_local, num_segments=max_rows)

@@ -1,0 +1,86 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+ARCH_ORDER = ["llava-next-34b", "zamba2-7b", "xlstm-125m", "starcoder2-15b",
+              "llama3-8b", "internlm2-1.8b", "qwen3-14b", "olmoe-1b-7b",
+              "llama4-scout-17b-a16e", "seamless-m4t-medium"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh="pod256"):
+    recs = {}
+    for f in OUT_DIR.glob(f"*_{mesh}.json"):
+        r = json.loads(f.read_text())
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(mesh="pod256") -> str:
+    recs = load(mesh)
+    rows = ["| arch | shape | compute | memory | collective | dominant | "
+            "bound | mem/dev | useful-FLOPs |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                rows.append(f"| {a} | {s} | - | - | - | MISSING | - | - | - |")
+                continue
+            if r["status"] != "ok":
+                rows.append(f"| {a} | {s} | - | - | - | "
+                            f"FAIL: {r.get('error','')[:40]} | - | - | - |")
+                continue
+            rl = r["roofline"]
+            rows.append(
+                f"| {a} | {s} | {fmt_s(rl['compute_s'])} | "
+                f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+                f"{rl['dominant'].replace('_s','')} | "
+                f"{fmt_s(rl['roofline_bound_s'])} | "
+                f"{r['memory']['peak_estimate_gib']:.2f}GiB | "
+                f"{rl.get('useful_flops_ratio', 0):.2f} |")
+    return "\n".join(rows)
+
+
+def summary(mesh="pod256"):
+    recs = load(mesh)
+    ok = [r for r in recs.values() if r["status"] == "ok"]
+    out = {
+        "cells_ok": len(ok), "cells_total": len(recs),
+        "over_16gib": sorted([(r["arch"], r["shape"],
+                               r["memory"]["peak_estimate_gib"])
+                              for r in ok
+                              if r["memory"]["peak_estimate_gib"] > 16],
+                             key=lambda t: -t[2]),
+        "most_collective_bound": sorted(
+            [(r["arch"], r["shape"],
+              r["roofline"]["collective_s"] /
+              max(r["roofline"]["roofline_bound_s"], 1e-12))
+             for r in ok], key=lambda t: -t[2])[:5],
+        "worst_compute_fraction": sorted(
+            [(r["arch"], r["shape"],
+              r["roofline"]["compute_fraction_at_bound"])
+             for r in ok if r["shape"] == "train_4k"],
+            key=lambda t: t[2])[:5],
+    }
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "pod256"
+    print(table(mesh))
+    print()
+    print(json.dumps(summary(mesh), indent=2, default=str))

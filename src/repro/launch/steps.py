@@ -1,0 +1,217 @@
+"""Step builders: train_step / prefill_step / decode_step per (arch × shape
+× mesh), with sharding trees from the planner.
+
+``input_specs`` (MULTI-POD DRY-RUN item 2) returns ShapeDtypeStruct
+stand-ins for every model input — weak-type-correct, shardable, no device
+allocation. The same builders back the real train/serve launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..distributed import planner
+from ..distributed.mesh import axis_size, data_axes
+from ..models.layers import ShardCtx
+from ..models.model import LM
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+from ..optim.schedules import cosine_with_warmup
+
+
+def make_ctx(mesh) -> ShardCtx:
+    da = data_axes(mesh)
+    return ShardCtx(batch=da, model="model" if "model" in mesh.axis_names
+                    else None, seq="model", active=True,
+                    dp=axis_size(mesh, *da) or 1)
+
+
+def build_lm(cfg: ArchConfig, mesh, serve: bool = False) -> LM:
+    if serve:
+        # serving holds no optimizer state; bf16 params are the standard
+        # deployment format (fits llama4-scout's 109B on one pod at TP=16)
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    return LM(cfg, make_ctx(mesh))
+
+
+def effective_accum(cfg_batch: int, requested: int, mesh) -> int:
+    """Largest accum ≤ requested with a data-shardable microbatch."""
+    dp = axis_size(mesh, *data_axes(mesh)) or 1
+    accum = max(requested, 1)
+    while accum > 1 and (cfg_batch % accum or (cfg_batch // accum) % dp):
+        accum -= 1
+    return accum
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, lm: LM) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.frontend != "none":
+            specs["frontend"] = jax.ShapeDtypeStruct(
+                (B, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    else:  # decode
+        specs["token"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        window = shape.attention_window or cfg.attention_window
+        specs["cache"] = jax.eval_shape(
+            lambda: lm.init_cache(B, S, window=window,
+                                  src_len=cfg.frontend_tokens
+                                  if cfg.is_encdec else 0))
+    return specs
+
+
+def abstract_state(lm: LM):
+    params = lm.abstract_params()
+    opt = jax.eval_shape(adamw_init, params)
+    return params, opt
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(lm: LM, shape: ShapeConfig, mesh, *,
+                    peak_lr: float = 3e-4, total_steps: int = 10000):
+    cfg = lm.cfg
+    requested = cfg.grad_accum_override or shape.grad_accum
+    accum = effective_accum(shape.global_batch, requested, mesh)
+    window = shape.attention_window or cfg.attention_window
+    variant = cfg.train_attn_variant if shape.kind == "train" else "auto"
+    has_frontend = cfg.frontend != "none"
+
+    def loss_fn(params, tokens, frontend):
+        return lm.loss(params, tokens, frontend, window=window,
+                       variant=variant)
+
+    def train_step(params, opt_state: AdamWState, tokens,
+                   frontend=None):
+        B, S = tokens.shape
+        mb = B // accum
+        tk = tokens.reshape(accum, mb, S)
+        fe = (frontend.reshape(accum, mb, *frontend.shape[1:])
+              if frontend is not None else None)
+
+        # §Perf iteration 4 (REFUTED, reverted): accumulating inside a
+        # single value_and_grad did NOT consolidate the gradient reduction —
+        # the scan-transposed backward still reduces each microbatch's
+        # partials into the FSDP-sharded accumulator, and the extra remat
+        # recompute added ~60% all-gather traffic (llava train_4k: AR
+        # 1173→1430 GB/dev, AG 796→1278 GB/dev). Per-microbatch reduction is
+        # inherent to a sharded accumulator; the working lever is fewer,
+        # larger microbatches (iteration 5 — grad_accum_override).
+        def micro(gsum, sl):
+            batch = sl[0]
+            f = sl[1] if has_frontend else None
+            loss, g = jax.value_and_grad(loss_fn)(params, batch, f)
+            gsum = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return gsum, loss
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        xs = (tk, fe) if has_frontend else (tk,)
+        gsum, losses = jax.lax.scan(micro, g0, xs)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        warmup = max(min(200, total_steps // 10), 1)
+        # schedule evaluated at the step being TAKEN (1-based): step-0 lr
+        # would otherwise be exactly 0 and the first update a no-op
+        lr = cosine_with_warmup(opt_state.step + 1, peak_lr=peak_lr,
+                                warmup_steps=warmup, total_steps=total_steps)
+        new_p, new_opt, gnorm = adamw_update(params, grads, opt_state, lr=lr)
+        metrics = {"loss": losses.mean(), "gnorm": gnorm, "lr": lr}
+        return new_p, new_opt, metrics
+
+    return train_step, accum
+
+
+def make_prefill_step(lm: LM, shape: ShapeConfig):
+    cfg = lm.cfg
+    window = shape.attention_window or cfg.attention_window
+
+    def prefill_step(params, tokens, frontend=None):
+        logits, _ = lm.apply(params, tokens, frontend, window=window,
+                             last_only=True)
+        return logits[:, 0]
+
+    return prefill_step
+
+
+def make_decode_step(lm: LM, shape: ShapeConfig):
+    cfg = lm.cfg
+    window = shape.attention_window or cfg.attention_window
+
+    def decode_step(params, cache, token):
+        return lm.decode_step(params, cache, token, window=window)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees for a full step
+# ---------------------------------------------------------------------------
+
+def step_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh, lm: LM):
+    """Returns (args_abstract, in_shardings, donate_argnums) for the cell's
+    step function, ready for jax.jit(...).lower(*args_abstract)."""
+    serve = shape.kind != "train"
+    params_abs, opt_abs = abstract_state(lm)
+    p_spec = planner.params_pspecs(params_abs, mesh, serve=serve)
+    p_sh = planner.shardings_from(p_spec, mesh)
+    specs = input_specs(cfg, shape, lm)
+    if shape.kind == "train":
+        o_spec = planner.opt_pspecs(opt_abs, params_abs, mesh)
+        o_sh = planner.shardings_from(o_spec, mesh)
+        b_sh = NamedSharding(mesh, planner.batch_pspec(mesh,
+                                                       shape.global_batch))
+        args = [params_abs, opt_abs, specs["tokens"]]
+        shard = [p_sh, o_sh, b_sh]
+        if "frontend" in specs:
+            args.append(specs["frontend"])
+            shard.append(NamedSharding(
+                mesh, planner.frontend_pspec(mesh, shape.global_batch)))
+        return tuple(args), tuple(shard), (0, 1)
+    if shape.kind == "prefill":
+        b_sh = NamedSharding(mesh, planner.batch_pspec(mesh,
+                                                       shape.global_batch))
+        args = [params_abs, specs["tokens"]]
+        shard = [p_sh, b_sh]
+        if "frontend" in specs:
+            args.append(specs["frontend"])
+            shard.append(NamedSharding(
+                mesh, planner.frontend_pspec(mesh, shape.global_batch)))
+        return tuple(args), tuple(shard), ()
+    # decode
+    cache_abs = specs["cache"]
+    c_spec = planner.cache_pspecs(cache_abs, mesh, shape.global_batch)
+    c_sh = planner.shardings_from(c_spec, mesh)
+    tok_sh = NamedSharding(
+        mesh, P(data_axes(mesh))
+        if shape.global_batch % (axis_size(mesh, *data_axes(mesh)) or 1) == 0
+        and shape.global_batch > 1 else P(None))
+    return ((params_abs, cache_abs, specs["token"]),
+            (p_sh, c_sh, tok_sh), (1,))
+
+
+def build_step(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """One-stop: returns (jitted_fn, abstract_args) for the cell."""
+    lm = build_lm(cfg, mesh, serve=shape.kind != "train")
+    args, shardings, donate = step_shardings(cfg, shape, mesh, lm)
+    if shape.kind == "train":
+        fn, accum = make_train_step(lm, shape, mesh)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(lm, shape)
+    else:
+        fn = make_decode_step(lm, shape)
+    jf = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
+    return jf, args, lm

@@ -1,0 +1,178 @@
+"""Training launcher — ties together configs, models, planner, pipeline,
+checkpointing, fault tolerance.
+
+Small-scale e2e (this container, examples/train_e2e.py uses it directly)::
+
+    python -m repro.launch.train --arch internlm2-1.8b --steps 50 \
+        --reduced --global-batch 8 --seq-len 128
+
+Pod-scale usage is identical minus --reduced; mesh selection follows the
+device topology (make_production_mesh on real pods, 1-device mesh here).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig, get_arch
+from ..data.pipeline import DataConfig, Pipeline
+from ..distributed import planner
+from ..distributed.mesh import axis_size, data_axes, make_mesh
+from ..models.model import LM
+from ..optim.adamw import adamw_init
+from ..runtime.checkpoint import CheckpointManager
+from ..runtime.fault import RestartPolicy, StepWatchdog
+from . import steps as steps_mod
+from .mesh import make_production_mesh, make_smoke_mesh
+
+
+def pick_mesh():
+    n = len(jax.devices())
+    if n >= 512:
+        return make_production_mesh(multi_pod=True)
+    if n >= 256:
+        return make_production_mesh()
+    if n == 1:
+        return make_smoke_mesh()
+    # generic small mesh: all devices on data
+    return make_mesh((n, 1), ("data", "model"))
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig, *,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 peak_lr: float = 3e-4, total_steps: int = 10000):
+        self.cfg, self.shape = cfg, shape
+        self.mesh = pick_mesh()
+        self.lm = steps_mod.build_lm(cfg, self.mesh)
+        fn, self.accum = steps_mod.make_train_step(
+            self.lm, shape, self.mesh, peak_lr=peak_lr,
+            total_steps=total_steps)
+        _, shardings, donate = steps_mod.step_shardings(
+            cfg, shape, self.mesh, self.lm)
+        self.step_fn = jax.jit(fn, in_shardings=shardings,
+                               donate_argnums=donate)
+        self.ckpt = (CheckpointManager(ckpt_dir) if ckpt_dir else None)
+        self.ckpt_every = ckpt_every
+        self.watchdog = StepWatchdog()
+        self.metrics_log: list = []
+
+        dp = axis_size(self.mesh, *data_axes(self.mesh)) or 1
+        self.pipeline = Pipeline(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+            global_batch=shape.global_batch,
+            frontend_tokens=cfg.frontend_tokens if cfg.frontend != "none"
+            else 0, d_model=cfg.d_model))
+
+        with self.mesh:
+            params = self.lm.init_params(jax.random.PRNGKey(0))
+            p_sh = planner.shardings_from(
+                planner.params_pspecs(params, self.mesh), self.mesh)
+            self.params = jax.device_put(params, p_sh)
+            opt = adamw_init(self.params)
+            o_sh = planner.shardings_from(planner.opt_pspecs(
+                opt, params, self.mesh), self.mesh)
+            self.opt = jax.device_put(opt, o_sh)
+        self.step = 0
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            self.restore()
+
+    # ------------------------------------------------------------------
+    def restore(self) -> None:
+        like = {"params": self.params, "opt": self.opt,
+                "cursor": self.pipeline.cursor(), "step": 0}
+        step, state = self.ckpt.restore(like)
+        self.params = jax.device_put(state["params"], jax.tree.map(
+            lambda x: x.sharding, self.params))
+        self.opt = jax.device_put(state["opt"], jax.tree.map(
+            lambda x: x.sharding, self.opt))
+        self.pipeline.restore(jax.tree.map(int, state["cursor"]))
+        self.step = int(state["step"])
+
+    def save(self, blocking: bool = False) -> None:
+        if not self.ckpt:
+            return
+        self.ckpt.save(self.step, {
+            "params": self.params, "opt": self.opt,
+            "cursor": self.pipeline.cursor(), "step": self.step,
+        }, blocking=blocking)
+
+    # ------------------------------------------------------------------
+    def run(self, n_steps: int, log_every: int = 10) -> Dict[str, Any]:
+        with self.mesh:
+            while self.step < n_steps:
+                batch = next(self.pipeline)
+                args = [self.params, self.opt,
+                        jnp.asarray(batch["tokens"])]
+                if "frontend" in batch:
+                    args.append(jnp.asarray(batch["frontend"],
+                                            jnp.bfloat16))
+                self.watchdog.start()
+                self.params, self.opt, metrics = self.step_fn(*args)
+                jax.block_until_ready(metrics["loss"])
+                straggled = self.watchdog.stop()
+                self.step += 1
+                rec = {"step": self.step,
+                       "loss": float(metrics["loss"]),
+                       "gnorm": float(metrics["gnorm"]),
+                       "straggled": straggled}
+                self.metrics_log.append(rec)
+                if self.step % log_every == 0 or self.step == 1:
+                    print(f"step {self.step:5d} loss {rec['loss']:.4f} "
+                          f"gnorm {rec['gnorm']:.3f} "
+                          f"({self.watchdog.median()*1000:.0f} ms/med)",
+                          flush=True)
+                if self.ckpt and self.step % self.ckpt_every == 0:
+                    self.save()
+            if self.ckpt:
+                self.save(blocking=True)
+        if not self.metrics_log:
+            # resumed at/past n_steps: nothing to do (restart safety)
+            return {"final_loss": float("nan"), "steps": self.step,
+                    "median_step_s": 0.0}
+        return {"final_loss": self.metrics_log[-1]["loss"],
+                "steps": self.step,
+                "median_step_s": self.watchdog.median()}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--global-batch", type=int, default=0)
+    ap.add_argument("--seq-len", type=int, default=0)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    import dataclasses as dc
+    shape = ShapeConfig(
+        "custom", "train",
+        seq_len=args.seq_len or 4096,
+        global_batch=args.global_batch or 256,
+        grad_accum=args.grad_accum)
+    tr = Trainer(cfg, shape, ckpt_dir=args.ckpt_dir or None,
+                 total_steps=args.steps, peak_lr=args.lr)
+    policy = RestartPolicy(max_restarts=3)
+    restarts = policy.run_with_restarts(
+        lambda: tr.run(args.steps),
+        on_restart=lambda n: (print(f"[restart {n}] restoring"),
+                              tr.restore() if tr.ckpt else None))
+    print(f"done: final loss {tr.metrics_log[-1]['loss']:.4f}, "
+          f"{restarts} restarts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model stack: LM assembly + per-family blocks."""
+from .layers import NO_SHARD, ShardCtx
+from .model import LM
+
+__all__ = ["LM", "ShardCtx", "NO_SHARD"]

@@ -1,0 +1,290 @@
+"""Attention for all assigned architectures.
+
+Variants (selected per shape, DESIGN.md §5):
+
+- ``dense``    — masked einsum attention; best HLO for S ≤ 8K training.
+- ``chunked``  — flash-style: lax.scan over KV blocks with running
+                 max/denominator; O(S·Bk) memory for 32K prefill. The causal
+                 mask skips nothing (XLA has no dynamic trip counts) — the
+                 ~2× masked-FLOP overhead is visible in the roofline and
+                 addressed in §Perf.
+- ``windowed`` — block-sparse sliding window built on the paper's format
+                 machinery: a Dense row-block level × banded Compressed
+                 col-block level (models/sparse_attention.py provides the
+                 mask plan). Used for long_500k on full-attention archs.
+- decode       — single-token query against a (possibly sequence-sharded)
+                 KV cache; GSPMD turns the softmax reductions into
+                 collectives when the cache's S dim is sharded.
+
+GQA throughout: kv heads ≤ q heads, repeated by ``G = H // Hkv``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (NO_SHARD, ShardCtx, apply_rope, dense_init, rmsnorm,
+                     rope_angles, softmax_fp32)
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              qk_norm: bool = False, dtype=jnp.float32) -> Dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, n_heads * head_dim, dtype),
+        "wk": dense_init(kk, d, n_kv * head_dim, dtype),
+        "wv": dense_init(kv, d, n_kv * head_dim, dtype),
+        "wo": dense_init(ko, n_heads * head_dim, d, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((head_dim,), dtype)
+        p["k_norm"] = jnp.ones((head_dim,), dtype)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim, ctx: ShardCtx):
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, n_heads, head_dim)
+    k = (x @ params["wk"].astype(dt)).reshape(B, S, n_kv, head_dim)
+    v = (x @ params["wv"].astype(dt)).reshape(B, S, n_kv, head_dim)
+    q = ctx.cs(q, "batch", None, "model", None)
+    k = ctx.cs(k, "batch", None, None, None)
+    v = ctx.cs(v, "batch", None, None, None)
+    if "q_norm" in params:
+        q = rmsnorm(q, params["q_norm"])
+        k = rmsnorm(k, params["k_norm"])
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return k
+    B, S, Hkv, hd = k.shape
+    return jnp.repeat(k, groups, axis=2)
+
+
+# --- grouped-GQA einsums (§Perf iteration 1) -------------------------------
+# Materializing repeated K/V ((B,S,H,hd) from (B,S,Hkv,hd)) forced GSPMD to
+# all-gather the sequence-sharded KV cache on every decode layer (154 GB/dev
+# on qwen3 decode_32k). Grouping the query heads instead keeps K/V in their
+# native (possibly sequence-sharded) layout; the contraction touches each KV
+# shard locally and only the softmax statistics cross shards.
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Q,H,hd), k: (B,S,Hkv,hd) -> scores (B,Hkv,G,Q,S) in f32.
+
+    f32 via preferred_element_type (bf16 operands, f32 accumulation) — a
+    post-hoc ``convert(dot(...))`` gets algebraically rewritten by XLA into
+    converting the OPERANDS, i.e. the entire KV cache to f32 (§Perf iter 2:
+    8 GB/step of spurious converts on qwen3 decode_32k)."""
+    B, Q, H, hd = q.shape
+    Hkv = k.shape[2]
+    qg = q.reshape(B, Q, Hkv, H // Hkv, hd)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_av(w: jax.Array, v: jax.Array) -> jax.Array:
+    """w: (B,Hkv,G,Q,S), v: (B,S,Hkv,hd) -> out (B,Q,H,hd)."""
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    B, Q, Hkv, G, hd = out.shape
+    return out.reshape(B, Q, Hkv * G, hd)
+
+
+# ---------------------------------------------------------------------------
+# Training / prefill attention
+# ---------------------------------------------------------------------------
+
+def _dense_attention(q, k, v, causal: bool, ctx: ShardCtx):
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5
+    scores = _gqa_scores(q, k) * scale            # (B,K,G,S,Skv)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, k.shape[1]), bool),
+                        k.shape[1] - S)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = softmax_fp32(scores).astype(q.dtype)
+    out = _gqa_av(w, v)
+    return ctx.cs(out, "batch", None, "model", None)
+
+
+def _chunked_attention(q, k, v, causal: bool, ctx: ShardCtx,
+                       kv_block: int = 1024):
+    """Flash-style streaming softmax over KV blocks (memory-bounded).
+    Grouped-GQA form: K/V blocks stay (B, kb, Hkv, hd)."""
+    B, S, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    nb = -(-Sk // kv_block)
+    pad = nb * kv_block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, kv_block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    scale = hd ** -0.5
+    q_pos = jnp.arange(S)
+
+    def step(carry, blk):
+        m, l, acc = carry                       # (B,K,G,S) / (...,hd)
+        kblk, vblk, bidx = blk
+        kv_pos = bidx * kv_block + jnp.arange(kv_block)
+        s = _gqa_scores(q, kblk) * scale  # (B,K,G,S,kb)
+        mask = kv_pos[None, :] <= (q_pos[:, None] + (Sk - S))
+        mask &= (kv_pos < Sk)[None, :]
+        if not causal:
+            mask = jnp.broadcast_to((kv_pos < Sk)[None, :], mask.shape)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(-1)
+        upd = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype), vblk)
+        acc_new = acc * corr[..., None] + upd.astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, S), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0), (kb, vb, jnp.arange(nb)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    return ctx.cs(out, "batch", None, "model", None)
+
+
+def _windowed_attention(q, k, v, window: int, ctx: ShardCtx,
+                        q_block: int = 1024):
+    """Block-banded causal attention: each query block attends to the
+    trailing ``window`` keys. The (q-block × kv-block) iteration space is
+    the compressed banded level of sparse_attention.band_plan — only blocks
+    inside the band are materialized, so compute scales with S·W not S²."""
+    B, S, H, hd = q.shape
+    assert k.shape[1] == S, "windowed path expects self-attention"
+    nqb = -(-S // q_block)
+    pad = nqb * q_block - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    span = window + q_block  # KV needed per q block
+    scale = hd ** -0.5
+    Sp = nqb * q_block
+
+    def qblock(bidx):
+        qs = bidx * q_block
+        qb = jax.lax.dynamic_slice_in_dim(q, qs, q_block, 1)
+        ks = jnp.clip(qs + q_block - span, 0, Sp - span)
+        kb = jax.lax.dynamic_slice_in_dim(k, ks, span, 1)
+        vb = jax.lax.dynamic_slice_in_dim(v, ks, span, 1)
+        s = _gqa_scores(qb, kb) * scale
+        q_pos = qs + jnp.arange(q_block)
+        kv_pos = ks + jnp.arange(span)
+        mask = (kv_pos[None, :] <= q_pos[:, None]) & \
+               (kv_pos[None, :] > q_pos[:, None] - window) & \
+               (kv_pos[None, :] < S) & (q_pos[:, None] < S)
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        w = softmax_fp32(s).astype(qb.dtype)
+        return _gqa_av(w, vb)
+
+    blocks = jax.lax.map(qblock, jnp.arange(nqb))  # (nqb, B, qb, H, hd)
+    out = blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, hd)[:, :S]
+    return ctx.cs(out, "batch", None, "model", None)
+
+
+def attention_apply(params: Dict, x: jax.Array, *, n_heads: int, n_kv: int,
+                    head_dim: int, rope_theta: float = 10000.0,
+                    causal: bool = True, window: int = 0,
+                    variant: str = "auto", ctx: ShardCtx = NO_SHARD,
+                    positions: Optional[jax.Array] = None,
+                    kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    use_rope: bool = True) -> jax.Array:
+    """Full-sequence attention (training / prefill).
+
+    ``kv_override`` supplies external K/V inputs for cross-attention (the
+    enc-dec path); rope/causal are disabled there by the caller.
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, ctx)
+    if use_rope:
+        pos = positions if positions is not None else jnp.arange(S)
+        cos, sin = rope_angles(pos, head_dim, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if kv_override is not None:
+        k, v = kv_override
+
+    if variant == "auto":
+        if window:
+            variant = "windowed"
+        elif S > 8192:
+            variant = "chunked"
+        else:
+            variant = "dense"
+    if variant == "windowed":
+        out = _windowed_attention(q, k, v, window, ctx)
+    elif variant == "chunked":
+        out = _chunked_attention(q, k, v, causal, ctx)
+    elif variant == "flash":
+        # Pallas TPU kernel (kernels/flash_attention.py); interpret mode off
+        # TPU. Opt-in (train_attn_variant="flash"): pallas custom-calls are
+        # not part of the CPU dry-run's compiled path.
+        from ..kernels.flash_attention import flash_attention
+        assert causal, "flash variant is causal self-attention"
+        out = flash_attention(q, k, v,
+                              interpret=jax.default_backend() != "tpu")
+        out = ctx.cs(out, "batch", None, "model", None)
+    else:
+        out = _dense_attention(q, k, v, causal, ctx)
+    dt = x.dtype
+    y = out.reshape(B, S, n_heads * head_dim) @ params["wo"].astype(dt)
+    return ctx.cs(y, "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, KV cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(params: Dict, x: jax.Array, cache_k: jax.Array,
+                     cache_v: jax.Array, pos: jax.Array, *, n_heads: int,
+                     n_kv: int, head_dim: int, rope_theta: float = 10000.0,
+                     window: int = 0, ctx: ShardCtx = NO_SHARD):
+    """One decode step. x: (B, 1, d); cache_[kv]: (B, Sc, Hkv, hd) where Sc
+    is the full context (decode_32k) or the ring-buffer window (long_500k
+    windowed). Returns (y, new_cache_k, new_cache_v).
+
+    The new KV is written at ``pos % Sc`` (identity when Sc == full context,
+    ring-buffer semantics when Sc == window). The cache S dim may be sharded
+    ('seq' logical axis) — GSPMD inserts the softmax reductions.
+    """
+    B, _, d = x.shape
+    Sc = cache_k.shape[1]
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, ctx)
+    cos, sin = rope_angles(pos[:, None], head_dim, rope_theta)  # (B,1,half)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    slot = (pos % Sc).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+    cache_k = ctx.cs(cache_k, "batch", "seq", None, None)
+    cache_v = ctx.cs(cache_v, "batch", "seq", None, None)
+    scale = head_dim ** -0.5
+    # grouped GQA: contract against the cache in its native layout — no
+    # repeated-KV materialization (see _gqa_scores note)
+    s = _gqa_scores(q, cache_k) * scale  # (B,K,G,1,S)
+    kv_pos = jnp.arange(Sc)
+    # slots are ring-buffer indices, not positions: a slot is valid once
+    # written, i.e. slot < pos+1 before wrap-around, all slots after. RoPE
+    # was applied at absolute positions so scores stay correct regardless
+    # of slot order. (window == 0 means Sc is the full context, where slot
+    # index == position and the same formula is the causal mask.)
+    valid = kv_pos[None, :] < jnp.minimum(pos[:, None] + 1, Sc)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    w = softmax_fp32(s).astype(q.dtype)
+    out = _gqa_av(w, cache_v)
+    y = out.reshape(B, 1, n_heads * head_dim) @ params["wo"].astype(x.dtype)
+    return ctx.cs(y, "batch", None, None), cache_k, cache_v

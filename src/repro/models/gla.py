@@ -1,0 +1,93 @@
+"""Chunkwise gated linear attention — shared core for Mamba2 SSD and mLSTM.
+
+Both blocks are instances of the recurrence
+
+    h_t = exp(g_t) · h_{t-1} + s_t · K_t ⊗ x_t          (state (H, N, P))
+    y_t = Q_t · h_t
+
+with per-block choices of gate ``g``, scale ``s``, keys ``K`` and queries
+``Q`` (SSD: g = Δ·A, s = Δ, K/Q = B/C shared across heads; mLSTM: g = log f,
+s = i, K/Q = k/q per head). The chunkwise-parallel form splits S into chunks
+of Q_len: intra-chunk terms are dense matmuls (MXU work), inter-chunk state
+is a short scan over S/Q_len steps — the TPU-friendly formulation of a
+sub-quadratic sequence mixer (this is what makes long_500k native for the
+ssm/hybrid archs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_chunked(xv: jax.Array, log_decay: jax.Array, scale: jax.Array,
+                K: jax.Array, Q: jax.Array, chunk: int = 128,
+                init_state: jax.Array | None = None):
+    """Returns (y, final_state).
+
+    xv:        (B, S, H, P) values
+    log_decay: (B, S, H)    per-step log gate (≤ 0 for stability)
+    scale:     (B, S, H)    per-step input scale
+    K, Q:      (B, S, H, N) or (B, S, N) (shared across heads)
+    """
+    B, S, H, P = xv.shape
+    if K.ndim == 3:
+        K = jnp.broadcast_to(K[:, :, None, :], (B, S, H, K.shape[-1]))
+    if Q.ndim == 3:
+        Q = jnp.broadcast_to(Q[:, :, None, :], (B, S, H, Q.shape[-1]))
+    N = K.shape[-1]
+    assert S % chunk == 0, "pad sequence to a chunk multiple first"
+    nc = S // chunk
+
+    r4 = lambda t: t.reshape(B, nc, chunk, *t.shape[2:])
+    xv_c, g_c, s_c = r4(xv), r4(log_decay), r4(scale)
+    K_c, Q_c = r4(K), r4(Q)
+
+    cum = jnp.cumsum(g_c.astype(jnp.float32), axis=2)       # (B,nc,Q,H)
+    # intra-chunk: M[h,q,k] = (Q[q]·K[k]) exp(cum[q]-cum[k]) s[k]  (k ≤ q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    decay = decay.transpose(0, 1, 4, 2, 3).astype(xv.dtype)  # (B,nc,H,Q,Q)
+    qk = jnp.einsum("bcqhn,bckhn->bchqk", Q_c, K_c)
+    M = qk * decay * s_c.astype(xv.dtype).transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", M, xv_c)
+
+    # chunk-final states
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,Q,H)
+    kx = (dec_to_end * s_c.astype(jnp.float32)).astype(xv.dtype)
+    h_chunk = jnp.einsum("bckh,bckhn,bckhp->bchnp", kx, K_c, xv_c)
+    chunk_decay = jnp.exp(cum[:, :, -1, :]).astype(xv.dtype)  # (B,nc,H)
+
+    def step(h, inp):
+        hc, cd = inp
+        h_new = h * cd[:, :, None, None] + hc
+        return h_new, h
+
+    h0 = (init_state if init_state is not None
+          else jnp.zeros((B, H, N, P), xv.dtype))
+    hs = jnp.swapaxes(h_chunk, 0, 1)
+    cds = jnp.swapaxes(chunk_decay, 0, 1)
+    h_last, h_prev = jax.lax.scan(step, h0, (hs, cds))
+    h_prev = jnp.swapaxes(h_prev, 0, 1)                     # (B,nc,H,N,P)
+
+    dec_from_start = jnp.exp(cum).astype(xv.dtype)          # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqhn,bcqh,bchnp->bcqhp",
+                         Q_c, dec_from_start, h_prev)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y, h_last
+
+
+def gla_decode_step(h: jax.Array, xv: jax.Array, log_decay: jax.Array,
+                    scale: jax.Array, K: jax.Array, Q: jax.Array):
+    """Single-token recurrence. h: (B,H,N,P); xv: (B,H,P);
+    log_decay/scale: (B,H); K/Q: (B,H,N) or (B,N)."""
+    B, H = log_decay.shape
+    if K.ndim == 2:
+        K = jnp.broadcast_to(K[:, None, :], (B, H, K.shape[-1]))
+    if Q.ndim == 2:
+        Q = jnp.broadcast_to(Q[:, None, :], K.shape)
+    decay = jnp.exp(log_decay.astype(jnp.float32)).astype(xv.dtype)
+    upd = jnp.einsum("bhn,bhp->bhnp", K, scale.astype(xv.dtype)[..., None] * xv)
+    h_new = h * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Q, h_new)
+    return y, h_new

@@ -1,0 +1,134 @@
+"""Functional building blocks shared by all architectures.
+
+Params are plain pytrees (nested dicts of jnp arrays); layers are pure
+functions. Sharding is injected with `jax.lax.with_sharding_constraint`
+through a :class:`ShardCtx` carrying logical→mesh-axis specs so the same
+model code runs on the single-pod and multi-pod meshes (and unsharded on one
+CPU device for smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Sharding context
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Logical axis → mesh axis mapping.
+
+    ``batch`` is a tuple of mesh axes the batch dim is sharded over ((
+    'pod','data') on the multi-pod mesh), ``model`` the tensor-parallel
+    axis, ``seq`` the sequence-sharding axis for long-context decode.
+    ``active=False`` (smoke tests, no mesh) turns every constraint into a
+    no-op."""
+
+    batch: Tuple[str, ...] = ()
+    model: Optional[str] = None
+    seq: Optional[str] = None
+    active: bool = False
+    # data-parallel degree: lets layers form per-data-shard groups with
+    # static shapes (e.g. dp-local MoE dispatch, §Perf iteration 3)
+    dp: int = 1
+
+    def cs(self, x: jax.Array, *axes) -> jax.Array:
+        """Constrain array to a PartitionSpec built from logical axis names
+        ('batch' | 'model' | 'seq' | None per dim)."""
+        if not self.active:
+            return x
+        spec = []
+        for a in axes:
+            if a == "batch":
+                spec.append(self.batch if self.batch else None)
+            elif a == "model":
+                spec.append(self.model)
+            elif a == "seq":
+                spec.append(self.seq)
+            else:
+                spec.append(None)
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+NO_SHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)
+            ).astype(dt)
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float = 10000.0) -> Tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int → (cos, sin) of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, hd); cos/sin: (..., S, hd//2), broadcast over H."""
+    half = x.shape[-1] // 2
+    c = jnp.expand_dims(cos, -2).astype(x.dtype)   # (..., S, 1, half)
+    s = jnp.expand_dims(sin, -2).astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def swiglu(x_gate: jax.Array, x_up: jax.Array) -> jax.Array:
+    return jax.nn.silu(x_gate) * x_up
+
+
+def softmax_fp32(scores: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(scores.astype(jnp.float32), axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": dense_init(k1, d, f, dtype),
+        "wu": dense_init(k2, d, f, dtype),
+        "wd": dense_init(k3, f, d, dtype),
+    }
+
+
+def mlp_apply(params: Dict[str, jax.Array], x: jax.Array,
+              ctx: ShardCtx = NO_SHARD) -> jax.Array:
+    dt = x.dtype
+    h = swiglu(x @ params["wg"].astype(dt), x @ params["wu"].astype(dt))
+    h = ctx.cs(h, "batch", None, "model")
+    out = h @ params["wd"].astype(dt)
+    return ctx.cs(out, "batch", None, None)

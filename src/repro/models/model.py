@@ -1,0 +1,643 @@
+"""LM assembly for all ten assigned architectures.
+
+One :class:`LM` wraps an ArchConfig into init / apply / decode / loss. Layers
+are grouped into *scan groups* (heterogeneous stacks supported: llama4's
+dense+MoE interleave, xLSTM's (m, s) pattern, zamba2's 6-Mamba+shared-attn
+super-layer) and `jax.lax.scan`ned so HLO size — and dry-run compile time
+for 80 (arch × shape × mesh) cells — is depth-independent. `jax.checkpoint`
+around the group body implements activation rematerialization.
+
+Decode carries a pytree cache stacked on the group axis and scans groups,
+giving O(1) HLO for the serve step too.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import attention as A
+from . import moe as MOE
+from . import ssm as SSM
+from . import xlstm as XL
+from .layers import (NO_SHARD, ShardCtx, embed_init, mlp_apply, mlp_init,
+                     rmsnorm)
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+class LM:
+    """Functional language model for one architecture config."""
+
+    def __init__(self, cfg: ArchConfig, ctx: ShardCtx = NO_SHARD):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.dtype = _dtype(cfg.dtype)
+        self.param_dtype = _dtype(cfg.param_dtype)
+        self.vp = cfg.vocab_padded()
+        self._plan_groups()
+
+    # ------------------------------------------------------------------
+    # Layer grouping
+    # ------------------------------------------------------------------
+    def _plan_groups(self):
+        cfg = self.cfg
+        if cfg.family == "hybrid" and cfg.hybrid_attn_every:
+            self.group_size = cfg.hybrid_attn_every
+            self.n_groups = cfg.n_layers // self.group_size
+            self.tail_layers = cfg.n_layers - self.n_groups * self.group_size
+            self.group_kind = "hybrid"
+        elif cfg.xlstm_pattern:
+            self.group_size = len(cfg.xlstm_pattern)
+            assert cfg.n_layers % self.group_size == 0
+            self.n_groups = cfg.n_layers // self.group_size
+            self.tail_layers = 0
+            self.group_kind = "xlstm"
+        elif cfg.moe_experts and cfg.moe_every > 1:
+            self.group_size = cfg.moe_every
+            assert cfg.n_layers % cfg.moe_every == 0
+            self.n_groups = cfg.n_layers // cfg.moe_every
+            self.tail_layers = 0
+            self.group_kind = "moe_interleaved"
+        elif cfg.moe_experts:
+            self.group_size, self.n_groups = 1, cfg.n_layers
+            self.tail_layers = 0
+            self.group_kind = "moe"
+        elif cfg.family == "ssm":
+            self.group_size, self.n_groups = 1, cfg.n_layers
+            self.tail_layers = 0
+            self.group_kind = "ssm"
+        else:
+            self.group_size, self.n_groups = 1, cfg.n_layers
+            self.tail_layers = 0
+            self.group_kind = "dense"
+
+    # ------------------------------------------------------------------
+    # Init
+    # ------------------------------------------------------------------
+    def _init_attn(self, key):
+        cfg = self.cfg
+        return A.attn_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.resolved_head_dim, qk_norm=cfg.qk_norm,
+                           dtype=self.param_dtype)
+
+    def _init_dense_layer(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "attn": self._init_attn(k1),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, self.param_dtype),
+            "ln1": jnp.ones((cfg.d_model,), self.param_dtype),
+            "ln2": jnp.ones((cfg.d_model,), self.param_dtype),
+        }
+
+    def _init_moe_layer(self, key):
+        cfg = self.cfg
+        k1, k2 = jax.random.split(key)
+        return {
+            "attn": self._init_attn(k1),
+            "moe": MOE.moe_init(k2, cfg.d_model, cfg.d_ff, cfg.moe_experts,
+                                self.param_dtype),
+            "ln1": jnp.ones((cfg.d_model,), self.param_dtype),
+            "ln2": jnp.ones((cfg.d_model,), self.param_dtype),
+        }
+
+    def _init_group(self, key):
+        cfg = self.cfg
+        kind = self.group_kind
+        if kind == "dense":
+            return self._init_dense_layer(key)
+        if kind == "moe":
+            return self._init_moe_layer(key)
+        if kind == "moe_interleaved":
+            ks = jax.random.split(key, self.group_size)
+            return {
+                "dense": jax.vmap(self._init_dense_layer)(ks[:-1]),
+                "moe": self._init_moe_layer(ks[-1]),
+            }
+        if kind == "ssm":
+            return {
+                "ssm": SSM.ssm_init(key, cfg.d_model, state=cfg.ssm_state,
+                                    expand=cfg.ssm_expand,
+                                    head_dim=cfg.ssm_head_dim,
+                                    dtype=self.param_dtype),
+                "ln": jnp.ones((cfg.d_model,), self.param_dtype),
+            }
+        if kind == "hybrid":
+            ks = jax.random.split(key, self.group_size)
+            def one(k):
+                return {
+                    "ssm": SSM.ssm_init(k, cfg.d_model, state=cfg.ssm_state,
+                                        expand=cfg.ssm_expand,
+                                        head_dim=cfg.ssm_head_dim,
+                                        dtype=self.param_dtype),
+                    "ln": jnp.ones((cfg.d_model,), self.param_dtype),
+                }
+            return jax.vmap(one)(ks)
+        if kind == "xlstm":
+            out = {}
+            ks = jax.random.split(key, self.group_size)
+            for i, p in enumerate(cfg.xlstm_pattern):
+                if p == "m":
+                    out[f"m{i}"] = XL.mlstm_init(ks[i], cfg.d_model,
+                                                 cfg.n_heads, self.param_dtype)
+                else:
+                    out[f"s{i}"] = XL.slstm_init(ks[i], cfg.d_model,
+                                                 cfg.n_heads, self.param_dtype)
+                out[f"ln{i}"] = jnp.ones((cfg.d_model,), self.param_dtype)
+            return out
+        raise ValueError(kind)
+
+    def init_params(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        gkeys = jax.random.split(keys[0], self.n_groups)
+        params: Dict[str, Any] = {
+            "embed": embed_init(keys[1], self.vp, cfg.d_model,
+                                self.param_dtype),
+            "blocks": jax.vmap(self._init_group)(gkeys),
+            "final_norm": jnp.ones((cfg.d_model,), self.param_dtype),
+            "unembed": embed_init(keys[2], cfg.d_model, self.vp,
+                                  self.param_dtype).reshape(cfg.d_model, self.vp),
+        }
+        if self.group_kind == "hybrid":
+            params["shared_attn"] = {
+                "attn": self._init_attn(keys[3]),
+                "ln": jnp.ones((cfg.d_model,), self.param_dtype),
+            }
+            if cfg.d_ff:
+                params["shared_attn"]["mlp"] = mlp_init(
+                    jax.random.split(keys[3])[1], cfg.d_model, cfg.d_ff,
+                    self.param_dtype)
+                params["shared_attn"]["ln2"] = jnp.ones(
+                    (cfg.d_model,), self.param_dtype)
+            if self.tail_layers:
+                tkeys = jax.random.split(keys[4], self.tail_layers)
+                def one(k):
+                    return {
+                        "ssm": SSM.ssm_init(k, cfg.d_model,
+                                            state=cfg.ssm_state,
+                                            expand=cfg.ssm_expand,
+                                            head_dim=cfg.ssm_head_dim,
+                                            dtype=self.param_dtype),
+                        "ln": jnp.ones((cfg.d_model,), self.param_dtype),
+                    }
+                params["tail"] = jax.vmap(one)(tkeys)
+        if cfg.is_encdec:
+            ekeys = jax.random.split(keys[5], cfg.encoder_layers)
+            params["encoder"] = jax.vmap(self._init_dense_layer)(ekeys)
+            params["enc_norm"] = jnp.ones((cfg.d_model,), self.param_dtype)
+            ckeys = jax.random.split(keys[6], self.n_groups)
+            params["cross"] = jax.vmap(
+                lambda k: {"attn": self._init_attn(k),
+                           "ln": jnp.ones((cfg.d_model,), self.param_dtype)}
+            )(ckeys)
+        return params
+
+    def abstract_params(self):
+        """ShapeDtypeStruct tree — zero-allocation init for the dry-run."""
+        return jax.eval_shape(
+            lambda k: self.init_params(k), jax.random.PRNGKey(0))
+
+    # ------------------------------------------------------------------
+    # Forward (train / prefill)
+    # ------------------------------------------------------------------
+    def _attn_kwargs(self, window: int, variant: str):
+        cfg = self.cfg
+        return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    head_dim=cfg.resolved_head_dim,
+                    rope_theta=cfg.rope_theta, window=window,
+                    variant=variant, ctx=self.ctx)
+
+    def _apply_group(self, gp, x, *, window: int, variant: str,
+                     enc_out=None, aux_acc=None):
+        cfg = self.cfg
+        ctx = self.ctx
+        kind = self.group_kind
+        akw = self._attn_kwargs(window, variant)
+        aux = jnp.zeros((), jnp.float32)
+        if kind in ("dense", "moe"):
+            h = rmsnorm(x, gp["ln1"])
+            x = x + A.attention_apply(gp["attn"], h, **akw)
+            if enc_out is not None and "cross" in gp:
+                hc = rmsnorm(x, gp["cross"]["ln"])
+                x = x + A.attention_apply(
+                    gp["cross"]["attn"], hc, causal=False, use_rope=False,
+                    kv_override=self._encode_kv(gp["cross"]["attn"], enc_out),
+                    **akw)
+            h = rmsnorm(x, gp["ln2"])
+            if kind == "moe":
+                y, aux = MOE.moe_apply(gp["moe"], h,
+                                       n_experts=cfg.moe_experts,
+                                       top_k=cfg.moe_topk,
+                                       capacity_factor=cfg.moe_capacity_factor,
+                                       ctx=ctx)
+                x = x + y
+            else:
+                x = x + mlp_apply(gp["mlp"], h, ctx)
+            return x, aux
+        if kind == "moe_interleaved":
+            def dense_body(xx, lp):
+                h = rmsnorm(xx, lp["ln1"])
+                xx = xx + A.attention_apply(lp["attn"], h, **akw)
+                h = rmsnorm(xx, lp["ln2"])
+                return xx + mlp_apply(lp["mlp"], h, ctx), None
+            x, _ = jax.lax.scan(dense_body, x, gp["dense"])
+            h = rmsnorm(x, gp["moe"]["ln1"])
+            x = x + A.attention_apply(gp["moe"]["attn"], h, **akw)
+            h = rmsnorm(x, gp["moe"]["ln2"])
+            y, aux = MOE.moe_apply(gp["moe"]["moe"], h,
+                                   n_experts=cfg.moe_experts,
+                                   top_k=cfg.moe_topk,
+                                   capacity_factor=cfg.moe_capacity_factor,
+                                   ctx=ctx)
+            return x + y, aux
+        if kind == "ssm":
+            h = rmsnorm(x, gp["ln"])
+            return x + SSM.ssm_apply(gp["ssm"], h, state=cfg.ssm_state,
+                                     expand=cfg.ssm_expand,
+                                     head_dim=cfg.ssm_head_dim, ctx=ctx), aux
+        if kind == "hybrid":
+            def body(xx, lp):
+                h = rmsnorm(xx, lp["ln"])
+                return xx + SSM.ssm_apply(lp["ssm"], h, state=cfg.ssm_state,
+                                          expand=cfg.ssm_expand,
+                                          head_dim=cfg.ssm_head_dim,
+                                          ctx=ctx), None
+            shared = gp.pop("__shared__") if "__shared__" in gp else None
+            x, _ = jax.lax.scan(body, x, gp)
+            if shared is not None:
+                # zamba2: ONE shared-weight transformer block (attn + MLP)
+                # applied after every group of ssm layers (weights broadcast,
+                # not scanned)
+                h = rmsnorm(x, shared["ln"])
+                x = x + A.attention_apply(shared["attn"], h, **akw)
+                if "mlp" in shared:
+                    h = rmsnorm(x, shared["ln2"])
+                    x = x + mlp_apply(shared["mlp"], h, ctx)
+            return x, aux
+        if kind == "xlstm":
+            for i, p in enumerate(cfg.xlstm_pattern):
+                h = rmsnorm(x, gp[f"ln{i}"])
+                if p == "m":
+                    x = x + XL.mlstm_apply(gp[f"m{i}"], h,
+                                           n_heads=cfg.n_heads, ctx=ctx)
+                else:
+                    x = x + XL.slstm_apply(gp[f"s{i}"], h,
+                                           n_heads=cfg.n_heads, ctx=ctx)
+            return x, aux
+        raise ValueError(kind)
+
+    def _encode_kv(self, attn_params, enc_out):
+        cfg = self.cfg
+        B, T, _ = enc_out.shape
+        hd = cfg.resolved_head_dim
+        dt = enc_out.dtype
+        k = (enc_out @ attn_params["wk"].astype(dt)
+             ).reshape(B, T, cfg.n_kv_heads, hd)
+        v = (enc_out @ attn_params["wv"].astype(dt)
+             ).reshape(B, T, cfg.n_kv_heads, hd)
+        return k, v
+
+    def _run_encoder(self, params, frontend_embeds, window, variant):
+        akw = self._attn_kwargs(window, variant)
+        def body(x, lp):
+            h = rmsnorm(x, lp["ln1"])
+            x = x + A.attention_apply(lp["attn"], h, causal=False, **akw)
+            h = rmsnorm(x, lp["ln2"])
+            return x + mlp_apply(lp["mlp"], h, self.ctx), None
+        x, _ = jax.lax.scan(body, frontend_embeds.astype(self.dtype),
+                            params["encoder"])
+        return rmsnorm(x, params["enc_norm"])
+
+    def apply(self, params, tokens, frontend_embeds=None, *, window: int = 0,
+              variant: str = "auto",
+              last_only: bool = False) -> Tuple[jax.Array, jax.Array]:
+        """tokens: (B, S) int32 → (logits (B, S', vp), aux_loss).
+
+        For decoder-only VLM/audio archs, frontend embeds are *prepended* to
+        the token embeds (S' = T_f + S); for enc-dec they feed the encoder.
+        """
+        cfg = self.cfg
+        ctx = self.ctx
+        x = jnp.take(params["embed"], tokens, axis=0).astype(self.dtype)
+        x = ctx.cs(x, "batch", None, None)
+        enc_out = None
+        if cfg.is_encdec:
+            assert frontend_embeds is not None
+            enc_out = self._run_encoder(params, frontend_embeds, 0, variant)
+        elif frontend_embeds is not None:
+            x = jnp.concatenate([frontend_embeds.astype(self.dtype), x], 1)
+            x = ctx.cs(x, "batch", None, None)
+
+        group_fn = functools.partial(self._apply_group, window=window,
+                                     variant=variant)
+
+        shared = params.get("shared_attn")
+
+        def scan_body(carry, gp):
+            xx, aux = carry
+            if cfg.is_encdec:
+                gp = dict(gp)  # merge cross-attn params into the group
+                gp["cross"] = gp.pop("__cross__")
+            if shared is not None:
+                gp = dict(gp)
+                gp["__shared__"] = shared  # broadcast, not scanned
+            xx, a = group_fn(gp, xx, enc_out=enc_out)
+            return (xx, aux + a), None
+
+        body = scan_body
+        if cfg.remat:
+            body = jax.checkpoint(scan_body, prevent_cse=False)
+
+        blocks = params["blocks"]
+        if cfg.is_encdec:
+            blocks = dict(blocks)
+            blocks["__cross__"] = params["cross"]
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   blocks)
+        if self.group_kind == "hybrid" and self.tail_layers:
+            def tail_body(xx, lp):
+                h = rmsnorm(xx, lp["ln"])
+                return xx + SSM.ssm_apply(lp["ssm"], h, state=cfg.ssm_state,
+                                          expand=cfg.ssm_expand,
+                                          head_dim=cfg.ssm_head_dim,
+                                          ctx=ctx), None
+            x, _ = jax.lax.scan(tail_body, x, params["tail"])
+        if last_only:
+            x = x[:, -1:]   # prefill: only the next-token logits matter
+        x = rmsnorm(x, params["final_norm"])
+        logits = x @ params["unembed"].astype(self.dtype)
+        logits = ctx.cs(logits, "batch", None, "model")
+        return logits, aux
+
+    # ------------------------------------------------------------------
+    # Loss
+    # ------------------------------------------------------------------
+    def loss(self, params, tokens, frontend_embeds=None, *, window: int = 0,
+             variant: str = "auto") -> jax.Array:
+        cfg = self.cfg
+        logits, aux = self.apply(params, tokens, frontend_embeds,
+                                 window=window, variant=variant)
+        S = tokens.shape[1]
+        logits = logits[:, -S:]               # drop frontend positions
+        lg = logits[:, :-1].astype(jnp.float32)
+        tgt = tokens[:, 1:]
+        # mask padded vocab entries
+        vmask = jnp.arange(self.vp) < cfg.vocab_size
+        lg = jnp.where(vmask[None, None, :], lg, -1e30)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+        ce = (lse - gold).mean()
+        return ce + 0.01 * aux
+
+    # ------------------------------------------------------------------
+    # Decode
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, context: int, *, window: int = 0,
+                   src_len: int = 0) -> Dict[str, Any]:
+        """Cache pytree stacked on the group axis.
+
+        ``context`` is the KV length for attention caches (the window size
+        when windowed); SSM/xLSTM states are O(1)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        Sc = min(window, context) if window else context
+        G = self.n_groups
+        cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+        kv = lambda: jnp.zeros((G, batch, Sc, cfg.n_kv_heads, hd), self.dtype)
+        if self.group_kind in ("dense", "moe"):
+            cache["k"], cache["v"] = kv(), kv()
+        elif self.group_kind == "moe_interleaved":
+            n_attn = self.group_size
+            shp = (G, n_attn, batch, Sc, cfg.n_kv_heads, hd)
+            cache["k"] = jnp.zeros(shp, self.dtype)
+            cache["v"] = jnp.zeros(shp, self.dtype)
+        elif self.group_kind == "ssm":
+            shp = SSM.ssm_state_shape(batch, cfg.d_model, state=cfg.ssm_state,
+                                      expand=cfg.ssm_expand,
+                                      head_dim=cfg.ssm_head_dim)
+            cache["ssm"] = jnp.zeros((G,) + shp, self.dtype)
+        elif self.group_kind == "hybrid":
+            shp = SSM.ssm_state_shape(batch, cfg.d_model, state=cfg.ssm_state,
+                                      expand=cfg.ssm_expand,
+                                      head_dim=cfg.ssm_head_dim)
+            cache["ssm"] = jnp.zeros((G, self.group_size) + shp, self.dtype)
+            # shared attention block: weights are shared across groups but
+            # each group's invocation sees different activations, so the KV
+            # cache is per-group (G, ...)
+            cache["shared_k"] = jnp.zeros(
+                (G, batch, Sc, cfg.n_kv_heads, hd), self.dtype)
+            cache["shared_v"] = jnp.zeros_like(cache["shared_k"])
+            if self.tail_layers:
+                cache["tail_ssm"] = jnp.zeros(
+                    (self.tail_layers,) + shp, self.dtype)
+        elif self.group_kind == "xlstm":
+            for i, p in enumerate(cfg.xlstm_pattern):
+                if p == "m":
+                    shp = XL.mlstm_state_shape(batch, cfg.d_model, cfg.n_heads)
+                else:
+                    shp = XL.slstm_state_shape(batch, cfg.d_model)
+                cache[f"x{i}"] = jnp.zeros((G,) + shp,
+                                           jnp.float32 if p == "s" else self.dtype)
+        if cfg.is_encdec:
+            cache["enc_k"] = jnp.zeros(
+                (G, batch, src_len, cfg.n_kv_heads, hd), self.dtype)
+            cache["enc_v"] = jnp.zeros_like(cache["enc_k"])
+        return cache
+
+    def decode_step(self, params, cache, token, *, window: int = 0):
+        """token: (B,) int32 → (logits (B, vp), new cache)."""
+        cfg = self.cfg
+        ctx = self.ctx
+        pos = cache["pos"]
+        x = jnp.take(params["embed"], token[:, None], axis=0).astype(self.dtype)
+        x = ctx.cs(x, "batch", None, None)
+        akw = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                   head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+                   window=window, ctx=ctx)
+        kind = self.group_kind
+
+        if kind in ("dense", "moe"):
+            encdec = cfg.is_encdec
+
+            def body(x, gp, ck, cv, cek, cev):
+                h = rmsnorm(x, gp["ln1"])
+                y, nk, nv = A.attention_decode(gp["attn"], h, ck, cv, pos,
+                                               **akw)
+                x = x + y
+                if encdec:
+                    hc = rmsnorm(x, gp["cross"]["ln"])
+                    x = x + self._cross_decode(gp["cross"]["attn"], hc,
+                                               cek, cev)
+                h = rmsnorm(x, gp["ln2"])
+                if kind == "moe":
+                    y2, _ = MOE.moe_apply(gp["moe"], h,
+                                          n_experts=cfg.moe_experts,
+                                          top_k=cfg.moe_topk,
+                                          capacity_factor=cfg.moe_capacity_factor,
+                                          ctx=ctx)
+                    x = x + y2
+                else:
+                    x = x + mlp_apply(gp["mlp"], h, ctx)
+                return x, (nk, nv)
+
+            if encdec:
+                blocks = dict(params["blocks"])
+                blocks["cross"] = params["cross"]
+                xs = (blocks, cache["k"], cache["v"],
+                      cache["enc_k"], cache["enc_v"])
+                x, (nk, nv) = jax.lax.scan(
+                    lambda x, sl: body(x, *sl), x, xs)
+            else:
+                xs = (params["blocks"], cache["k"], cache["v"])
+                x, (nk, nv) = jax.lax.scan(
+                    lambda x, sl: body(x, sl[0], sl[1], sl[2], None, None),
+                    x, xs)
+            cache = dict(cache)
+            cache["k"], cache["v"] = nk, nv
+
+        elif kind == "moe_interleaved":
+            def group_body(x, sl):
+                gp, ck, cv = sl   # ck: (n_attn, B, Sc, H, hd)
+                nks, nvs = [], []
+                for li in range(self.group_size - 1):
+                    lp = jax.tree.map(lambda t: t[li], gp["dense"])
+                    h = rmsnorm(x, lp["ln1"])
+                    y, nk, nv = A.attention_decode(lp["attn"], h, ck[li],
+                                                   cv[li], pos, **akw)
+                    x = x + y
+                    h = rmsnorm(x, lp["ln2"])
+                    x = x + mlp_apply(lp["mlp"], h, ctx)
+                    nks.append(nk); nvs.append(nv)
+                mp = gp["moe"]
+                h = rmsnorm(x, mp["ln1"])
+                y, nk, nv = A.attention_decode(mp["attn"], h, ck[-1], cv[-1],
+                                               pos, **akw)
+                x = x + y
+                nks.append(nk); nvs.append(nv)
+                h = rmsnorm(x, mp["ln2"])
+                y2, _ = MOE.moe_apply(mp["moe"], h, n_experts=cfg.moe_experts,
+                                      top_k=cfg.moe_topk,
+                                      capacity_factor=cfg.moe_capacity_factor,
+                                      ctx=ctx)
+                x = x + y2
+                return x, (jnp.stack(nks), jnp.stack(nvs))
+
+            x, (nk, nv) = jax.lax.scan(group_body, x,
+                                       (params["blocks"], cache["k"],
+                                        cache["v"]))
+            cache = dict(cache)
+            cache["k"], cache["v"] = nk, nv
+
+        elif kind == "ssm":
+            def body(x, sl):
+                gp, st = sl
+                h = rmsnorm(x, gp["ln"])
+                y, st2 = SSM.ssm_decode(gp["ssm"], h, st, state=cfg.ssm_state,
+                                        expand=cfg.ssm_expand,
+                                        head_dim=cfg.ssm_head_dim, ctx=ctx)
+                return x + y, st2
+            x, st = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+            cache = dict(cache)
+            cache["ssm"] = st
+
+        elif kind == "hybrid":
+            shared = params["shared_attn"]
+
+            def group_body(x, sl):
+                gp, st, sk, sv = sl
+                sts = []
+                for li in range(self.group_size):
+                    lp = jax.tree.map(lambda t: t[li], gp)
+                    h = rmsnorm(x, lp["ln"])
+                    y, st2 = SSM.ssm_decode(lp["ssm"], h, st[li],
+                                            state=cfg.ssm_state,
+                                            expand=cfg.ssm_expand,
+                                            head_dim=cfg.ssm_head_dim,
+                                            ctx=ctx)
+                    x = x + y
+                    sts.append(st2)
+                # shared attention block: weights broadcast from the carry
+                # closure, KV cache scanned per group
+                h = rmsnorm(x, shared["ln"])
+                y, sk, sv = A.attention_decode(shared["attn"], h, sk, sv,
+                                               pos, **akw)
+                x = x + y
+                if "mlp" in shared:
+                    h = rmsnorm(x, shared["ln2"])
+                    x = x + mlp_apply(shared["mlp"], h, ctx)
+                return x, (jnp.stack(sts), sk, sv)
+
+            x, (st, sk, sv) = jax.lax.scan(
+                group_body, x, (params["blocks"], cache["ssm"],
+                                cache["shared_k"], cache["shared_v"]))
+            cache = dict(cache)
+            cache["ssm"], cache["shared_k"], cache["shared_v"] = st, sk, sv
+            if self.tail_layers:
+                def tail_body(x, sl):
+                    lp, st0 = sl
+                    h = rmsnorm(x, lp["ln"])
+                    y, st2 = SSM.ssm_decode(lp["ssm"], h, st0,
+                                            state=cfg.ssm_state,
+                                            expand=cfg.ssm_expand,
+                                            head_dim=cfg.ssm_head_dim,
+                                            ctx=ctx)
+                    return x + y, st2
+                x, tst = jax.lax.scan(tail_body, x,
+                                      (params["tail"], cache["tail_ssm"]))
+                cache["tail_ssm"] = tst
+
+        elif kind == "xlstm":
+            states = tuple(cache[f"x{i}"]
+                           for i in range(len(cfg.xlstm_pattern)))
+
+            def body(x, sl):
+                gp = sl[0]
+                sts = sl[1:]
+                new_sts = []
+                for i, p in enumerate(cfg.xlstm_pattern):
+                    h = rmsnorm(x, gp[f"ln{i}"])
+                    if p == "m":
+                        y, st2 = XL.mlstm_decode(gp[f"m{i}"], h, sts[i],
+                                                 n_heads=cfg.n_heads, ctx=ctx)
+                    else:
+                        y, st2 = XL.slstm_decode(gp[f"s{i}"], h, sts[i],
+                                                 n_heads=cfg.n_heads, ctx=ctx)
+                    x = x + y
+                    new_sts.append(st2)
+                return x, tuple(new_sts)
+
+            x, new_states = jax.lax.scan(body, x,
+                                         (params["blocks"],) + states)
+            cache = dict(cache)
+            for i in range(len(cfg.xlstm_pattern)):
+                cache[f"x{i}"] = new_states[i]
+        else:
+            raise ValueError(kind)
+
+        x = rmsnorm(x, params["final_norm"])
+        logits = (x @ params["unembed"].astype(self.dtype))[:, 0]
+        logits = ctx.cs(logits, "batch", "model")
+        cache["pos"] = pos + 1
+        return logits, cache
+
+    def _cross_decode(self, attn_params, x, enc_k, enc_v):
+        from .attention import _gqa_av, _gqa_scores
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        B = x.shape[0]
+        dt = x.dtype
+        q = (x @ attn_params["wq"].astype(dt)).reshape(B, 1, cfg.n_heads, hd)
+        s = _gqa_scores(q, enc_k) * hd ** -0.5
+        w = jax.nn.softmax(s, axis=-1).astype(dt)
+        out = _gqa_av(w, enc_v)
+        return out.reshape(B, 1, cfg.n_heads * hd) @ \
+            attn_params["wo"].astype(dt)

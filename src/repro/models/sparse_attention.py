@@ -1,0 +1,109 @@
+"""Block-sparse attention masks through the paper's format machinery.
+
+The (q-block × kv-block) mask of a sparse attention pattern IS a sparse
+matrix; we store it in the paper's formats (Dense row-block level ×
+Compressed column-block level — block-CSR) and reuse the same partitioning
+machinery that distributes any other sparse tensor. ``band_plan`` builds
+the sliding-window pattern used by long_500k on full-attention archs
+(DESIGN.md §4); ``block_sparse_attention`` executes attention over an
+ARBITRARY block mask by gathering only the listed kv blocks (ELL-packed,
+like the TPU kernels in kernels/layout.py).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import formats as F
+from ..core.tensor import Tensor
+from ..kernels.layout import ell_pack
+
+
+def band_plan(seq_len: int, q_block: int, window: int,
+              name: str = "attn_mask") -> Tensor:
+    """Causal sliding-window pattern as a block-CSR Tensor.
+
+    Rows = query blocks, cols = kv blocks; entry present iff some (q, kv)
+    pair inside the tile satisfies kv ≤ q and kv > q - window."""
+    nq = -(-seq_len // q_block)
+    rows, cols = [], []
+    for qb in range(nq):
+        q_hi = min((qb + 1) * q_block, seq_len) - 1
+        q_lo = qb * q_block
+        kv_lo_needed = max(q_lo - window + 1, 0)
+        for kb in range(kv_lo_needed // q_block, qb + 1):
+            rows.append(qb)
+            cols.append(kb)
+    coords = np.stack([np.array(rows), np.array(cols)], 1)
+    vals = np.ones(coords.shape[0], np.float32)
+    return Tensor.from_coo(name, (nq, nq), coords, vals, F.CSR())
+
+
+def mask_to_ell(mask: Tensor, block_r: int = 1):
+    """Pack the block mask's CSR into the ELL layout the gather kernel
+    consumes: (nq, max_blocks) kv-block ids + validity."""
+    pos = mask.levels[1].pos
+    crd = mask.levels[1].crd
+    nq = mask.shape[0]
+    counts = np.diff(pos)
+    maxb = int(counts.max()) if counts.size else 1
+    idx = np.full((nq, maxb), -1, np.int32)
+    for q in range(nq):
+        lo, hi = int(pos[q]), int(pos[q + 1])
+        idx[q, : hi - lo] = crd[lo:hi]
+    return jnp.asarray(idx)
+
+
+def block_sparse_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           block_idx: jax.Array, q_block: int,
+                           causal: bool = True,
+                           window: int = 0) -> jax.Array:
+    """Attention over an arbitrary block mask.
+
+    q, k, v: (B, S, H, hd); block_idx: (nq, maxb) kv-block ids (−1 = pad).
+    Each query block gathers only its listed kv blocks — compute scales
+    with nnz(blocks)·q_block², not S². Block sparsity is block-granular;
+    ``causal`` and ``window`` refine the mask at element granularity inside
+    edge blocks (band_plan + window reproduces exact sliding-window
+    attention).
+    """
+    B, S, H, hd = q.shape
+    nq, maxb = block_idx.shape
+    pad = nq * q_block - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qb = q.reshape(B, nq, q_block, H, hd)
+    kb = k.reshape(B, nq, q_block, H, hd)
+    vb = v.reshape(B, nq, q_block, H, hd)
+    scale = hd ** -0.5
+
+    def one_qblock(qi):
+        idx = block_idx[qi]                        # (maxb,)
+        safe = jnp.maximum(idx, 0)
+        kg = jnp.take(kb, safe, axis=1)            # (B, maxb, qb, H, hd)
+        vg = jnp.take(vb, safe, axis=1)
+        s = jnp.einsum("bqhd,bmkhd->bhqmk", qb[:, qi], kg
+                       ).astype(jnp.float32) * scale
+        q_pos = qi * q_block + jnp.arange(q_block)
+        kv_pos = safe[:, None] * q_block + jnp.arange(q_block)[None, :]
+        valid = (idx >= 0)[:, None] & (kv_pos < S)
+        if causal:
+            valid = valid[None, :, :] & \
+                (kv_pos[None] <= q_pos[:, None, None])
+        else:
+            valid = jnp.broadcast_to(valid[None], (q_block, maxb, q_block))
+        if window:
+            valid = valid & (kv_pos[None] > q_pos[:, None, None] - window)
+        s = jnp.where(valid[None, None], s, -1e30)
+        w = jax.nn.softmax(s.reshape(B, H, q_block, -1), axis=-1)
+        w = w.reshape(B, H, q_block, maxb, q_block).astype(q.dtype)
+        return jnp.einsum("bhqmk,bmkhd->bqhd", w, vg)
+
+    out = jax.lax.map(one_qblock, jnp.arange(nq))   # (nq, B, qb, H, hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_block, H, hd)
+    return out[:, :S]

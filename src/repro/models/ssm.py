@@ -1,0 +1,105 @@
+"""Mamba2-style state-space blocks (SSD) — zamba2's backbone.
+
+Training uses the chunkwise-parallel SSD form via the shared
+:mod:`repro.models.gla` core (g = Δ·A, s = Δ, K/Q = B/C projections shared
+across heads). Decode carries the (H, P, N) state — O(1) per token, which is
+what makes ``long_500k`` native for SSM/hybrid archs.
+
+Simplifications vs. the full Mamba2 (noted for fidelity): no conv1d branch,
+single B/C group, no bias terms. These do not change the distribution or
+roofline structure of the block.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .gla import gla_chunked, gla_decode_step
+from .layers import NO_SHARD, ShardCtx, dense_init, rmsnorm
+
+
+def ssm_dims(d_model: int, expand: int, head_dim: int) -> Tuple[int, int]:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    return d_inner, n_heads
+
+
+def ssm_init(key, d_model: int, *, state: int, expand: int = 2,
+             head_dim: int = 64, groups: int = 1, dtype=jnp.float32) -> Dict:
+    d_inner, n_heads = ssm_dims(d_model, expand, head_dim)
+    kin, kz, kb, kc, kdt, ko = jax.random.split(key, 6)
+    return {
+        "wx": dense_init(kin, d_model, d_inner, dtype),
+        "wz": dense_init(kz, d_model, d_inner, dtype),
+        "wB": dense_init(kb, d_model, groups * state, dtype),
+        "wC": dense_init(kc, d_model, groups * state, dtype),
+        "wdt": dense_init(kdt, d_model, n_heads, dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),          # A = -exp(A_log)
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "wo": dense_init(ko, d_inner, d_model, dtype),
+        "norm": jnp.ones((d_inner,), dtype),
+    }
+
+
+def ssm_state_shape(cfg_batch: int, d_model: int, *, state: int,
+                    expand: int = 2, head_dim: int = 64) -> Tuple[int, ...]:
+    _, H = ssm_dims(d_model, expand, head_dim)
+    return (cfg_batch, H, state, head_dim)
+
+
+def _projections(params, x):
+    dt_ = x.dtype
+    B, S, d = x.shape
+    d_inner = params["wx"].shape[1]
+    H = params["wdt"].shape[1]
+    head_dim = d_inner // H
+    xh = (x @ params["wx"].astype(dt_)).reshape(B, S, H, head_dim)
+    z = x @ params["wz"].astype(dt_)
+    Bm = x @ params["wB"].astype(dt_)
+    Cm = x @ params["wC"].astype(dt_)
+    dt = jax.nn.softplus(x.astype(jnp.float32) @
+                         params["wdt"].astype(jnp.float32))     # (B,S,H)
+    return xh, z, Bm, Cm, dt, H, head_dim, d_inner
+
+
+def ssm_apply(params: Dict, x: jax.Array, *, state: int, expand: int = 2,
+              head_dim: int = 64, chunk: int = 128,
+              ctx: ShardCtx = NO_SHARD) -> jax.Array:
+    """Training / prefill forward. x: (B, S, d)."""
+    B, S, d = x.shape
+    dt_ = x.dtype
+    xh, z, Bm, Cm, dt, H, hd, d_inner = _projections(params, x)
+    xh = ctx.cs(xh, "batch", None, "model", None)
+    A = -jnp.exp(params["A_log"])
+    log_decay = dt * A[None, None, :]
+    pad = (-S) % chunk
+    if pad:
+        f = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, dt, Bm, Cm, log_decay = map(f, (xh, dt, Bm, Cm, log_decay))
+    y, _ = gla_chunked(xh, log_decay, dt, Bm, Cm, chunk=chunk)
+    y = y[:, :S]
+    y = y + params["D"].astype(dt_)[None, None, :, None] * xh[:, :S]
+    y = y.reshape(B, S, d_inner)
+    y = rmsnorm(y, params["norm"]) * jax.nn.silu(z)
+    out = y @ params["wo"].astype(dt_)
+    return ctx.cs(out, "batch", None, None)
+
+
+def ssm_decode(params: Dict, x: jax.Array, h: jax.Array, *, state: int,
+               expand: int = 2, head_dim: int = 64,
+               ctx: ShardCtx = NO_SHARD):
+    """One decode step. x: (B, 1, d); h: (B, H, N, P) carried state."""
+    B, _, d = x.shape
+    dt_ = x.dtype
+    xh, z, Bm, Cm, dt, H, hd, d_inner = _projections(params, x)
+    A = -jnp.exp(params["A_log"])
+    log_decay = (dt * A[None, None, :])[:, 0]                 # (B,H)
+    y, h_new = gla_decode_step(h, xh[:, 0], log_decay, dt[:, 0],
+                               Bm[:, 0], Cm[:, 0])
+    y = y + params["D"].astype(dt_)[None, :, None] * xh[:, 0]
+    y = y.reshape(B, d_inner)
+    y = rmsnorm(y, params["norm"]) * jax.nn.silu(z[:, 0])
+    out = (y @ params["wo"].astype(dt_)).reshape(B, 1, d)
+    return ctx.cs(out, "batch", None, None), h_new

@@ -1,0 +1,167 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517) — xlstm-125m.
+
+- **mLSTM**: matrix-memory LSTM = gated linear attention with exponential
+  input gate and sigmoid forget gate; trained in the chunkwise-parallel form
+  via :mod:`repro.models.gla`. The normalizer state n_t is folded into the
+  same recurrence by augmenting the value vector with a constant 1 channel
+  (its output channel IS q·n_t), so one gla pass yields both numerator and
+  denominator.
+
+- **sLSTM**: scalar-memory LSTM with exponential gating and per-head
+  recurrent mixing, implemented as a `lax.scan` over time (HLO size is
+  S-independent). Decode is the single recurrence step.
+
+Both use the paper's (m, s) alternating pattern; mLSTM blocks carry the
+up-projection (pre-LN residual), sLSTM blocks are followed by a small GLU.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .gla import gla_chunked, gla_decode_step
+from .layers import NO_SHARD, ShardCtx, dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d: int, n_heads: int, dtype=jnp.float32) -> Dict:
+    head_dim = d // n_heads
+    kq, kk, kv, ki, kf, ko = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(kq, d, d, dtype),
+        "wk": dense_init(kk, d, d, dtype),
+        "wv": dense_init(kv, d, d, dtype),
+        "wi": dense_init(ki, d, n_heads, jnp.float32),
+        "wf": dense_init(kf, d, n_heads, jnp.float32),
+        "wo": dense_init(ko, d, d, dtype),
+        "norm": jnp.ones((d,), dtype),
+    }
+
+
+def _mlstm_gates(params, x):
+    """Stabilized log gates: log f = logsigmoid(f_pre), log i = i_pre - m
+    with a per-sequence max subtraction folded into the scale."""
+    f_pre = x.astype(jnp.float32) @ params["wf"]
+    i_pre = x.astype(jnp.float32) @ params["wi"]
+    log_f = jax.nn.log_sigmoid(f_pre)              # (B,S,H) ≤ 0
+    i_gate = jnp.exp(jnp.minimum(i_pre, 6.0))      # clipped exp input gate
+    return log_f, i_gate
+
+
+def mlstm_state_shape(batch: int, d: int, n_heads: int) -> Tuple[int, ...]:
+    hd = d // n_heads
+    return (batch, n_heads, hd, hd + 1)
+
+
+def mlstm_apply(params: Dict, x: jax.Array, *, n_heads: int,
+                chunk: int = 128, ctx: ShardCtx = NO_SHARD) -> jax.Array:
+    B, S, d = x.shape
+    dt_ = x.dtype
+    hd = d // n_heads
+    q = (x @ params["wq"].astype(dt_)).reshape(B, S, n_heads, hd)
+    k = (x @ params["wk"].astype(dt_)).reshape(B, S, n_heads, hd) * hd ** -0.5
+    v = (x @ params["wv"].astype(dt_)).reshape(B, S, n_heads, hd)
+    log_f, i_gate = _mlstm_gates(params, x)
+    # augment values with a ones channel -> last output channel = q·n_t
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    pad = (-S) % chunk
+    if pad:
+        f = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v_aug, log_f, i_gate = map(f, (q, k, v_aug, log_f, i_gate))
+    y_aug, _ = gla_chunked(v_aug, log_f, i_gate, k, q, chunk=chunk)
+    y_aug = y_aug[:, :S]
+    denom = jnp.maximum(jnp.abs(y_aug[..., -1:]), 1.0)
+    y = (y_aug[..., :-1] / denom).reshape(B, S, d)
+    y = rmsnorm(y, params["norm"])
+    out = y @ params["wo"].astype(dt_)
+    return ctx.cs(out, "batch", None, None)
+
+
+def mlstm_decode(params: Dict, x: jax.Array, h: jax.Array, *, n_heads: int,
+                 ctx: ShardCtx = NO_SHARD):
+    """x: (B,1,d); h: (B,H,hd,hd+1) (matrix memory + normalizer column)."""
+    B, _, d = x.shape
+    dt_ = x.dtype
+    hd = d // n_heads
+    q = (x @ params["wq"].astype(dt_)).reshape(B, n_heads, hd)
+    k = (x @ params["wk"].astype(dt_)).reshape(B, n_heads, hd) * hd ** -0.5
+    v = (x @ params["wv"].astype(dt_)).reshape(B, n_heads, hd)
+    log_f, i_gate = _mlstm_gates(params, x)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    y_aug, h_new = gla_decode_step(h, v_aug, log_f[:, 0], i_gate[:, 0], k, q)
+    denom = jnp.maximum(jnp.abs(y_aug[..., -1:]), 1.0)
+    y = (y_aug[..., :-1] / denom).reshape(B, 1, d)
+    y = rmsnorm(y, params["norm"])
+    out = y @ params["wo"].astype(dt_)
+    return ctx.cs(out, "batch", None, None), h_new
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d: int, n_heads: int, dtype=jnp.float32) -> Dict:
+    kz, ki, kf, ko, kr, kp = jax.random.split(key, 6)
+    hd = d // n_heads
+    return {
+        "wz": dense_init(kz, d, d, dtype),
+        "wi": dense_init(ki, d, d, jnp.float32),
+        "wf": dense_init(kf, d, d, jnp.float32),
+        "wo_gate": dense_init(ko, d, d, jnp.float32),
+        # block-diagonal recurrent mixing per head
+        "r": (jax.random.normal(kr, (n_heads, hd, hd)) * hd ** -0.5
+              ).astype(jnp.float32),
+        "proj": dense_init(kp, d, d, dtype),
+        "norm": jnp.ones((d,), dtype),
+    }
+
+
+def slstm_state_shape(batch: int, d: int) -> Tuple[int, ...]:
+    return (batch, 2, d)  # (c, h)
+
+
+def _slstm_step(params, n_heads, carry, xt):
+    """carry: (c, h) each (B, d); xt: (B, d) pre-activations packed."""
+    c, h = carry
+    B, d = c.shape
+    hd = d // n_heads
+    hh = h.reshape(B, n_heads, hd)
+    rec = jnp.einsum("bhx,hxy->bhy", hh, params["r"]).reshape(B, d)
+    z = jnp.tanh(xt @ params["wz"].astype(xt.dtype) + rec.astype(xt.dtype))
+    i = jnp.exp(jnp.minimum(xt.astype(jnp.float32) @ params["wi"], 6.0))
+    f = jax.nn.sigmoid(xt.astype(jnp.float32) @ params["wf"])
+    o = jax.nn.sigmoid(xt.astype(jnp.float32) @ params["wo_gate"])
+    c_new = f * c + i * z.astype(jnp.float32)
+    n = jnp.maximum(jnp.abs(c_new), 1.0)
+    h_new = o * (c_new / n)
+    return (c_new, h_new.astype(jnp.float32)), h_new.astype(xt.dtype)
+
+
+def slstm_apply(params: Dict, x: jax.Array, *, n_heads: int,
+                ctx: ShardCtx = NO_SHARD) -> jax.Array:
+    B, S, d = x.shape
+    c0 = jnp.zeros((B, d), jnp.float32)
+    h0 = jnp.zeros((B, d), jnp.float32)
+    xs = jnp.swapaxes(x, 0, 1)                    # (S, B, d)
+    (_, _), ys = jax.lax.scan(
+        lambda carry, xt: _slstm_step(params, n_heads, carry, xt), (c0, h0), xs)
+    y = jnp.swapaxes(ys, 0, 1)
+    y = rmsnorm(y, params["norm"])
+    out = y @ params["proj"].astype(x.dtype)
+    return ctx.cs(out, "batch", None, None)
+
+
+def slstm_decode(params: Dict, x: jax.Array, state: jax.Array, *,
+                 n_heads: int, ctx: ShardCtx = NO_SHARD):
+    """x: (B,1,d); state: (B,2,d) = (c,h)."""
+    c, h = state[:, 0].astype(jnp.float32), state[:, 1].astype(jnp.float32)
+    (c_new, h_new), y = _slstm_step(params, n_heads, (c, h), x[:, 0])
+    y = rmsnorm(y[:, None, :], params["norm"])
+    out = y @ params["proj"].astype(x.dtype)
+    new_state = jnp.stack([c_new, h_new], axis=1).astype(state.dtype)
+    return ctx.cs(out, "batch", None, None), new_state

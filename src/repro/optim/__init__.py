@@ -1,0 +1,6 @@
+from .adamw import AdamWState, adamw_init, adamw_update
+from .schedules import cosine_with_warmup
+from . import grad_compress
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update",
+           "cosine_with_warmup", "grad_compress"]

@@ -1,0 +1,93 @@
+"""Gradient compression for cross-pod data parallelism.
+
+Two schemes, both with error feedback so compression noise doesn't bias the
+optimizer:
+
+- **int8 quantized all-reduce**: per-tensor max-abs scaling to int8 before
+  the cross-pod reduction (4× wire-format saving on the slow pod-to-pod
+  links; intra-pod reductions stay bf16/fp32).
+
+- **top-k sparse gradient exchange** — expressed with the paper's own
+  machinery: the gradient becomes a *sparse vector* (values at top-|g|
+  coordinates), exchanged with a fused-coordinate non-zero partition. This
+  is SpDISTAL applied to the training system itself (DESIGN.md §6); the
+  dense fallback path documents the equivalent jnp ops used under jit.
+
+Both operate on a pytree and return (compressed_update, new_error_state).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8_ef(grads, err):
+    """Quantize grads+error-feedback to int8; returns (q, scales, new_err).
+
+    Under pjit, summing the dequantized values across the 'pod' axis is the
+    compressed cross-pod all-reduce; XLA keeps the int8 form on the wire
+    when the reduction is expressed over the quantized payload."""
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    comp = jax.tree.map(lambda g, e: int8_quantize(g.astype(jnp.float32) + e),
+                        grads, err)
+    q = jax.tree.map(lambda c: c[0], comp,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda c: c[1], comp,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(
+        lambda g, e, qq, s: g.astype(jnp.float32) + e - int8_dequantize(qq, s),
+        grads, err, q, scales)
+    return q, scales, new_err
+
+
+def topk_sparsify(g: jax.Array, k_frac: float = 0.01):
+    """Keep the top-|g| fraction; returns (values, flat_indices, shape).
+
+    The (indices, values) pair is exactly a SpDISTAL sparse vector in
+    fused-coordinate form; exchanging it across pods is a non-zero-
+    partitioned all-gather (paper Fig. 5b applied to gradients)."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(flat.shape[0] * k_frac), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx, g.shape
+
+
+def topk_densify(values, idx, shape, dtype=jnp.float32):
+    n = 1
+    for s in shape:
+        n *= s
+    out = jnp.zeros((n,), dtype)
+    return out.at[idx].add(values.astype(dtype)).reshape(shape)
+
+
+def compress_topk_ef(grads, err, k_frac: float = 0.01):
+    """Top-k sparsification with error feedback over a pytree."""
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        v, i, shp = topk_sparsify(acc, k_frac)
+        dense = topk_densify(v, i, shp)
+        return (v, i), acc - dense, dense
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    res = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    sparse = treedef.unflatten([r[0] for r in res])
+    new_err = treedef.unflatten([r[1] for r in res])
+    dense = treedef.unflatten([r[2] for r in res])
+    return sparse, new_err, dense

@@ -1,0 +1,3 @@
+from . import checkpoint, elastic, fault
+
+__all__ = ["checkpoint", "elastic", "fault"]

@@ -1,0 +1,52 @@
+"""Elastic scaling: resize the mesh, re-plan, resume.
+
+Because every shard layout in this framework is a *pure function* of
+(global state, mesh) — planner.params_pspecs for the LM stack,
+Distribution.plan for sparse tensors — scaling to a different chip count is
+just: checkpoint → build new mesh → re-derive specs → device_put host
+arrays with the new shardings. No shard-format conversion pass is needed;
+global shapes are the interchange format.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from ..distributed import planner
+
+
+def reshard_state(host_state: Dict[str, Any], params_like, mesh: Mesh):
+    """Place a host-restored {params, opt, ...} state onto ``mesh`` with
+    freshly planned shardings (the elastic-restart path)."""
+    p_spec = planner.params_pspecs(params_like, mesh)
+    p_sh = planner.shardings_from(p_spec, mesh)
+    out = dict(host_state)
+    out["params"] = jax.device_put(host_state["params"], p_sh)
+    if "opt" in host_state:
+        o_spec = planner.opt_pspecs(host_state["opt"], params_like, mesh)
+        o_sh = planner.shardings_from(o_spec, mesh)
+        out["opt"] = jax.device_put(host_state["opt"], o_sh)
+    return out
+
+
+def valid_resize(global_batch: int, new_dp: int) -> bool:
+    """A resize is legal when the global batch still shards evenly — the
+    launcher keeps global batch fixed across resizes so optimization
+    dynamics are unchanged."""
+    return global_batch % max(new_dp, 1) == 0
+
+
+def plan_resize(old_mesh_shape: Tuple[int, ...],
+                available_chips: int,
+                model_axis: int) -> Optional[Tuple[int, ...]]:
+    """Pick the largest data axis that fits the surviving chip count,
+    keeping the model axis intact (TP degree is architecture-bound)."""
+    if available_chips < model_axis:
+        return None
+    data = available_chips // model_axis
+    # keep power-of-two data axes for collective efficiency
+    data = 1 << (data.bit_length() - 1)
+    return (data, model_axis)

@@ -1,0 +1,124 @@
+"""Fault tolerance: restart policy, step watchdog, straggler mitigation.
+
+At 1000+ nodes, node failure is routine and stragglers dominate tail step
+time. The pieces here are host-side (framework) logic; the device-side
+counterpart is that every step is a pure function of (state, batch) so any
+step can be replayed from the last checkpoint.
+
+- :class:`RestartPolicy` — exponential-backoff restart budget; the train
+  launcher wraps its step loop with `run_with_restarts`.
+- :class:`StepWatchdog` — per-step wall-time tracker; flags steps beyond
+  k·median as straggler events.
+- :class:`StragglerMitigator` — converts repeated straggler flags into a
+  *re-plan*: the paper's own weighted non-zero partitioning, reused on the
+  training system itself. A slow shard gets proportionally fewer non-zeros
+  (sparse workloads) or a smaller microbatch slice (dense workloads).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 100
+    backoff_s: float = 1.0
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 300.0
+
+    def run_with_restarts(self, step_loop: Callable[[], None],
+                          on_restart: Optional[Callable[[int], None]] = None,
+                          sleep=time.sleep) -> int:
+        """Run ``step_loop`` until it completes; on exception restore from
+        the latest checkpoint via ``on_restart`` and retry with backoff.
+        Returns the number of restarts used."""
+        restarts = 0
+        delay = self.backoff_s
+        while True:
+            try:
+                step_loop()
+                return restarts
+            except KeyboardInterrupt:
+                raise
+            except Exception:  # noqa: BLE001 — any step failure is retriable
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                if on_restart is not None:
+                    on_restart(restarts)
+                sleep(min(delay, self.backoff_max_s))
+                delay *= self.backoff_factor
+
+
+class StepWatchdog:
+    """Flags straggling steps: wall time > threshold × running median."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 50):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.straggler_steps: List[int] = []
+        self._t0: Optional[float] = None
+        self._step = 0
+
+    def start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def stop(self) -> bool:
+        """Returns True if this step straggled."""
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        self._step += 1
+        is_straggler = False
+        if len(self.times) >= 5:
+            med = float(np.median(self.times[-self.window:]))
+            is_straggler = dt > self.threshold * med
+        if is_straggler:
+            self.straggler_steps.append(self._step)
+        self.times.append(dt)
+        return is_straggler
+
+    def median(self) -> float:
+        return float(np.median(self.times)) if self.times else 0.0
+
+
+class StragglerMitigator:
+    """Persistent-straggler response: weighted re-partitioning.
+
+    Tracks per-shard slowness reports; when a shard exceeds the report
+    budget, emits new partition weights (slow shard gets less work). For
+    sparse workloads these weights feed ``weighted_nonzero_bounds`` — the
+    paper's non-zero partition generalized to heterogeneous shard speeds.
+    """
+
+    def __init__(self, n_shards: int, report_budget: int = 3,
+                 slowdown_discount: float = 0.5):
+        self.n = n_shards
+        self.budget = report_budget
+        self.discount = slowdown_discount
+        self.reports = np.zeros(n_shards, dtype=np.int64)
+        self.weights = np.ones(n_shards, dtype=np.float64)
+
+    def report_slow(self, shard: int) -> bool:
+        """Returns True when a re-plan is warranted."""
+        self.reports[shard] += 1
+        if self.reports[shard] >= self.budget:
+            self.weights[shard] *= self.discount
+            self.reports[shard] = 0
+            self.weights /= self.weights.mean()
+            return True
+        return False
+
+    def weighted_nonzero_bounds(self, nnz: int) -> np.ndarray:
+        """(P, 2) position bounds proportional to shard weights — the
+        weighted generalization of partition_nonzeros."""
+        frac = self.weights / self.weights.sum()
+        ends = np.floor(np.cumsum(frac) * nnz).astype(np.int64)
+        ends[-1] = nnz
+        starts = np.concatenate([[0], ends[:-1]])
+        return np.stack([starts, ends], axis=1)

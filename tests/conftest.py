@@ -1,0 +1,20 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see 1 device; only launch/dryrun.py (and the subprocess-based
+SPMD tests) force a multi-device host platform."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_csr(rng, n, m, density=0.2, skew_row=None):
+    from repro.core import formats as F
+    from repro.core.tensor import Tensor
+    dense = ((rng.random((n, m)) < density) *
+             rng.standard_normal((n, m))).astype(np.float32)
+    if skew_row is not None:
+        dense[skew_row] = rng.standard_normal(m).astype(np.float32)
+    return Tensor.from_dense("B", dense, F.CSR()), dense

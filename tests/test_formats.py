@@ -1,0 +1,75 @@
+"""Format language + tensor assembly: round-trip properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core.tensor import Tensor
+
+FORMATS_2D = [F.CSR(), F.CSC(), F.DCSR(), F.COO(2), F.DenseMat()]
+FORMATS_3D = [F.CSF(3), F.DDC(), F.COO(3)]
+
+
+@st.composite
+def sparse_2d(draw):
+    n = draw(st.integers(1, 24))
+    m = draw(st.integers(1, 24))
+    density = draw(st.floats(0.0, 0.6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((n, m)) < density) *
+             rng.standard_normal((n, m))).astype(np.float32)
+    return dense
+
+
+@settings(max_examples=40, deadline=None)
+@given(dense=sparse_2d(), fmt_idx=st.integers(0, len(FORMATS_2D) - 1))
+def test_roundtrip_2d(dense, fmt_idx):
+    fmt = FORMATS_2D[fmt_idx]
+    t = Tensor.from_dense("T", dense, fmt)
+    assert np.allclose(t.to_dense(), dense)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), fmt_idx=st.integers(0, len(FORMATS_3D) - 1),
+       density=st.floats(0.0, 0.4))
+def test_roundtrip_3d(seed, fmt_idx, density):
+    rng = np.random.default_rng(seed)
+    shape = tuple(rng.integers(1, 10, 3))
+    dense = ((rng.random(shape) < density) *
+             rng.standard_normal(shape)).astype(np.float32)
+    t = Tensor.from_dense("T", dense, FORMATS_3D[fmt_idx])
+    assert np.allclose(t.to_dense(), dense)
+
+
+@settings(max_examples=30, deadline=None)
+@given(dense=sparse_2d())
+def test_coords_sorted_and_unique(dense):
+    """Invariant: CSR coords are row-major sorted, no duplicates."""
+    t = Tensor.from_dense("T", dense, F.CSR())
+    c = t.coords()
+    key = c[:, 0].astype(np.int64) * dense.shape[1] + c[:, 1]
+    assert np.all(np.diff(key) > 0) or key.size <= 1
+
+
+def test_nnz_matches_dense(rng):
+    dense = ((rng.random((13, 17)) < 0.3) *
+             rng.standard_normal((13, 17))).astype(np.float32)
+    for fmt in FORMATS_2D[:-1]:
+        t = Tensor.from_dense("T", dense, fmt)
+        assert t.nnz == int((dense != 0).sum())
+
+
+def test_from_coo_dedupes(rng):
+    coords = np.array([[0, 1], [0, 1], [2, 3]])
+    vals = np.array([1.0, 2.0, 5.0], np.float32)
+    t = Tensor.from_coo("T", (4, 4), coords, vals, F.CSR())
+    d = t.to_dense()
+    assert d[0, 1] == 3.0 and d[2, 3] == 5.0 and t.nnz == 2
+
+
+def test_dense_after_compressed_rejected():
+    with pytest.raises(NotImplementedError):
+        Tensor.from_coo("T", (3, 3, 3), np.array([[0, 0, 0]]),
+                        np.array([1.0], np.float32),
+                        F.Format((F.Compressed, F.Dense, F.Compressed)))

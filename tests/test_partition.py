@@ -1,0 +1,189 @@
+"""Dependent partitioning properties (paper §III-A / Table I semantics)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core.partition import (image, materialize_coo_nnz,
+                                  materialize_csr_rows, partition_by_bounds,
+                                  partition_nonzeros,
+                                  partition_tensor_nonzeros,
+                                  partition_tensor_rows, preimage)
+from repro.core.tensor import Tensor
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(0, 1000), p=st.integers(1, 16))
+def test_bounds_cover_and_disjoint(n, p):
+    b = partition_by_bounds(n, p)
+    assert b.shape == (p, 2)
+    covered = np.zeros(n, bool)
+    for lo, hi in b:
+        assert 0 <= lo <= hi <= n
+        assert not covered[lo:hi].any()      # disjoint
+        covered[lo:hi] = True
+    assert covered.all()                     # total
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), p=st.integers(1, 8))
+def test_image_preimage_inverse_ish(seed, p):
+    """image(preimage(P)) must cover P (Galois connection property)."""
+    rng = np.random.default_rng(seed)
+    n = rng.integers(2, 40)
+    counts = rng.integers(0, 7, n)
+    pos = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=pos[1:])
+    nnz = int(pos[-1])
+    child = partition_nonzeros(nnz, p)
+    parents = preimage(pos, child)
+    back = image(pos, parents)
+    for c in range(p):
+        lo, hi = child[c]
+        if lo >= hi:
+            continue                       # empty set: trivially covered
+        blo, bhi = back[c]
+        assert blo <= lo and hi <= bhi     # superset after round trip
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), p=st.integers(1, 8))
+def test_preimage_intersection_semantics(seed, p):
+    """r ∈ preimage[c] ⇔ [pos[r], pos[r+1]) ∩ child[c] ≠ ∅ (for non-empty
+    rows; empty rows may be included harmlessly at boundaries)."""
+    rng = np.random.default_rng(seed)
+    n = rng.integers(2, 30)
+    counts = rng.integers(0, 5, n)
+    pos = np.zeros(n + 1, np.int64)
+    np.cumsum(counts, out=pos[1:])
+    child = partition_nonzeros(int(pos[-1]), p)
+    par = preimage(pos, child)
+    for c in range(p):
+        plo, phi = child[c]
+        for r in range(n):
+            intersects = max(pos[r], plo) < min(pos[r + 1], phi)
+            inside = par[c, 0] <= r < par[c, 1]
+            if intersects:
+                assert inside
+            if inside and pos[r] < pos[r + 1] and plo < phi:
+                assert max(pos[r], plo) < min(pos[r + 1], phi) or \
+                    pos[r] == pos[r + 1]
+
+
+def _random_csr(seed, n=30, m=20, density=0.25, skew=True):
+    rng = np.random.default_rng(seed)
+    dense = ((rng.random((n, m)) < density) *
+             rng.standard_normal((n, m))).astype(np.float32)
+    if skew:
+        dense[min(3, n - 1)] = rng.standard_normal(m)
+    return Tensor.from_dense("B", dense, F.CSR()), dense
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), p=st.integers(1, 8))
+def test_row_partition_covers_all_nnz(seed, p):
+    t, dense = _random_csr(seed)
+    part = partition_tensor_rows(t, partition_by_bounds(t.shape[0], p))
+    vb = part.vals_bounds
+    assert vb[0, 0] == 0 and vb[-1, 1] == t.nnz
+    assert np.all(vb[1:, 0] == vb[:-1, 1])   # contiguous, disjoint
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), p=st.integers(1, 8))
+def test_nnz_partition_balance(seed, p):
+    """Non-zero partitions are balanced within one element (paper Fig. 5b)."""
+    t, _ = _random_csr(seed)
+    part = partition_tensor_nonzeros(t, p)
+    counts = part.vals_bounds[:, 1] - part.vals_bounds[:, 0]
+    assert counts.max() - counts.min() <= max(1, int(0.1 * counts.max())) \
+        or counts.max() <= -(-t.nnz // p)
+
+
+def test_materialize_csr_rows_reconstructs(rng):
+    t, dense = _random_csr(1, n=19, m=13)
+    part = partition_tensor_rows(t, partition_by_bounds(19, 4))
+    sh = materialize_csr_rows(t, part)
+    # reconstruct dense from shards
+    out = np.zeros_like(dense)
+    for pcs in range(4):
+        rs = sh.arrays["row_start"][pcs]
+        rc = sh.arrays["row_count"][pcs]
+        pos = sh.arrays["pos1"][pcs]
+        crd = sh.arrays["crd1"][pcs]
+        vals = sh.arrays["vals"][pcs]
+        for r in range(rc):
+            for pp in range(pos[r], pos[r + 1]):
+                out[rs + r, crd[pp]] += vals[pp]
+    assert np.allclose(out, dense)
+
+
+def test_materialize_coo_nnz_reconstructs(rng):
+    t, dense = _random_csr(2, n=17, m=11)
+    part = partition_tensor_nonzeros(t, 4)
+    sh = materialize_coo_nnz(t, part)
+    out = np.zeros_like(dense)
+    for pcs in range(4):
+        cnt = sh.arrays["nnz_count"][pcs]
+        out[sh.arrays["dim0"][pcs, :cnt],
+            sh.arrays["dim1"][pcs, :cnt]] += sh.arrays["vals"][pcs, :cnt]
+    assert np.allclose(out, dense)
+
+
+def test_imbalance_metric_story(rng):
+    """The paper's §II-D claim: skewed matrices → universe partitions
+    imbalanced, non-zero partitions balanced."""
+    t, _ = _random_csr(3, n=64, m=64, density=0.05, skew=True)
+    rows = partition_tensor_rows(t, partition_by_bounds(64, 8))
+    nnz = partition_tensor_nonzeros(t, 8)
+    assert nnz.imbalance() <= 0.15
+    assert rows.imbalance() > nnz.imbalance()
+
+
+def test_partial_fusion_tubes():
+    """Paper Fig. 5: T_xyz with xy→f splits non-zero TUBES evenly; the
+    leaf follows by image, the root by preimage."""
+    rng = np.random.default_rng(9)
+    dims = (30, 20, 15)
+    d = ((rng.random(dims) < 0.1) * rng.standard_normal(dims)
+         ).astype(np.float32)
+    t = Tensor.from_dense("B", d, F.CSF(3))
+    p = partition_tensor_nonzeros(t, 4, fused_levels=2)
+    tube_counts = p.levels[1].pos_bounds[:, 1] - p.levels[1].pos_bounds[:, 0]
+    assert tube_counts.max() - tube_counts.min() <= 4   # balanced tubes
+    assert p.vals_bounds[0, 0] == 0 and p.vals_bounds[-1, 1] == t.nnz
+    assert np.all(p.vals_bounds[1:, 0] == p.vals_bounds[:-1, 1])
+    sh = materialize_coo_nnz(t, p)
+    out = np.zeros(dims, np.float32)
+    for pc in range(4):
+        c = sh.arrays["nnz_count"][pc]
+        out[sh.arrays["dim0"][pc, :c], sh.arrays["dim1"][pc, :c],
+            sh.arrays["dim2"][pc, :c]] += sh.arrays["vals"][pc, :c]
+    assert np.allclose(out, d)
+
+
+def test_partial_fusion_via_tdn():
+    from repro.core.tdn import Machine, dist
+    rng = np.random.default_rng(10)
+    dims = (12, 10, 8)
+    d = ((rng.random(dims) < 0.15) * np.ones(dims)).astype(np.float32)
+    t = Tensor.from_dense("B", d, F.CSF(3))
+    M = Machine(("x", 3))
+    dd = dist(("x", "y", "z"), "xy ~f> f", M)
+    assert dd.nonzero and dd.fused == ("x", "y")
+    plan = dd.plan(t)
+    assert plan.vals_bounds[-1, 1] == t.nnz
+
+
+def test_weighted_nonzero_partition_straggler_replan():
+    """runtime/fault emits weights; the partition honors them — the paper's
+    nnz partitioning generalized to heterogeneous shard speeds."""
+    from repro.core.partition import partition_nonzeros
+    from repro.runtime.fault import StragglerMitigator
+    mit = StragglerMitigator(4, report_budget=1)
+    mit.report_slow(2)
+    b = partition_nonzeros(1000, 4, weights=mit.weights)
+    counts = b[:, 1] - b[:, 0]
+    assert counts.sum() == 1000
+    assert counts[2] < counts[0]
+    assert b[0, 0] == 0 and np.all(b[1:, 0] == b[:-1, 1])
