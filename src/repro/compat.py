@@ -1,0 +1,34 @@
+"""jax version compatibility shims.
+
+The repo targets the `axis_types=` Mesh API (jax >= 0.5), but must also run
+on the baked-in jax 0.4.x toolchain where ``jax.sharding.AxisType`` does not
+exist yet. ``make_mesh_compat`` is the single Mesh constructor both
+`distributed.mesh` and `launch.mesh` go through: it passes explicit Auto
+axis types when the installed jax supports them and silently omits them
+otherwise (0.4.x meshes are Auto-only, so the semantics are identical).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # jax 0.4.x
+    _AxisType = None
+
+if hasattr(jax, "shard_map"):          # jax >= 0.6 top-level API
+    shard_map = jax.shard_map
+else:                                  # jax 0.4.x/0.5.x experimental home
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def make_mesh_compat(shape: Sequence[int], axes: Sequence[str]):
+    """`jax.make_mesh` with Auto axis types where the API exists."""
+    shape = tuple(shape)
+    axes = tuple(axes)
+    if _AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(_AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -12,9 +12,9 @@ plus the compilation machinery:
   - :mod:`repro.core.interp`    — CTF-analog interpretation baseline
 """
 from . import formats
-from .formats import (COO, CSC, CSF, CSR, DCSR, DDC, Compressed, Dense,
-                      DenseMat, DenseND, DenseVec, Format, Singleton,
-                      SparseVec)
+from .formats import (BCSR, COO, CSC, CSF, CSR, DCSF, DCSR, DDC, Compressed,
+                      Dense, DenseMat, DenseND, DenseVec, Format, Singleton,
+                      SparseVec, capabilities, conversion_target, format_key)
 from .interp import interpret
 from .lower import (LoweredKernel, default_nnz_schedule, default_row_schedule,
                     lower)
@@ -27,8 +27,9 @@ from .tensor import Tensor, TensorVar
 from .tin import Access, Assignment, IndexVar, index_vars, parse_tin
 
 __all__ = [
-    "formats", "COO", "CSC", "CSF", "CSR", "DCSR", "DDC", "Compressed",
-    "Dense", "DenseMat", "DenseND", "DenseVec", "Format", "Singleton",
+    "formats", "BCSR", "COO", "CSC", "CSF", "CSR", "DCSF", "DCSR", "DDC",
+    "Compressed", "Dense", "DenseMat", "DenseND", "DenseVec", "Format",
+    "Singleton", "capabilities", "conversion_target", "format_key",
     "SparseVec", "interpret", "LoweredKernel", "default_nnz_schedule",
     "default_row_schedule", "lower", "image", "preimage",
     "partition_by_bounds", "partition_tensor_nonzeros",

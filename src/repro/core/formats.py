@@ -75,10 +75,18 @@ class Format:
     ``mode_ordering[lvl]`` gives the tensor dimension stored at coordinate
     tree level ``lvl``; identity if omitted (row-major-like). CSC is
     ``Format((Dense, Compressed), mode_ordering=(1, 0))``.
+
+    ``block_shape`` spells *blocked* formats (BCSR): the levels then
+    describe the coordinate tree of the **block grid** (dimension ``d`` has
+    ``ceil(shape[d] / block_shape[d])`` block coordinates) and each stored
+    leaf position carries a dense value block of that shape instead of a
+    scalar. ``BCSR((2, 2))`` = ``Format((Dense, Compressed),
+    block_shape=(2, 2))``.
     """
 
     levels: Tuple[LevelFormat, ...]
     mode_ordering: Optional[Tuple[int, ...]] = None
+    block_shape: Optional[Tuple[int, ...]] = None
 
     def __post_init__(self):
         object.__setattr__(
@@ -90,6 +98,16 @@ class Format:
             )
         if sorted(self.mode_ordering) != list(range(len(self.levels))):
             raise ValueError(f"bad mode ordering {self.mode_ordering}")
+        if self.block_shape is not None:
+            object.__setattr__(
+                self, "block_shape", tuple(int(b) for b in self.block_shape)
+            )
+            if len(self.block_shape) != len(self.levels):
+                raise ValueError(
+                    f"block_shape {self.block_shape} must have one entry per "
+                    f"level ({len(self.levels)})")
+            if any(b < 1 for b in self.block_shape):
+                raise ValueError(f"bad block_shape {self.block_shape}")
 
     @property
     def order(self) -> int:
@@ -103,6 +121,10 @@ class Format:
     def is_all_dense(self) -> bool:
         return not self.is_sparse
 
+    @property
+    def is_blocked(self) -> bool:
+        return self.block_shape is not None
+
     def level_of_dim(self, dim: int) -> int:
         return self.mode_ordering.index(dim)
 
@@ -111,9 +133,12 @@ class Format:
 
     def __repr__(self) -> str:
         lv = ",".join(l.name for l in self.levels)
+        extra = ""
         if self.mode_ordering != tuple(range(len(self.levels))):
-            return f"Format([{lv}], order={self.mode_ordering})"
-        return f"Format([{lv}])"
+            extra += f", order={self.mode_ordering}"
+        if self.block_shape is not None:
+            extra += f", block={self.block_shape}"
+        return f"Format([{lv}]{extra})"
 
 
 # -- Common named formats (paper Fig. 3 and §VI) ----------------------------
@@ -159,3 +184,128 @@ def DDC() -> Format:
 
 def DenseND(order: int) -> Format:
     return Format((Dense,) * order)
+
+
+def BCSR(block: Tuple[int, int] = (2, 2)) -> Format:
+    """Blocked CSR: a CSR coordinate tree over the block grid, with a dense
+    ``block`` value tile per stored block position."""
+    return Format((Dense, Compressed), block_shape=tuple(block))
+
+
+def DCSF(order: int = 3) -> Format:
+    """Doubly-compressed sparse fiber — every level compressed (hyper-sparse
+    FROSTT tensors with empty slices)."""
+    return Format((Compressed,) * order)
+
+
+# ---------------------------------------------------------------------------
+# Capability queries — the format-dispatch layer (Chou et al.'s level-format
+# abstraction made queryable). `core.lower` and the kernel emitters consult
+# these instead of hard-coding per-kernel format assumptions; when a
+# capability is missing the lowering engine inserts a logged format
+# conversion (see lower._normalize_operands).
+# ---------------------------------------------------------------------------
+
+_KEY_TABLE = {
+    ("Dense",): "vec",
+    ("Compressed",): "spvec",
+    ("Dense", "Dense"): "dense",
+    ("Dense", "Compressed"): "csr",
+    ("Compressed", "Compressed"): "dcsr",
+    ("Compressed", "Singleton"): "coo",
+    ("Dense", "Dense", "Dense"): "dense3",
+    ("Dense", "Compressed", "Compressed"): "csf",
+    ("Compressed", "Compressed", "Compressed"): "dcsf",
+    ("Compressed", "Singleton", "Singleton"): "coo3",
+    ("Dense", "Dense", "Compressed"): "ddc",
+}
+
+
+def format_key(f: Format) -> str:
+    """Canonical short name for a spellable format — the format component of
+    a conformance-matrix cell ID (e.g. ``spmm/dcsr/nnz/4x1``)."""
+    names = tuple(l.name for l in f.levels)
+    base = _KEY_TABLE.get(names)
+    if base is None:
+        base = "".join(n[0].lower() for n in names)
+    if f.is_blocked:
+        base = f"b{base}" if base == "csr" else f"b[{base}]"
+    if f.mode_ordering != tuple(range(len(f.levels))):
+        if base == "csr" and f.mode_ordering == (1, 0):
+            base = "csc"
+        else:
+            base += "@" + "".join(str(d) for d in f.mode_ordering)
+    return base
+
+
+@dataclasses.dataclass(frozen=True)
+class FormatCaps:
+    """What a format can do directly, as queried by the lowering engine.
+
+    ``row_partitionable``: a universe (coordinate-value) partition of the
+    tensor's dimension 0 maps onto contiguous storage — true when dimension
+    0 is stored at the root level and values are scalars. Root may be Dense
+    (CSR/CSF) or Compressed (DCSR/DCSF/COO: handled by bucketing the sorted
+    root ``crd``, then densifying the window at materialization).
+
+    ``nnz_partitionable``: an equal split of the leaf position space plus an
+    image/preimage walk is well-defined — true for every unblocked sparse
+    format.
+
+    ``root_tracks_dim0``: the root level stores dimension 0, so non-zero
+    partitions own contiguous *row* windows and leaves may compute into a
+    local output slice; false (e.g. CSC) means nnz leaves must reduce over
+    the full output extent instead.
+    """
+
+    key: str
+    order: int
+    row_major: bool
+    root_compressed: bool
+    blocked: bool
+    row_partitionable: bool
+    nnz_partitionable: bool
+    root_tracks_dim0: bool
+
+
+def capabilities(f: Format) -> FormatCaps:
+    row_major = f.mode_ordering == tuple(range(len(f.levels)))
+    root_compressed = f.levels[0].compressed
+    dim0_at_root = f.dim_of_level(0) == 0
+    return FormatCaps(
+        key=format_key(f),
+        order=len(f.levels),
+        row_major=row_major,
+        root_compressed=root_compressed,
+        blocked=f.is_blocked,
+        row_partitionable=dim0_at_root and not f.is_blocked,
+        nnz_partitionable=f.is_sparse and not f.is_blocked,
+        root_tracks_dim0=dim0_at_root,
+    )
+
+
+def supports_2d_default(f: Format, space: str) -> bool:
+    """Default capability contract shared by the 2-D kernel families
+    (spmv/spmm/sddmm/spadd3): universe needs a row-partitionable operand
+    (CSR directly; DCSR/COO via the densified row-window view), nnz needs
+    an nnz-splittable position space (any unblocked sparse format). Kernel
+    modules wrap this in their own ``supports()`` so a family that grows a
+    format-specific leaf (the spmttkrp override pattern) can diverge."""
+    caps = capabilities(f)
+    if caps.order != 2:
+        return False
+    if space == "universe":
+        return caps.row_partitionable
+    return caps.nnz_partitionable
+
+
+def conversion_target(f: Format) -> Format:
+    """The canonical format a tensor is converted to when no direct kernel
+    exists for ``f`` (lower.py logs the fallback; conformance cells that hit
+    this path are recorded in the ROADMAP open-items list)."""
+    order = len(f.levels)
+    if order == 1:
+        return SparseVec()
+    if order == 2:
+        return CSR()
+    return CSF(order)

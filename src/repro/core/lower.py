@@ -25,6 +25,7 @@ thesis, versus interpretation (see core/interp.py for the CTF analog).
 from __future__ import annotations
 
 import dataclasses
+import logging
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -36,12 +37,15 @@ from . import formats as fmt
 from .partition import (ShardedTensor, TensorPartition,
                         materialize_coo_nnz, materialize_csr_rows,
                         materialize_dense_rows, materialize_replicated,
-                        partition_by_bounds, partition_tensor_nonzeros,
+                        partition_by_bounds, partition_nonzeros,
+                        partition_tensor_nonzeros,
                         partition_tensor_rows, replicate_tensor)
 from .schedule import DistStrategy, Schedule
 from .tdn import Distribution, Machine
 from .tensor import Tensor
 from .tin import Assignment, IndexVar
+
+log = logging.getLogger("repro.lower")
 from ..kernels import ref as K
 
 
@@ -79,7 +83,16 @@ class CommStats:
 
 @dataclasses.dataclass
 class LoweredKernel:
-    """A compiled distributed sparse kernel + its plan artifacts."""
+    """A compiled distributed sparse kernel + its plan artifacts.
+
+    ``fallbacks`` records every operand the lowering engine had to convert
+    because no direct kernel exists for its declared format (each entry is
+    ``"name: <from> -> <to>"``); an empty list means the cell lowered
+    directly. ``declared_formats`` keeps the structured form (operand name
+    → declared format key) — the plans hold the CONVERTED tensors, so the
+    declared key is only recoverable from here. The conformance matrix
+    reports this census.
+    """
 
     stmt: Assignment
     strategy: DistStrategy
@@ -89,9 +102,24 @@ class LoweredKernel:
     runner: Callable[[], Any]
     comm: CommStats
     leaf_name: str
+    fallbacks: List[str] = dataclasses.field(default_factory=list)
+    declared_formats: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def run(self):
         return self.runner()
+
+    def cell_id(self) -> str:
+        """Conformance-matrix cell ID: ``<expr>/<format>/<strategy>/<mesh>``
+        (e.g. ``spmm/dcsr/nnz/4x1``). The format component is the sparse
+        operand's DECLARED format — a fallback cell keeps its declared key
+        and is distinguished by a non-empty ``fallbacks`` list."""
+        name = self._dist_sparse_name()
+        key = "dense"
+        if name is not None:
+            key = self.declared_formats.get(
+                name, fmt.format_key(self.plans[name].tensor.format))
+        return (f"{expression_key(self.stmt.signature())}/{key}/"
+                f"{self.strategy.space_label}/{self.strategy.mesh_label}")
 
     def imbalance(self) -> float:
         name = self._dist_sparse_name()
@@ -144,6 +172,76 @@ def _nbytes(t: Tensor) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Format dispatch: which kernel family handles a signature, and whether it
+# supports a sparse operand's format directly (queried from the kernel
+# modules themselves — the level-iterator capability contract lives with
+# the leaves). Modules are resolved LAZILY: they import
+# jax.experimental.pallas at top level, which interpret-only / planning-only
+# users of core.lower should not pay for.
+# ---------------------------------------------------------------------------
+
+_SIG_KERNEL = {
+    "d1(i)=s2(i,j)*d1(j)": ("spmv", "spmv"),
+    "d2(i,j)=s2(i,k)*d2(k,j)": ("spmm", "spmm"),
+    "s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)": ("spadd3", "spadd3"),
+    "s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)": ("sddmm", "sddmm"),
+    "s2(i,j)=s3(i,j,k)*d1(k)": ("spttv", "spmttkrp"),
+    "d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)": ("spmttkrp", "spmttkrp"),
+}
+
+
+def _kernel_supports(module: str):
+    import importlib
+    return importlib.import_module(f"..kernels.{module}",
+                                   package=__package__).supports
+
+
+def expression_key(sig: str) -> str:
+    """Short expression name for conformance cell IDs (``spmm`` in
+    ``spmm/dcsr/nnz/4x1``); falls back to the raw signature."""
+    entry = _SIG_KERNEL.get(sig)
+    return entry[0] if entry else sig
+
+
+def _normalize_operands(
+    stmt: Assignment, space: str,
+) -> Tuple[Assignment, List[str], Dict[str, str]]:
+    """Format-conversion fallback (logged): every sparse rhs operand whose
+    format the selected kernel family cannot iterate directly is converted
+    to the canonical target (CSR / CSF). The returned statement is what the
+    planner and emitters see; the fallback census (display strings + the
+    structured name → declared-key map) is recorded on the LoweredKernel
+    and surfaced by the conformance matrix."""
+    sig = stmt.signature()
+    entry = _SIG_KERNEL.get(sig)
+    if entry is None:
+        return stmt, [], {}
+    kernel_name, module = entry
+    supports = _kernel_supports(module)
+    mapping: Dict[str, Tensor] = {}
+    fallbacks: List[str] = []
+    declared: Dict[str, str] = {}
+    for acc in stmt.rhs.accesses():
+        t = acc.tensor
+        if not t.format.is_sparse or t.name in mapping:
+            continue
+        if supports(t.format, space):
+            continue
+        if not isinstance(t, Tensor):   # TensorVar dry-run: nothing to convert
+            continue
+        target = fmt.conversion_target(t.format)
+        declared[t.name] = fmt.format_key(t.format)
+        fallbacks.append(
+            f"{t.name}: {fmt.format_key(t.format)} -> {fmt.format_key(target)}")
+        log.warning(
+            "no direct %s/%s kernel for %s stored as %s; converting to %s "
+            "(conformance cell falls back)",
+            kernel_name, space, t.name, t.format, target)
+        mapping[t.name] = t.to_format(target)
+    return stmt.with_tensors(mapping), fallbacks, declared
+
+
+# ---------------------------------------------------------------------------
 # The lowering entry point
 # ---------------------------------------------------------------------------
 
@@ -165,6 +263,9 @@ def lower(
     strat = schedule.strategy()
     pieces = strat.pieces
     sig = stmt.signature()
+
+    # Format dispatch: convert operands with no direct kernel (logged).
+    stmt, fallbacks, declared_formats = _normalize_operands(stmt, strat.space)
 
     out_t: Tensor = stmt.lhs.tensor
     plans: Dict[str, TensorPartition] = {}
@@ -189,6 +290,23 @@ def lower(
             # not indexed by the distributed var at the root -> communicate
             # fetches the whole tensor per color (replication)
             plans[t.name] = replicate_tensor(t, pieces)
+    elif (sig, strat.space) in _SELF_MATERIALIZING:
+        # spadd3/nnz: the position space is the CONCATENATED stored-entry
+        # stream of all addends; the emitter packs its own equal chunks, so
+        # plan each operand's equal nnz split (imbalance ~0 by construction)
+        # and materialize nothing. Comm = every chunk's union ships to the
+        # root for the cross-chunk merge (rows+cols+vals per entry).
+        total_entries = 0
+        for acc in stmt.rhs.accesses():
+            t = acc.tensor
+            if t.name in plans:
+                continue
+            if t.format.is_sparse:
+                plans[t.name] = partition_tensor_nonzeros(t, pieces)
+                total_entries += t.nnz
+            else:
+                plans[t.name] = replicate_tensor(t, pieces)
+        comm.reduce_bytes += total_entries * 12
     else:
         # coordinate-position loop -> createInitialNonZeroPartition of the
         # position-space (sparse) tensor, then partition the remaining
@@ -217,6 +335,8 @@ def lower(
     # ---- materialize -------------------------------------------------------
     for name, plan in plans.items():
         t = plan.tensor
+        if (sig, strat.space) in _SELF_MATERIALIZING:
+            continue  # the emitter packs its own chunks (spadd3/nnz)
         if t is out_t and _output_is_assembled(sig):
             continue  # outputs assembled from leaf results, not materialized
         if plan.replicated:
@@ -239,32 +359,51 @@ def lower(
             if not _plans_equal(want, have):
                 comm.redistribute_bytes += _nbytes(plans[name].tensor)
 
-    if strat.space == "nnz":
-        # overlapping output rows reduced across colors
+    if strat.space == "nnz" and (sig, strat.space) not in _SELF_MATERIALIZING:
         ov = plans[next(iter(plans))]  # position tensor plan
-        comm.reduce_bytes += int(
-            (ov.root_coord_bounds[:, 1] - ov.root_coord_bounds[:, 0]).sum()
-            - (ov.root_coord_bounds[:, 1].max() - ov.root_coord_bounds[:, 0].min())
-        ) * 4
+        if ov.tensor.format.dim_of_level(0) != 0:
+            # storage root doesn't track output rows (CSC): every color
+            # reduces a FULL-extent output partial (see _nnz_row_windows).
+            # reduce_bytes is the per-reduction payload; total_network_bytes
+            # multiplies by (pieces-1).
+            comm.reduce_bytes += _nbytes(out_t)
+        else:
+            # overlapping output rows reduced across colors
+            comm.reduce_bytes += int(
+                (ov.root_coord_bounds[:, 1] - ov.root_coord_bounds[:, 0]).sum()
+                - (ov.root_coord_bounds[:, 1].max()
+                   - ov.root_coord_bounds[:, 0].min())
+            ) * 4
 
     # ---- emit: pick leaf + build runner ------------------------------------
     leaf_name, runner = _emit(stmt, strat, plans, shards, jit=jit)
     return LoweredKernel(
         stmt=stmt, strategy=strat, machine=machine, plans=plans,
         shards=shards, runner=runner, comm=comm, leaf_name=leaf_name,
+        fallbacks=fallbacks, declared_formats=declared_formats,
     )
 
 
 def pos_tensor_root_var(stmt: Assignment, pos_tensor: Tensor) -> IndexVar:
+    """The index variable iterated at the tensor's STORAGE root level (for
+    CSC that is the column variable — non-zero partitions then own column
+    windows, and output-row locality is gone)."""
     for acc in stmt.rhs.accesses():
         if acc.tensor is pos_tensor:
-            return acc.idx[0]
+            return acc.idx[pos_tensor.format.dim_of_level(0)]
     raise KeyError(pos_tensor.name)
 
 
 def _output_is_assembled(sig: str) -> bool:
     # sparse outputs (sddmm, spttv, spadd3) are assembled from leaf results
     return sig.startswith("s")
+
+
+# (sig, space) pairs whose emitter packs its own shard chunks at emit time
+# (no per-tensor materialization wanted; see _emit_spadd3_nnz).
+_SELF_MATERIALIZING = {
+    ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "nnz"),
+}
 
 
 def _plans_equal(a: TensorPartition, b: TensorPartition) -> bool:
@@ -323,6 +462,8 @@ def _emit(stmt, strat, plans, shards, jit=True) -> Tuple[str, Callable]:
         ("d2(i,j)=s2(i,k)*d2(k,j)", "universe"): _emit_spmm_rows,
         ("d2(i,j)=s2(i,k)*d2(k,j)", "nnz"): _emit_spmm_nnz,
         ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "universe"): _emit_spadd3_rows,
+        ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "nnz"): _emit_spadd3_nnz,
+        ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "universe"): _emit_sddmm_rows,
         ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "nnz"): _emit_sddmm_nnz,
         ("s2(i,j)=s3(i,j,k)*d1(k)", "universe"): _emit_spttv_rows,
         ("s2(i,j)=s3(i,j,k)*d1(k)", "nnz"): _emit_spttv_nnz,
@@ -360,12 +501,26 @@ def _emit_spmv_rows(stmt, strat, plans, shards, jit=True):
                                 a["row_start"], a["row_count"]))
 
 
+def _nnz_row_windows(B: ShardedTensor, n: int):
+    """Row-window parameters for a coo_nnz shard set. When the storage root
+    tracks output rows (row-major trees) leaves compute into the shard's
+    root window; otherwise (CSC) every shard computes a full-extent partial
+    and the scatter reduces the overlap."""
+    a = B.arrays
+    if B.meta.get("root_dim", 0) == 0 and B.meta["max_rows"] > 0:
+        return a["row_start"], a["row_count"], int(B.meta["max_rows"])
+    pieces = B.pieces
+    row_start = jnp.zeros((pieces,), dtype=jnp.int32)
+    row_count = jnp.full((pieces,), n, dtype=jnp.int32)
+    return row_start, row_count, int(n)
+
+
 def _emit_spmv_nnz(stmt, strat, plans, shards, jit=True):
     B = shards[stmt.rhs.accesses()[0].tensor.name]
     c = shards[stmt.rhs.accesses()[1].tensor.name]
     n = stmt.lhs.tensor.shape[0]
     a = B.arrays
-    max_rows = B.meta["max_rows"]
+    row_start, row_count, max_rows = _nnz_row_windows(B, n)
     cv = c.arrays["vals"]
 
     def fn(rows, cols, vals, cvec, row_start, row_count):
@@ -376,7 +531,7 @@ def _emit_spmv_nnz(stmt, strat, plans, shards, jit=True):
 
     f = _jit(fn, jit)
     return lambda: np.asarray(f(a["dim0"], a["dim1"], a["vals"], cv,
-                                a["row_start"], a["row_count"]))
+                                row_start, row_count))
 
 
 def _emit_spmm_rows(stmt, strat, plans, shards, jit=True):
@@ -401,7 +556,7 @@ def _emit_spmm_nnz(stmt, strat, plans, shards, jit=True):
     B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
     out_shape = stmt.lhs.tensor.shape
     a = B.arrays
-    max_rows = B.meta["max_rows"]
+    row_start, row_count, max_rows = _nnz_row_windows(B, out_shape[0])
     Cv = C.arrays["vals"]
 
     def fn(rows, cols, vals, Cmat, row_start, row_count):
@@ -412,7 +567,7 @@ def _emit_spmm_nnz(stmt, strat, plans, shards, jit=True):
 
     f = _jit(fn, jit)
     return lambda: np.asarray(f(a["dim0"], a["dim1"], a["vals"], Cv,
-                                a["row_start"], a["row_count"]))
+                                row_start, row_count))
 
 
 def _emit_spadd3_rows(stmt, strat, plans, shards, jit=True):
@@ -444,6 +599,91 @@ def _emit_spadd3_rows(stmt, strat, plans, shards, jit=True):
         return Tensor.from_coo(stmt.lhs.tensor.name, (n_rows, n_cols),
                                coords, np.concatenate(out_vals),
                                fmt.CSR(), dedupe=True)
+
+    return run
+
+
+def _emit_spadd3_nnz(stmt, strat, plans, shards, jit=True):
+    """Non-zero SpAdd: the coordinate-position loop of an addition iterates
+    the CONCATENATED stored-entry stream of all addends; splitting it evenly
+    is the load-balanced strategy (paper §II-D applied to additions — the
+    union position space is the natural fused space). Each color's leaf
+    performs the two-phase union on its chunk; host assembly merges
+    boundary-straddling duplicates in from_coo(dedupe=True)."""
+    accs = stmt.rhs.accesses()
+    tensors = [acc.tensor for acc in accs]
+    n_rows, n_cols = stmt.lhs.tensor.shape
+    pieces = strat.pieces
+    coords = np.concatenate([t.coords() for t in tensors], axis=0)
+    vals = np.concatenate([np.asarray(t.vals).reshape(-1) for t in tensors])
+    bounds = partition_nonzeros(coords.shape[0], pieces)
+    counts = (bounds[:, 1] - bounds[:, 0]).astype(np.int32)
+    max_c = int(counts.max()) if counts.size else 0
+    rows_sh = np.zeros((pieces, max_c), dtype=np.int32)
+    cols_sh = np.zeros((pieces, max_c), dtype=np.int32)
+    vals_sh = np.zeros((pieces, max_c), dtype=vals.dtype)
+    for p in range(pieces):
+        lo, hi = int(bounds[p, 0]), int(bounds[p, 1])
+        rows_sh[p, : hi - lo] = coords[lo:hi, 0]
+        cols_sh[p, : hi - lo] = coords[lo:hi, 1]
+        vals_sh[p, : hi - lo] = vals[lo:hi]
+
+    def fn(rows, cols, v, cnt):
+        leaf = partial(K.leaf_spadd_union_chunk, n_rows=n_rows)
+        return jax.vmap(leaf)(rows, cols, v, cnt)
+
+    f = _jit(fn, jit)
+
+    def run():
+        if max_c == 0:
+            return Tensor.from_coo(stmt.lhs.tensor.name, (n_rows, n_cols),
+                                   np.zeros((0, 2), np.int64),
+                                   np.zeros((0,), np.float32), fmt.CSR())
+        r, c, v, k = (np.asarray(x) for x in
+                      f(rows_sh, cols_sh, vals_sh, jnp.asarray(counts)))
+        out_r, out_c, out_v = [], [], []
+        for p in range(pieces):
+            kk = int(k[p])
+            out_r.append(r[p, :kk])
+            out_c.append(c[p, :kk])
+            out_v.append(v[p, :kk])
+        coords_out = np.stack(
+            [np.concatenate(out_r), np.concatenate(out_c)], axis=1)
+        return Tensor.from_coo(stmt.lhs.tensor.name, (n_rows, n_cols),
+                               coords_out, np.concatenate(out_v),
+                               fmt.CSR(), dedupe=True)
+
+    return run
+
+
+def _emit_sddmm_rows(stmt, strat, plans, shards, jit=True):
+    """Row-based SDDMM: B and C's matching row block local per color, D
+    replicated; output vals stay aligned with B's positions and scatter
+    back by the value-space bounds (pattern-preserving universe strategy)."""
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    Cv = C.arrays["vals"]                   # (P, max_rows, K) row blocks
+    Dv = D.arrays["vals"]                   # (K, m) replicated
+    vb = plans[Bt.name].vals_bounds
+    total_nnz = Bt.nnz
+    nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
+    nnz_count = jnp.asarray((vb[:, 1] - vb[:, 0]).astype(np.int32))
+
+    def fn(pos, crd, vals, Cl, Dm):
+        out = jax.vmap(K.leaf_sddmm_rows, in_axes=(0, 0, 0, 0, None))(
+            pos, crd, vals, Cl, Dm)
+        return _scatter_vals(total_nnz, out, nnz_start, nnz_count)
+
+    f = _jit(fn, jit)
+
+    def run():
+        new_vals = np.asarray(f(a["pos1"], a["crd1"], a["vals"], Cv, Dv))
+        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
+                      new_vals, Bt.dtype)
 
     return run
 
@@ -567,7 +807,7 @@ def _emit_spmttkrp_nnz(stmt, strat, plans, shards, jit=True):
     D = shards[accs[2].tensor.name]
     out_shape = stmt.lhs.tensor.shape
     a = B.arrays
-    max_rows = B.meta["max_rows"]
+    row_start, row_count, max_rows = _nnz_row_windows(B, out_shape[0])
     Cv, Dv = C.arrays["vals"], D.arrays["vals"]
 
     def fn(di, dj, dk, vals, Cm, Dm, row_start, row_count):
@@ -579,7 +819,7 @@ def _emit_spmttkrp_nnz(stmt, strat, plans, shards, jit=True):
 
     f = _jit(fn, jit)
     return lambda: np.asarray(f(a["dim0"], a["dim1"], a["dim2"], a["vals"],
-                                Cv, Dv, a["row_start"], a["row_count"]))
+                                Cv, Dv, row_start, row_count))
 
 
 def _emit_generic_fallback(stmt, strat, plans, shards, jit=True):

@@ -176,23 +176,37 @@ def partition_tensor_rows(tensor: Tensor, row_bounds: Bounds) -> TensorPartition
     """Universe partition of the ROOT level by coordinate intervals, derived
     downward through the whole tree (paper: ``partitionFromParent`` chain).
 
-    Works for any supported format (leading dense prefix + compressed
-    suffix). Rows = coordinates of storage level 0.
+    Works for any supported format. Rows = coordinates of storage level 0.
+    A Dense root keys the chain directly (CSR/CSF); a Compressed root
+    (DCSR/DCSF/COO) is bucketed with ``partition_by_value_ranges`` over its
+    sorted ``crd`` first — paper Table I's Compressed/universe entry — and
+    the image chain continues from the resulting position interval.
     """
     pieces = row_bounds.shape[0]
     levels: List[LevelPartition] = []
     order = tensor.order
     n_dense = _dense_prefix(tensor)
 
-    # Dense prefix: coordinate bounds multiply down (row-major position math).
-    levels.append(LevelPartition(coord_bounds=row_bounds.copy()))
-    pos_bounds = row_bounds.astype(np.int64)
-    for l in range(1, n_dense):
-        size = tensor.levels[l].size
-        pos_bounds = pos_bounds * size
-        levels.append(LevelPartition(coord_bounds=None, pos_bounds=pos_bounds.copy()))
+    if n_dense == 0:
+        # Compressed (or COO fused) root: bucket stored row coords.
+        root = tensor.levels[0]
+        pos_bounds = partition_by_value_ranges(root.crd, row_bounds)
+        levels.append(LevelPartition(coord_bounds=row_bounds.copy(),
+                                     pos_bounds=pos_bounds.copy()))
+        start_lvl = 1
+    else:
+        # Dense prefix: coordinate bounds multiply down (row-major position
+        # math).
+        levels.append(LevelPartition(coord_bounds=row_bounds.copy()))
+        pos_bounds = row_bounds.astype(np.int64)
+        for l in range(1, n_dense):
+            size = tensor.levels[l].size
+            pos_bounds = pos_bounds * size
+            levels.append(
+                LevelPartition(coord_bounds=None, pos_bounds=pos_bounds.copy()))
+        start_lvl = n_dense
     # Compressed suffix: image through each pos array.
-    for l in range(n_dense, order):
+    for l in range(start_lvl, order):
         ld = tensor.levels[l]
         if ld.kind.singleton:
             levels.append(LevelPartition(pos_bounds=pos_bounds.copy()))
@@ -234,6 +248,13 @@ def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
     preimage)."""
     if tensor.format.is_all_dense:
         raise ValueError("non-zero partition of a dense tensor — use rows")
+    if tensor.format.is_blocked:
+        # blocked coords() drops block-padding cells, so position-space
+        # slices would misalign with vals; the capability layer routes
+        # these through a conversion before lowering.
+        raise ValueError(
+            f"non-zero partition of blocked format {tensor.format} — "
+            "convert first (formats.conversion_target)")
     order = tensor.order
     n_dense = _dense_prefix(tensor)
     split_level = order - 1 if fused_levels is None else fused_levels - 1
@@ -280,9 +301,14 @@ def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
         )
         crd0 = tensor.levels[0].crd
         pb = levels[0].pos_bounds
-        lo = np.where(pb[:, 0] < pb[:, 1], crd0[np.minimum(pb[:, 0], len(crd0) - 1)], 0)
-        hi = np.where(pb[:, 0] < pb[:, 1], crd0[np.maximum(pb[:, 1] - 1, 0)] + 1, 0)
-        root_bounds = np.stack([lo, hi], axis=1).astype(np.int64)
+        if crd0 is None or crd0.size == 0:   # empty tensor: no coords owned
+            root_bounds = np.zeros_like(pb)
+        else:
+            lo = np.where(pb[:, 0] < pb[:, 1],
+                          crd0[np.minimum(pb[:, 0], len(crd0) - 1)], 0)
+            hi = np.where(pb[:, 0] < pb[:, 1],
+                          crd0[np.maximum(pb[:, 1] - 1, 0)] + 1, 0)
+            root_bounds = np.stack([lo, hi], axis=1).astype(np.int64)
     return TensorPartition(
         tensor=tensor,
         pieces=pieces,
@@ -373,11 +399,18 @@ def materialize_dense_rows(tensor: Tensor, bounds: Bounds,
 
 
 def materialize_csr_rows(tensor: Tensor, part: TensorPartition) -> ShardedTensor:
-    """CSR / CSF shard per color from a row-interval partition.
+    """CSR / CSF-convention shard per color from a row-interval partition.
 
     Local ``pos`` arrays are rebased to the shard's crd window and padded so
     out-of-range rows are empty. Multi-level (CSF) shards keep one pos/crd
     pair per compressed level.
+
+    Compressed-root formats (DCSR, DCSF, 2-D COO) are *densified to the row
+    window*: the shard-local ``pos1`` is expanded to one entry per window
+    row (absent rows get empty ranges), so every leaf kernel written against
+    the CSR/CSF calling convention consumes these shards unchanged. This is
+    the level-iterator view of the format abstraction — the iteration
+    capability differs, the kernel contract does not.
     """
     pieces = part.pieces
     rb = part.root_coord_bounds
@@ -395,8 +428,47 @@ def materialize_csr_rows(tensor: Tensor, part: TensorPartition) -> ShardedTensor
     for l in range(1, n_dense):
         inner_dense *= tensor.levels[l].size
 
+    start_lvl = n_dense
+    if n_dense == 0:
+        # ---- densify the compressed root over each shard's row window ----
+        root = tensor.levels[0]
+        p0b = part.levels[0].pos_bounds
+        child = tensor.levels[1] if order > 1 else None
+        if child is None:
+            raise NotImplementedError(
+                "row materialization of a 1-D compressed vector")
+        c1b = part.levels[1].pos_bounds
+        max_c1 = int((c1b[:, 1] - c1b[:, 0]).max())
+        pos_shards = np.zeros((pieces, max_rows + 1), dtype=INT)
+        crd_shards = np.zeros((pieces, max_c1), dtype=INT)
+        for p in range(pieces):
+            rlo = int(rb[p, 0])
+            plo, phi = int(p0b[p, 0]), int(p0b[p, 1])
+            wrows = max(int(rb[p, 1]) - rlo, 0)
+            counts = np.zeros(max_rows, dtype=np.int64)
+            stored_rows = root.crd[plo:phi].astype(np.int64) - rlo
+            if child.kind.singleton:
+                # COO: one root coord per position — histogram the window
+                if stored_rows.size:
+                    np.add.at(counts, stored_rows, 1)
+            else:
+                # DCSR/DCSF: scatter each stored row's child-range length
+                per_row = (child.pos[plo + 1: phi + 1].astype(np.int64)
+                           - child.pos[plo: phi])
+                if stored_rows.size:
+                    np.add.at(counts, stored_rows, per_row)
+            pos = np.zeros(max_rows + 1, dtype=np.int64)
+            np.cumsum(counts, out=pos[1:])
+            pos[wrows + 1:] = pos[wrows]     # padded rows stay empty
+            pos_shards[p] = pos.astype(INT)
+            clo, chi = int(c1b[p, 0]), int(c1b[p, 1])
+            crd_shards[p, : chi - clo] = child.crd[clo:chi]
+        arrays["pos1"] = pos_shards
+        arrays["crd1"] = crd_shards
+        start_lvl = 2
+
     # per compressed level: slice pos (rebased), crd
-    for l in range(n_dense, order):
+    for l in range(start_lvl, order):
         ld = tensor.levels[l]
         lp = part.levels[l]
         if ld.kind.singleton:
@@ -485,7 +557,12 @@ def materialize_coo_nnz(tensor: Tensor, part: TensorPartition) -> ShardedTensor:
         arrays=arrays,
         meta={"max_nnz": max_nnz,
               "max_rows": int((rb[:, 1] - rb[:, 0]).max()),
-              "n_rows": tensor.shape[tensor.format.dim_of_level(0)]},
+              "n_rows": tensor.shape[tensor.format.dim_of_level(0)],
+              # Dimension tracked by the storage root: leaves may compute
+              # into a local root-window output slice only when this is the
+              # output-row dimension (0); otherwise (CSC) emitters reduce
+              # over the full output extent.
+              "root_dim": tensor.format.dim_of_level(0)},
         partition=part,
     )
 

@@ -70,6 +70,21 @@ class DistStrategy:
             p *= d.size
         return p
 
+    @property
+    def space_label(self) -> str:
+        """Strategy component of a conformance cell ID: ``rows`` for
+        coordinate-value (universe) loops, ``nnz`` for coordinate-position
+        loops."""
+        return "rows" if self.space == "universe" else "nnz"
+
+    @property
+    def mesh_label(self) -> str:
+        """Mesh-shape component of a conformance cell ID (``4x1``, ``2x2``)."""
+        sizes = [d.size for d in self.machine_dims]
+        while len(sizes) < 2:
+            sizes.append(1)
+        return "x".join(str(s) for s in sizes)
+
 
 class Schedule:
     """Fluent scheduling API bound to a TIN statement (paper Fig. 1)."""

@@ -74,6 +74,8 @@ class Tensor:
         arr = np.asarray(arr)
         if format is None:
             format = fmt.DenseND(arr.ndim)
+        if format.is_blocked:
+            return Tensor._from_dense_blocked(name, arr, format)
         if format.is_all_dense:
             levels = [
                 LevelData(format.levels[l], arr.shape[format.dim_of_level(l)])
@@ -85,6 +87,50 @@ class Tensor:
         coords = np.argwhere(arr != 0).astype(INT)
         vals = arr[tuple(coords.T)]
         return Tensor.from_coo(name, arr.shape, coords, vals, format)
+
+    @staticmethod
+    def _from_dense_blocked(name: str, arr: np.ndarray, format: Format,
+                            ) -> "Tensor":
+        """Assemble a blocked (BCSR-style) tensor: the level tree indexes the
+        block grid; ``vals`` is (n_stored_blocks, *block_shape)."""
+        bs = format.block_shape
+        if arr.ndim != len(bs):
+            raise ValueError(f"blocked format {format} on order-{arr.ndim}")
+        grid = tuple(-(-s // b) for s, b in zip(arr.shape, bs))
+        padded = np.zeros(tuple(g * b for g, b in zip(grid, bs)), arr.dtype)
+        padded[tuple(slice(0, s) for s in arr.shape)] = arr
+        # view as (g0, b0, g1, b1, ...) then move block dims last
+        view = padded.reshape(
+            tuple(x for g, b in zip(grid, bs) for x in (g, b)))
+        perm = tuple(range(0, 2 * len(bs), 2)) + \
+            tuple(range(1, 2 * len(bs), 2))
+        blocks = np.transpose(view, perm)          # (g0, g1, ..., b0, b1, ..)
+        grid_fmt = fmt.Format(format.levels, format.mode_ordering)
+        if grid_fmt.is_all_dense:
+            # dense block grid: every block is stored, in storage (level)
+            # order — permute grid dims by the mode ordering and flatten.
+            perm = tuple(grid_fmt.mode_ordering) + tuple(
+                range(len(bs), 2 * len(bs)))
+            block_vals = np.ascontiguousarray(
+                np.transpose(blocks, perm)).reshape((-1,) + tuple(bs))
+            levels = [
+                LevelData(grid_fmt.levels[l], grid[grid_fmt.dim_of_level(l)])
+                for l in range(len(bs))
+            ]
+            return Tensor(name, arr.shape, format, levels,
+                          block_vals.astype(arr.dtype), arr.dtype)
+        nz = np.argwhere(
+            blocks.reshape(grid + (-1,)).any(axis=-1)).astype(np.int64)
+        block_vals = blocks[tuple(nz.T)].astype(arr.dtype)  # (nb, *bs)
+        # build the block-grid coordinate tree with a scalar-level from_coo,
+        # then swap in the block values (same stored order: from_coo keeps
+        # lexicographic storage order and the block coords are unique).
+        skeleton = Tensor.from_coo(
+            name, grid, nz, np.arange(nz.shape[0], dtype=np.float64),
+            grid_fmt, dedupe=False)
+        order_idx = skeleton.vals.astype(np.int64)
+        return Tensor(name, arr.shape, format, skeleton.levels,
+                      block_vals[order_idx], arr.dtype)
 
     @staticmethod
     def from_coo(
@@ -100,6 +146,11 @@ class Tensor:
         order = len(shape)
         coords = np.asarray(coords, dtype=np.int64).reshape(-1, order)
         vals = np.asarray(vals)
+        if format.is_blocked:
+            dense = np.zeros(shape, dtype=vals.dtype)
+            if coords.size:
+                np.add.at(dense, tuple(coords.T), vals)
+            return Tensor._from_dense_blocked(name, dense, format)
         if format.is_all_dense:
             dense = np.zeros(shape, dtype=vals.dtype)
             if coords.size:
@@ -203,16 +254,55 @@ class Tensor:
     def nnz(self) -> int:
         if self.format.is_all_dense:
             return int(np.prod(self.shape))
+        if self.format.is_blocked:
+            return int(self.vals.size)  # stored values incl. in-block zeros
         return int(self.vals.shape[0])
 
     def level(self, lvl: int) -> LevelData:
         return self.levels[lvl]
 
+    def block_coords(self) -> np.ndarray:
+        """Blocked formats: (n_blocks, order) block-grid coordinates in
+        dimension order (the scalar-level walk over the grid tree)."""
+        assert self.format.is_blocked
+        grid_fmt = fmt.Format(self.format.levels, self.format.mode_ordering)
+        grid = tuple(self.levels[self.format.level_of_dim(d)].size
+                     for d in range(self.order))
+        proxy = Tensor(self.name, grid, grid_fmt, self.levels,
+                       np.zeros(self.vals.shape[0], self.dtype), self.dtype)
+        return proxy.coords()
+
+    def _blocked_entries(self):
+        """All stored cells of a blocked tensor: ((N, order) coords aligned
+        with ``vals.reshape(-1)``, plus an in-bounds mask — boundary blocks
+        of a block-unaligned shape carry padding cells past the tensor
+        edge, which every external consumer must drop."""
+        bc = self.block_coords().astype(np.int64)         # (nb, order)
+        bs = self.format.block_shape
+        inner = np.indices(bs).reshape(len(bs), -1).T      # (prod(bs), order)
+        out = (bc[:, None, :] * np.asarray(bs)[None, None, :]
+               + inner[None, :, :]).reshape(-1, self.order)
+        mask = np.all(out < np.asarray(self.shape)[None, :], axis=1)
+        return out, mask
+
     def coords(self) -> np.ndarray:
-        """(nnz, order) coordinates in *dimension* order."""
+        """(nnz, order) coordinates in *dimension* order, aligned with
+        ``vals``. Blocked formats are the exception: block-padding cells
+        beyond the tensor boundary are dropped, so the row count may be
+        smaller than ``vals.size`` — pair with ``_blocked_entries`` when
+        value alignment matters."""
+        if self.format.is_blocked:
+            out, mask = self._blocked_entries()
+            return out[mask]
         if self.format.is_all_dense:
-            idx = np.indices(self.shape).reshape(self.order, -1).T
-            return idx.astype(INT)
+            # enumerate in STORAGE order (vals is stored level-major), then
+            # place each level's coordinate in its dimension column
+            sizes = [self.levels[l].size for l in range(self.order)]
+            idx = np.indices(sizes).reshape(self.order, -1).T
+            out = np.zeros_like(idx)
+            for l in range(self.order):
+                out[:, self.format.dim_of_level(l)] = idx[:, l]
+            return out.astype(INT)
         # Walk levels, expanding positions to coordinates (storage order).
         n_dense = sum(1 for lf in self.format.levels if not lf.compressed)
         cols: List[np.ndarray] = []
@@ -251,6 +341,13 @@ class Tensor:
         return dimcols.astype(INT)
 
     def to_dense(self) -> np.ndarray:
+        if self.format.is_blocked:
+            dense = np.zeros(self.shape, dtype=self.vals.dtype)
+            c, mask = self._blocked_entries()
+            if c.size:
+                np.add.at(dense, tuple(c[mask].T),
+                          self.vals.reshape(-1)[mask])
+            return dense
         if self.format.is_all_dense:
             inv = np.argsort(self.format.mode_ordering)
             return np.transpose(
@@ -262,6 +359,26 @@ class Tensor:
         if c.size:
             np.add.at(dense, tuple(c.T), self.vals)
         return dense
+
+    def to_format(self, new_format: Format) -> "Tensor":
+        """Convert to another spellable format (the paper's assembly /
+        format-conversion phase; host-side numpy).
+
+        Non-blocked sparse → sparse goes through the coordinate stream
+        (explicitly stored zeros are preserved; duplicate COO entries merge
+        by summation); anything involving a blocked or all-dense endpoint
+        goes through the dense image."""
+        if new_format == self.format:
+            return self
+        if new_format.order != self.order:
+            raise ValueError(
+                f"cannot convert order-{self.order} tensor {self.name} to "
+                f"order-{new_format.order} format {new_format}")
+        if (self.format.is_blocked or new_format.is_blocked
+                or self.format.is_all_dense or new_format.is_all_dense):
+            return Tensor.from_dense(self.name, self.to_dense(), new_format)
+        return Tensor.from_coo(self.name, self.shape, self.coords(),
+                               self.vals, new_format, dedupe=True)
 
     # TIN access sugar: B(i, j)
     def __call__(self, *idx: IndexVar) -> Access:

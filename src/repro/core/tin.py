@@ -181,6 +181,27 @@ class Assignment:
     def sparse_accesses(self) -> List[Access]:
         return [a for a in self.rhs.accesses() if a.tensor.format.is_sparse]
 
+    def with_tensors(self, mapping: Dict[str, Any]) -> "Assignment":
+        """A copy of the statement with tensors swapped by name — used by the
+        lowering engine's format-conversion fallback (the converted tensor
+        replaces the original throughout the AST). Index structure is
+        untouched, so the signature and schedule stay valid."""
+        if not mapping:
+            return self
+
+        def rebuild(e: TinExpr) -> TinExpr:
+            if isinstance(e, Access):
+                t = mapping.get(e.tensor.name, e.tensor)
+                return Access(t, e.idx)
+            if isinstance(e, Add):
+                return Add(rebuild(e.lhs), rebuild(e.rhs))
+            if isinstance(e, Mul):
+                return Mul(rebuild(e.lhs), rebuild(e.rhs))
+            return e
+
+        lhs = rebuild(self.lhs)
+        return Assignment(lhs, rebuild(self.rhs), accumulate=self.accumulate)
+
     def var_extent(self, v: IndexVar) -> int:
         """Dimension size an index variable ranges over (must be consistent)."""
         ext: Optional[int] = None

@@ -20,6 +20,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.lower import LoweredKernel
 from ..core.tdn import Machine
 from ..kernels import ref as K
@@ -36,7 +37,7 @@ def spmv_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     max_rows = B.meta["max_rows"]
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(), P(axis)),
         out_specs=P(axis))
     def run(pos, crd, vals, cvec, row_count):
@@ -70,7 +71,7 @@ def spmv_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     a = B.arrays
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P()),
         out_specs=P())
     def run(rows, cols, vals, cvec):
@@ -95,7 +96,7 @@ def spmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     a = B.arrays
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P()),
         out_specs=P(axis))
     def run(pos, crd, vals, Cm):
@@ -125,7 +126,7 @@ def sddmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     a = B.arrays
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(), P()),
         out_specs=P(axis))
     def run(rows, cols, vals, Cm, Dm):
@@ -147,10 +148,77 @@ def sddmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     return call
 
 
+def spmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """Non-zero SpMM under shard_map: full-extent partials + psum. Uses
+    GLOBAL row ids, so it is format-general — CSC's column-ordered position
+    space works unchanged (no row-window locality to exploit)."""
+    from .planner import sparse_pspecs
+    Bacc, Cacc = kernel.stmt.rhs.accesses()
+    B = kernel.shards[Bacc.tensor.name]
+    C = kernel.shards[Cacc.tensor.name]
+    n = kernel.stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    sp = sparse_pspecs({"B": B, "C": C}, axis)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(sp["B"]["dim0"], sp["B"]["dim1"], sp["B"]["vals"],
+                  sp["C"]["vals"]),
+        out_specs=P())
+    def run(rows, cols, vals, Cm):
+        y = K.leaf_spmm_nnz(rows[0], cols[0], vals[0], Cm, n)
+        return jax.lax.psum(y, axis_name=axis)
+
+    def call():
+        return np.asarray(run(
+            jnp.asarray(a["dim0"]), jnp.asarray(a["dim1"]),
+            jnp.asarray(a["vals"]), jnp.asarray(C.arrays["vals"])))
+
+    return call
+
+
+def sddmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """Row-based SDDMM under shard_map: B row shard (CSR convention — any
+    row-partitionable format materializes to it) + C row block local, D
+    replicated; per-shard output vals assembled by value-space bounds."""
+    from .planner import sparse_pspecs
+    accs = kernel.stmt.rhs.accesses()
+    B = kernel.shards[accs[0].tensor.name]
+    C = kernel.shards[accs[1].tensor.name]
+    D = kernel.shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    sp = sparse_pspecs({"B": B, "C": C, "D": D}, axis)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(sp["B"]["pos1"], sp["B"]["crd1"], sp["B"]["vals"],
+                  sp["C"]["vals"], sp["D"]["vals"]),
+        out_specs=P(axis))
+    def run(pos, crd, vals, Cl, Dm):
+        return K.leaf_sddmm_rows(pos[0], crd[0], vals[0], Cl[0], Dm)[None]
+
+    def call():
+        out_vals = np.asarray(run(
+            jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
+            jnp.asarray(a["vals"]), jnp.asarray(C.arrays["vals"]),
+            jnp.asarray(D.arrays["vals"])))
+        flat = np.zeros(Bt.nnz, np.float32)
+        vb = kernel.plans[Bt.name].vals_bounds
+        cnt = np.asarray(a["nnz_count"])
+        for p in range(out_vals.shape[0]):
+            flat[vb[p, 0]: vb[p, 0] + cnt[p]] = out_vals[p, : cnt[p]]
+        return flat
+
+    return call
+
+
 SPMD_BUILDERS: Dict[str, Callable] = {
     "spmv_rows": spmv_rows_spmd,
     "spmv_nnz": spmv_nnz_spmd,
     "spmm_rows": spmm_rows_spmd,
+    "spmm_nnz": spmm_nnz_spmd,
+    "sddmm_rows": sddmm_rows_spmd,
     "sddmm_nnz": sddmm_nnz_spmd,
 }
 

@@ -214,3 +214,20 @@ def cache_pspecs(abstract_cache, mesh: Mesh, batch: int):
 def shardings_from(pspec_tree, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def sparse_pspecs(sharded_tensors, axis: str = "x"):
+    """PartitionSpec maps for lowered sparse-kernel shards (executor.py).
+
+    Stacked shard arrays (leading color axis, any kind but ``replicated``)
+    shard over the machine ``axis``; replicated operands broadcast with
+    ``P()``. Returns ``{tensor_name: {array_name: P}}`` so shard_map
+    builders stay format-general — the array set differs per format
+    (pos/crd levels, COO dim columns, densified-root views) but the
+    placement rule does not."""
+    out = {}
+    for name, sh in sharded_tensors.items():
+        kind = getattr(sh, "kind", "replicated")
+        spec = P() if kind == "replicated" else P(axis)
+        out[name] = {arr_name: spec for arr_name in sh.arrays}
+    return out

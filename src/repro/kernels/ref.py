@@ -108,6 +108,16 @@ def leaf_sddmm_nnz(rows, cols, vals, C, D):
     return vals * jnp.sum(Cg * Dg, axis=1)
 
 
+def leaf_sddmm_rows(pos, crd, vals, C_local, D):
+    """Row-window SDDMM leaf: B given as a local CSR/densified-root shard,
+    C's matching row block local, D replicated. Output vals stay aligned
+    with B's shard positions (pattern-preserving, paper §V-B)."""
+    rows = rows_from_pos(pos, crd.shape[0])
+    Cg = jnp.take(C_local, rows, axis=0)           # (N, K) local rows
+    Dg = jnp.take(D, crd, axis=1).T                # (N, K)
+    return vals * jnp.sum(Cg * Dg, axis=1)
+
+
 def leaf_spadd3_rows(pos1, crd1, v1, pos2, crd2, v2, pos3, crd3, v3, n_cols):
     """Fused three-way sparse add over a row shard.
 
@@ -151,6 +161,37 @@ def leaf_spadd3_rows(pos1, crd1, v1, pos2, crd2, v2, pos3, crd3, v3, n_cols):
     out_cols = jnp.where(in_range, out_cols, 0).astype(jnp.int32)
     out_vals = jnp.where(in_range, out_vals, 0)
     return out_rows, out_cols, out_vals, count
+
+
+def leaf_spadd_union_chunk(rows, cols, vals, count, n_rows):
+    """Per-chunk union leaf for the non-zero SpAdd strategy: the chunk is a
+    slice of the CONCATENATED coordinate stream of all addends (the
+    coordinate-position loop of an addition). Same two-phase union as
+    leaf_spadd3_rows, over global rows; duplicates that straddle chunk
+    boundaries merge in the host-side assembly's dedupe."""
+    n = rows.shape[0]
+    valid = jnp.arange(n) < count
+    rows = jnp.where(valid, rows, n_rows).astype(jnp.int32)
+    order = jnp.lexsort((cols, rows))
+    rows_s, cols_s, vals_s = rows[order], cols[order], vals[order]
+    valid_s = valid[order]
+    newseg = jnp.concatenate([
+        jnp.array([True]),
+        (rows_s[1:] != rows_s[:-1]) | (cols_s[1:] != cols_s[:-1]),
+    ])
+    seg_id = jnp.cumsum(newseg) - 1
+    out_vals = jax.ops.segment_sum(vals_s, seg_id, num_segments=n)
+    first = jax.ops.segment_min(jnp.arange(n, dtype=jnp.int32), seg_id,
+                                num_segments=n)
+    first = jnp.clip(first, 0, n - 1)
+    out_rows = jnp.take(rows_s, first)
+    out_cols = jnp.take(cols_s, first)
+    out_count = jnp.sum((newseg & valid_s).astype(jnp.int32))
+    in_range = jnp.arange(n) < out_count
+    out_rows = jnp.where(in_range, out_rows, 0).astype(jnp.int32)
+    out_cols = jnp.where(in_range, out_cols, 0).astype(jnp.int32)
+    out_vals = jnp.where(in_range, out_vals, 0)
+    return out_rows, out_cols, out_vals, out_count
 
 
 def leaf_spadd3_dense_rows(pos1, crd1, v1, pos2, crd2, v2, pos3, crd3, v3,

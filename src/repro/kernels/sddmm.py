@@ -19,6 +19,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import formats as fmt
+
+
+def supports(format: "fmt.Format", space: str) -> bool:
+    """Format-dispatch query. SDDMM is pattern-preserving: the non-zero
+    leaf is storage-order agnostic (per-position sampled products), so any
+    unblocked sparse format works under nnz — including CSC, whose vals
+    simply stay in column-major position order. Universe needs the
+    row-window view."""
+    return fmt.supports_2d_default(format, space)
+
 
 def _sddmm_kernel(rows_ref, cols_ref, vals_ref, c_ref, dt_ref, out_ref):
     rows = rows_ref[0, :]

@@ -21,6 +21,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import formats as fmt
+
+
+def supports(format: "fmt.Format", space: str) -> bool:
+    """Format-dispatch query. The union-add leaves iterate all operands in
+    row order, so universe needs the row-window view for EVERY operand;
+    the nnz strategy splits the concatenated coordinate stream of the three
+    operands, which any unblocked sparse format can feed."""
+    return fmt.supports_2d_default(format, space)
+
 
 def _spadd3_kernel(r1, c1, v1, r2, c2, v2, r3, c3, v3, out_ref, *,
                    block_r: int, block_m: int):

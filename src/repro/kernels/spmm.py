@@ -22,6 +22,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import formats as fmt
+
+
+def supports(format: "fmt.Format", space: str) -> bool:
+    """Format-dispatch query — same capability contract as spmv (the sparse
+    operand's row/nnz iteration is identical; only the dense operand
+    changes)."""
+    return fmt.supports_2d_default(format, space)
+
 
 def _spmm_ell_kernel(rows_ref, crd_ref, vals_ref, c_ref, out_ref, *,
                      block_r: int):

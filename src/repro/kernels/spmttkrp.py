@@ -24,6 +24,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import formats as fmt
+
+
+def supports(format: "fmt.Format", space: str) -> bool:
+    """Format-dispatch query for 3-D MTTKRP (and TTV). The row-strategy leaf
+    walks a two-level (j-grouped) pos/crd tree, so universe needs a
+    row-partitionable root AND a grouped (non-singleton) middle level: CSF
+    directly, DCSF via the densified row window — but not COO(3), whose
+    trailing singletons carry no j grouping. The nnz leaf consumes flat
+    per-nnz (i, j, k) coordinates, which every unblocked 3-D sparse format
+    provides."""
+    caps = fmt.capabilities(format)
+    if caps.order != 3:
+        return False
+    if space == "universe":
+        return caps.row_partitionable and not format.levels[1].singleton
+    return caps.nnz_partitionable
+
 
 def _spmttkrp_kernel(rows_ref, j_ref, k_ref, vals_ref, c_ref, d_ref, out_ref,
                      *, block_r: int):

@@ -28,6 +28,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import formats as fmt
+
+
+def supports(format: "fmt.Format", space: str) -> bool:
+    """Format-dispatch query (core.lower consults this before emitting).
+
+    Row (universe) leaves consume any format whose dimension-0 partition
+    maps to contiguous storage — CSR directly, DCSR/COO via the densified
+    row-window view. Non-zero leaves need an nnz-splittable position space
+    (any unblocked sparse format; non-row-major roots like CSC reduce over
+    the full output extent instead of a row window)."""
+    return fmt.supports_2d_default(format, space)
+
 
 # ---------------------------------------------------------------------------
 # Row-based (universe) kernel

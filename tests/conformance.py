@@ -1,0 +1,236 @@
+"""Differential conformance matrix: expression × format × strategy × mesh.
+
+SpDISTAL's thesis is that tensor algebra expressions, sparse formats, and
+distribution strategies compose independently (paper §I). This harness makes
+that claim machine-checkable: it enumerates the full cross-product grid and
+differentially verifies every compiled cell against the CTF-style
+interpreter oracle (`core.interp.interpret`), which is itself pinned by
+hand-computed goldens in test_interp_golden.py.
+
+Cell IDs read ``<expression>/<format>/<strategy>/<mesh>``:
+
+    spmm/dcsr/nnz/4x1  =  SpMM, sparse operand stored DCSR, non-zero
+                          (coordinate-position) distribution, 4-piece 1-D
+                          machine.
+
+Every cell must either lower DIRECTLY (the kernel family iterates the
+declared format in place) or via an explicitly-logged format-conversion
+fallback recorded on ``LoweredKernel.fallbacks``. The census of both is
+printed in the pytest terminal summary (see conftest.py) and the fallback
+set is mirrored in ROADMAP.md open items — shrinking it is tracked work.
+
+Adding a row/column to the matrix:
+  * new expression — add a builder to ``_build_stmt`` + an entry in
+    ``EXPRESSIONS_2D`` / ``EXPRESSIONS_3D`` (and a leaf emitter pair in
+    core/lower.py if it should lower directly);
+  * new format — add its constructor to ``FORMATS_2D`` / ``FORMATS_3D``;
+    give it a short name in ``formats._KEY_TABLE`` and, if a kernel family
+    can iterate it directly, teach that family's ``supports()``.
+
+Sparsity patterns are randomized per cell (seeded by the cell ID) and always
+include empty rows and a dense (skewed) row; COO inputs are duplicate-free
+by construction (``Tensor.from_dense`` dedupes). All-zero operands get their
+own cells below.
+"""
+import logging
+import zlib
+
+import numpy as np
+import pytest
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core.interp import interpret
+from repro.core.lower import default_nnz_schedule, default_row_schedule, lower
+from repro.core.tensor import Tensor
+
+# cell_id -> {"status": "direct"|"fallback", "fallbacks": [...]}
+CENSUS = {}
+
+FORMATS_2D = [
+    ("csr", F.CSR),
+    ("csc", F.CSC),
+    ("dcsr", F.DCSR),
+    ("coo", lambda: F.COO(2)),
+    ("bcsr", lambda: F.BCSR((2, 2))),
+]
+FORMATS_3D = [
+    ("csf", lambda: F.CSF(3)),
+    ("dcsf", lambda: F.DCSF(3)),
+    ("coo3", lambda: F.COO(3)),
+]
+EXPRESSIONS_2D = ["spmv", "spmm", "sddmm", "spadd3"]
+EXPRESSIONS_3D = ["spmttkrp"]
+STRATEGIES = ["rows", "nnz"]
+PIECES = [2, 4]
+
+
+def _sparse_2d(rng, n, m, density=0.25):
+    d = ((rng.random((n, m)) < density) *
+         rng.standard_normal((n, m))).astype(np.float32)
+    d[rng.integers(0, n)] = 0                                   # empty row
+    d[rng.integers(0, n)] = rng.standard_normal(m).astype(np.float32)  # skew
+    return d
+
+
+def _build_stmt(expr, fm, rng, empty=False):
+    """TIN statement + dense-oracle closure for one matrix cell."""
+    if expr in EXPRESSIONS_2D:
+        n, m, K = 19, 13, 5
+        dB = np.zeros((n, m), np.float32) if empty else _sparse_2d(rng, n, m)
+        B = Tensor.from_dense("B", dB, fm)
+        if expr == "spmv":
+            c = Tensor.from_dense(
+                "c", rng.standard_normal(m).astype(np.float32))
+            return rc.parse_tin("a(i) = B(i,j) * c(j)",
+                                a=Tensor.zeros_dense("a", (n,)), B=B, c=c)
+        if expr == "spmm":
+            C = Tensor.from_dense(
+                "C", rng.standard_normal((m, 7)).astype(np.float32))
+            return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                                A=Tensor.zeros_dense("A", (n, 7)), B=B, C=C)
+        if expr == "sddmm":
+            C = Tensor.from_dense(
+                "C", rng.standard_normal((n, K)).astype(np.float32))
+            D = Tensor.from_dense(
+                "D", rng.standard_normal((K, m)).astype(np.float32))
+            A = Tensor.from_dense("A", (dB != 0) * 1.0, F.CSR())
+            return rc.parse_tin("A(i,j) = B(i,j) * C(i,k) * D(k,j)",
+                                A=A, B=B, C=C, D=D)
+        if expr == "spadd3":
+            d2 = (np.zeros((n, m), np.float32) if empty
+                  else _sparse_2d(rng, n, m, 0.15))
+            d3 = (np.zeros((n, m), np.float32) if empty
+                  else _sparse_2d(rng, n, m, 0.1))
+            return rc.parse_tin(
+                "A(i,j) = B(i,j) + C(i,j) + D(i,j)",
+                A=Tensor.from_dense("A", np.zeros((n, m), np.float32),
+                                    F.CSR()),
+                B=B, C=Tensor.from_dense("C", d2, fm),
+                D=Tensor.from_dense("D", d3, fm))
+    if expr == "spmttkrp":
+        dims, L = (16, 9, 7), 4
+        dB3 = np.zeros(dims, np.float32)
+        if not empty:
+            dB3 = ((rng.random(dims) < 0.12) *
+                   rng.standard_normal(dims)).astype(np.float32)
+            dB3[rng.integers(0, dims[0])] = 0                   # empty slice
+        B = Tensor.from_dense("B", dB3, fm)
+        C = Tensor.from_dense(
+            "C", rng.standard_normal((dims[1], L)).astype(np.float32))
+        D = Tensor.from_dense(
+            "D", rng.standard_normal((dims[2], L)).astype(np.float32))
+        return rc.parse_tin("A(i,l) = B(i,j,k) * C(j,l) * D(k,l)",
+                            A=Tensor.zeros_dense("A", (dims[0], L)), B=B,
+                            C=C, D=D)
+    raise KeyError(expr)
+
+
+def _check_cell(expr, fmt_name, fmt_ctor, strategy, pieces, empty=False,
+                caplog=None):
+    # deterministic per-cell seed (str hash is process-randomized)
+    cell_tag = f"{expr}/{fmt_name}/{strategy}/{pieces}/{empty}"
+    rng = np.random.default_rng(zlib.crc32(cell_tag.encode()))
+    stmt = _build_stmt(expr, fmt_ctor(), rng, empty=empty)
+    machine = rc.Machine(("x", pieces))
+    sched = (default_row_schedule(stmt, machine) if strategy == "rows"
+             else default_nnz_schedule(stmt, machine))
+    with caplog.at_level(logging.WARNING, logger="repro.lower"):
+        kernel = lower(stmt, machine, schedule=sched)
+    result = kernel.run()
+    got = result.to_dense() if isinstance(result, Tensor) else result
+    expected = interpret(stmt)     # the oracle (pinned by golden tests)
+    np.testing.assert_allclose(got, expected, atol=1e-3,
+                               err_msg=f"cell {kernel.cell_id()}")
+    # census + contract: a fallback cell must have logged its conversion.
+    # Empty-operand cells are distinct matrix entries, not re-checks.
+    cid = kernel.cell_id() + ("~empty" if empty else "")
+    status = "fallback" if kernel.fallbacks else "direct"
+    CENSUS[cid] = {"status": status, "fallbacks": list(kernel.fallbacks)}
+    if kernel.fallbacks:
+        assert any("converting to" in r.message for r in caplog.records), \
+            f"cell {cid} fell back without logging the conversion"
+    return kernel
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("pieces", PIECES)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("fmt_name,fmt_ctor", FORMATS_2D,
+                         ids=[f[0] for f in FORMATS_2D])
+@pytest.mark.parametrize("expr", EXPRESSIONS_2D)
+def test_matrix_2d(expr, fmt_name, fmt_ctor, strategy, pieces, caplog):
+    _check_cell(expr, fmt_name, fmt_ctor, strategy, pieces, caplog=caplog)
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("pieces", PIECES)
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("fmt_name,fmt_ctor", FORMATS_3D,
+                         ids=[f[0] for f in FORMATS_3D])
+@pytest.mark.parametrize("expr", EXPRESSIONS_3D)
+def test_matrix_3d(expr, fmt_name, fmt_ctor, strategy, pieces, caplog):
+    _check_cell(expr, fmt_name, fmt_ctor, strategy, pieces, caplog=caplog)
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("fmt_name,fmt_ctor", FORMATS_2D,
+                         ids=[f[0] for f in FORMATS_2D])
+def test_matrix_empty_operands(fmt_name, fmt_ctor, strategy, caplog):
+    """All-zero sparse operands across every format × strategy (the empty
+    coordinate tree is the classic assembly edge case)."""
+    _check_cell("spmv", fmt_name, fmt_ctor, strategy, 4, empty=True,
+                caplog=caplog)
+
+
+# -- smoke subset (unmarked): one direct + one fallback cell per strategy,
+#    cheap enough for every push --------------------------------------------
+
+@pytest.mark.parametrize("expr,fmt_name,strategy", [
+    ("spmv", "csr", "rows"),
+    ("spmm", "dcsr", "nnz"),
+    ("sddmm", "csc", "nnz"),
+    ("spadd3", "coo", "rows"),
+    ("spmv", "bcsr", "nnz"),       # exercises the conversion-fallback path
+])
+def test_matrix_smoke(expr, fmt_name, strategy, caplog):
+    ctor = dict(FORMATS_2D)[fmt_name]
+    _check_cell(expr, fmt_name, ctor, strategy, 2, caplog=caplog)
+
+
+def test_direct_cells_do_not_convert(caplog):
+    """Row-major formats must NOT silently round-trip through CSR — the
+    level-iterator view is the point of the format-dispatch layer."""
+    k = _check_cell("spmm", "dcsr", F.DCSR, "rows", 4, caplog=caplog)
+    assert k.fallbacks == []
+    k = _check_cell("spmv", "coo", lambda: F.COO(2), "nnz", 4, caplog=caplog)
+    assert k.fallbacks == []
+
+
+# The versioned direct/fallback contract: which formats each strategy must
+# iterate IN PLACE. A cell silently flipping from direct to fallback (or
+# back) fails test_census_matches_contract below — update this table
+# deliberately when adding a direct kernel (and prune the matching ROADMAP
+# open item).
+DIRECT_CONTRACT = {
+    ("2d", "rows"): {"csr", "dcsr", "coo"},
+    ("2d", "nnz"): {"csr", "csc", "dcsr", "coo"},
+    ("3d", "rows"): {"csf", "dcsf"},
+    ("3d", "nnz"): {"csf", "dcsf", "coo3"},
+}
+_FMT_RANK = {f[0]: "2d" for f in FORMATS_2D}
+_FMT_RANK.update({f[0]: "3d" for f in FORMATS_3D})
+
+
+def test_census_matches_contract():
+    """Every cell recorded so far must have the status the contract table
+    predicts (runs after the matrix tests in file order; under -k subsets
+    it checks whatever cells did run)."""
+    for cid, entry in CENSUS.items():
+        _, fmt_name, strategy, _ = cid.split("/")
+        expected = ("direct" if fmt_name in
+                    DIRECT_CONTRACT[(_FMT_RANK[fmt_name], strategy)]
+                    else "fallback")
+        assert entry["status"] == expected, \
+            f"cell {cid}: {entry['status']}, contract says {expected}"

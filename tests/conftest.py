@@ -1,8 +1,42 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
 benches must see 1 device; only launch/dryrun.py (and the subprocess-based
 SPMD tests) force a multi-device host platform."""
+import os
+import sys
+
 import numpy as np
 import pytest
+
+try:  # real hypothesis when installed; deterministic stub otherwise
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_stubs"))
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    """Print the conformance-matrix pass/fallback census (ISSUE 1: the
+    matrix is a versioned artifact; the census is its summary form)."""
+    # Use the module instance pytest imported (cwd-on-sys.path would let
+    # `from tests import conformance` create a SECOND instance whose census
+    # is empty).
+    conformance = sys.modules.get("conformance") or \
+        sys.modules.get("tests.conformance")
+    if conformance is None:
+        return
+    census = conformance.CENSUS
+    if not census:
+        return
+    direct = sorted(c for c, v in census.items() if v["status"] == "direct")
+    fallback = sorted(c for c, v in census.items()
+                      if v["status"] == "fallback")
+    tw = terminalreporter
+    tw.section("conformance matrix census")
+    tw.write_line(
+        f"{len(census)} cells verified against core/interp.py: "
+        f"{len(direct)} direct, {len(fallback)} via logged format conversion")
+    for cid in fallback:
+        conv = "; ".join(census[cid]["fallbacks"])
+        tw.write_line(f"  fallback  {cid}  ({conv})")
 
 
 @pytest.fixture

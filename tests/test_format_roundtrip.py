@@ -1,0 +1,131 @@
+"""Format round-trip property tests (scipy-free, ISSUE 1 satellite).
+
+For every spellable format F and random sparse x:
+  * ``from_format(x).to_dense() == x``  (assembly/disassembly inverse)
+  * ``to_format`` between any two formats preserves the dense image
+including zero-row, zero-column-block, and all-zero edge cases. Runs on the
+deterministic hypothesis stub when the real library is absent.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import formats as F
+from repro.core.tensor import Tensor
+
+FORMATS_2D = [F.CSR(), F.CSC(), F.DCSR(), F.COO(2), F.BCSR((2, 2)),
+              F.BCSR((3, 2)), F.DenseMat()]
+FORMATS_3D = [F.CSF(3), F.DCSF(3), F.COO(3)]
+
+
+def _rand_sparse(seed, n, m, density):
+    rng = np.random.default_rng(seed)
+    d = ((rng.random((n, m)) < density) *
+         rng.standard_normal((n, m))).astype(np.float32)
+    if n > 2:
+        d[rng.integers(0, n)] = 0          # guaranteed empty row
+    return d
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 17),
+       m=st.integers(1, 17), density=st.floats(0.0, 0.6))
+def test_from_dense_to_dense_roundtrip(seed, n, m, density):
+    d = _rand_sparse(seed, n, m, density)
+    for fm in FORMATS_2D:
+        t = Tensor.from_dense("B", d, fm)
+        got = t.to_dense()
+        assert got.shape == d.shape, fm
+        np.testing.assert_allclose(got, d, err_msg=str(fm))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.0, 0.5))
+def test_cross_format_conversion_preserves_dense(seed, density):
+    d = _rand_sparse(seed, 11, 8, density)
+    tensors = {str(fm): Tensor.from_dense("B", d, fm) for fm in FORMATS_2D}
+    for src_name, src in tensors.items():
+        for fm in FORMATS_2D:
+            conv = src.to_format(fm)
+            np.testing.assert_allclose(conv.to_dense(), d,
+                                       err_msg=f"{src_name} -> {fm}")
+            assert conv.format == fm
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), density=st.floats(0.0, 0.4))
+def test_roundtrip_3d(seed, density):
+    rng = np.random.default_rng(seed)
+    d = ((rng.random((7, 6, 5)) < density) *
+         rng.standard_normal((7, 6, 5))).astype(np.float32)
+    d[rng.integers(0, 7)] = 0              # empty slice
+    for fm in FORMATS_3D:
+        t = Tensor.from_dense("T", d, fm)
+        np.testing.assert_allclose(t.to_dense(), d, err_msg=str(fm))
+        np.testing.assert_allclose(t.to_format(F.CSF(3)).to_dense(), d,
+                                   err_msg=f"{fm} -> csf")
+
+
+@pytest.mark.parametrize("fm", FORMATS_2D, ids=[F.format_key(f)
+                                                for f in FORMATS_2D])
+def test_all_zero_roundtrip(fm):
+    z = np.zeros((6, 5), np.float32)
+    t = Tensor.from_dense("Z", z, fm)
+    np.testing.assert_allclose(t.to_dense(), z)
+    for tgt in FORMATS_2D:
+        np.testing.assert_allclose(t.to_format(tgt).to_dense(), z,
+                                   err_msg=f"{fm} -> {tgt}")
+
+
+def test_bcsr_unaligned_shape():
+    """Shapes not divisible by the block: boundary blocks pad internally and
+    the padding must never leak into the dense image."""
+    rng = np.random.default_rng(7)
+    d = ((rng.random((7, 5)) < 0.4) *
+         rng.standard_normal((7, 5))).astype(np.float32)
+    t = Tensor.from_dense("B", d, F.BCSR((3, 4)))
+    assert t.to_dense().shape == (7, 5)
+    np.testing.assert_allclose(t.to_dense(), d)
+    np.testing.assert_allclose(t.to_format(F.CSR()).to_dense(), d)
+
+
+def test_bcsr_stores_block_padding_zeros():
+    """A single non-zero in a 2x2-blocked matrix stores one full block: nnz
+    counts stored values (4), while the CSR conversion keeps only the one
+    true non-zero."""
+    d = np.zeros((4, 4), np.float32)
+    d[1, 1] = 5.0
+    t = Tensor.from_dense("B", d, F.BCSR((2, 2)))
+    assert t.nnz == 4
+    csr = t.to_format(F.CSR())
+    assert csr.nnz == 1
+    np.testing.assert_allclose(csr.to_dense(), d)
+
+
+def test_dense_block_grid_roundtrip():
+    """Blocked format over an all-Dense grid (every block stored): dropped
+    zero blocks must stay zero, including under a column-major ordering —
+    regression for the from_coo-skeleton shortcut corrupting them."""
+    arr = np.arange(16, dtype=np.float32).reshape(4, 4)
+    arr[:2, :2] = 0
+    t = Tensor.from_dense(
+        "B", arr, F.Format((F.Dense, F.Dense), block_shape=(2, 2)))
+    np.testing.assert_allclose(t.to_dense(), arr)
+    arr2 = np.arange(35, dtype=np.float32).reshape(7, 5)
+    t2 = Tensor.from_dense(
+        "B", arr2, F.Format((F.Dense, F.Dense), mode_ordering=(1, 0),
+                            block_shape=(2, 3)))
+    np.testing.assert_allclose(t2.to_dense(), arr2)
+
+
+def test_format_keys_are_stable():
+    """Cell IDs are a versioned artifact — renaming a key silently renames
+    every conformance cell, so pin them."""
+    assert F.format_key(F.CSR()) == "csr"
+    assert F.format_key(F.CSC()) == "csc"
+    assert F.format_key(F.DCSR()) == "dcsr"
+    assert F.format_key(F.COO(2)) == "coo"
+    assert F.format_key(F.BCSR((2, 2))) == "bcsr"
+    assert F.format_key(F.CSF(3)) == "csf"
+    assert F.format_key(F.DCSF(3)) == "dcsf"
+    assert F.format_key(F.COO(3)) == "coo3"

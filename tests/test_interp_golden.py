@@ -1,0 +1,85 @@
+"""Hand-computed golden values for the interpreter oracle (ISSUE 1).
+
+`core.interp.interpret` is the reference every conformance-matrix cell is
+differentially checked against — so it must itself be pinned by values
+computed BY HAND on tiny fixed tensors, not by another numpy expression.
+Each case documents the arithmetic next to the assertion.
+"""
+import numpy as np
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core.interp import interpret
+from repro.core.tensor import Tensor
+
+
+def T(name, arr, fm=None):
+    return Tensor.from_dense(name, np.asarray(arr, np.float32), fm)
+
+
+def test_spmv_golden():
+    # B = [[1 0 2]          a[0] = 1*1 + 0*2 + 2*3 = 7
+    #      [0 0 0]          a[1] = 0              (empty row)
+    #      [0 3 4]]         a[2] = 3*2 + 4*3     = 18
+    B = T("B", [[1, 0, 2], [0, 0, 0], [0, 3, 4]], F.CSR())
+    c = T("c", [1, 2, 3])
+    stmt = rc.parse_tin("a(i) = B(i,j) * c(j)",
+                        a=Tensor.zeros_dense("a", (3,)), B=B, c=c)
+    np.testing.assert_allclose(interpret(stmt), [7.0, 0.0, 18.0])
+
+
+def test_sddmm_golden():
+    # C·D = [[1],[2]] @ [[4, 5]] = [[4  5]
+    #                               [8 10]]
+    # A = B ⊙ (C·D), B = [[2 0], [0 3]]  ->  [[2*4  0], [0  3*10]]
+    B = T("B", [[2, 0], [0, 3]], F.CSR())
+    C = T("C", [[1], [2]])
+    D = T("D", [[4, 5]])
+    A = T("A", [[1, 0], [0, 1]], F.CSR())
+    stmt = rc.parse_tin("A(i,j) = B(i,j) * C(i,k) * D(k,j)",
+                        A=A, B=B, C=C, D=D)
+    np.testing.assert_allclose(interpret(stmt), [[8.0, 0.0], [0.0, 30.0]])
+
+
+def test_spadd3_golden():
+    # [[1 0]    [[0  3]    [[5 0]     [[6 3]
+    #  [0 2]] +  [0 -2]] +  [0 0]] =   [0 0]]   <- (1,1) cancels to zero
+    B = T("B", [[1, 0], [0, 2]], F.CSR())
+    C = T("C", [[0, 3], [0, -2]], F.CSR())
+    D = T("D", [[5, 0], [0, 0]], F.CSR())
+    A = T("A", [[0, 0], [0, 0]], F.CSR())
+    stmt = rc.parse_tin("A(i,j) = B(i,j) + C(i,j) + D(i,j)",
+                        A=A, B=B, C=C, D=D)
+    np.testing.assert_allclose(interpret(stmt), [[6.0, 3.0], [0.0, 0.0]])
+
+
+def test_spmm_golden():
+    # [[1 2]   [[1 0]   [[1*1+2*3  1*0+2*1]   [[7 2]
+    #  [0 3]] @ [3 1]] =  [3*3      3*1    ]] = [9 3]]
+    B = T("B", [[1, 2], [0, 3]], F.CSR())
+    C = T("C", [[1, 0], [3, 1]])
+    stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (2, 2)), B=B, C=C)
+    np.testing.assert_allclose(interpret(stmt), [[7.0, 2.0], [9.0, 3.0]])
+
+
+def test_spmttkrp_golden():
+    # B(0,0,0)=1, B(0,1,1)=2;  C=[[1],[2]], D=[[3],[4]]  (L=1)
+    # A[0] = 1*C[0]*D[0] + 2*C[1]*D[1] = 1*1*3 + 2*2*4 = 19 ; A[1] = 0
+    dB = np.zeros((2, 2, 2), np.float32)
+    dB[0, 0, 0] = 1
+    dB[0, 1, 1] = 2
+    B = T("B", dB, F.CSF(3))
+    C = T("C", [[1], [2]])
+    D = T("D", [[3], [4]])
+    stmt = rc.parse_tin("A(i,l) = B(i,j,k) * C(j,l) * D(k,l)",
+                        A=Tensor.zeros_dense("A", (2, 1)), B=B, C=C, D=D)
+    np.testing.assert_allclose(interpret(stmt), [[19.0], [0.0]])
+
+
+def test_interp_empty_golden():
+    B = T("B", np.zeros((3, 3)), F.CSR())
+    c = T("c", [1, 1, 1])
+    stmt = rc.parse_tin("a(i) = B(i,j) * c(j)",
+                        a=Tensor.zeros_dense("a", (3,)), B=B, c=c)
+    np.testing.assert_allclose(interpret(stmt), np.zeros(3))

@@ -6,6 +6,7 @@ executor and the pjit'd LM step shard correctly — the small-scale version
 of the multi-pod dry-run.
 """
 import json
+import os
 import subprocess
 import sys
 import textwrap
@@ -21,10 +22,15 @@ def run_sub(code: str, devices: int = 8, timeout: int = 420) -> str:
         "import os\n"
         f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
         + textwrap.dedent(code))
+    # Pin the platform: without JAX_PLATFORMS the stripped subprocess env
+    # makes jax probe for TPUs (libtpu is installed in this image) and
+    # spend minutes timing out against the GCE metadata server.
     res = subprocess.run([sys.executable, "-c", prog],
                          capture_output=True, text=True, timeout=timeout,
                          env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                              "HOME": "/root",
+                              "JAX_PLATFORMS": os.environ.get(
+                                  "JAX_PLATFORMS", "cpu")})
     assert res.returncode == 0, res.stderr[-3000:]
     return res.stdout
 
@@ -121,9 +127,10 @@ def test_decode_step_on_mesh_with_cache_sharding():
 
 def test_hierarchical_grad_reduce_three_axes():
     out = run_sub("""
-        import functools
+        import functools, inspect
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.compat import shard_map
         from repro.distributed.collectives import hierarchical_grad_reduce
         from repro.distributed.mesh import make_mesh
 
@@ -134,9 +141,11 @@ def test_hierarchical_grad_reduce_three_axes():
         # must equal a flat psum over all 8 devices, i.e. g * 8.
         # check_vma=False: the reduce-scatter/all-gather pair restores
         # replication over 'data' but the static varying-axes check cannot
-        # infer that through psum_scatter.
-        @functools.partial(jax.shard_map, mesh=mesh,
-                           in_specs=P(), out_specs=P(), check_vma=False)
+        # infer that through psum_scatter. (jax 0.4.x spells it check_rep.)
+        _ck = ("check_vma" if "check_vma" in
+               inspect.signature(shard_map).parameters else "check_rep")
+        @functools.partial(shard_map, mesh=mesh,
+                           in_specs=P(), out_specs=P(), **{_ck: False})
         def reduce_fn(g):
             return hierarchical_grad_reduce({"g": g}, intra_axis="data",
                                             inter_axis="pod")["g"]
@@ -192,3 +201,53 @@ def test_shard_map_spmm_and_sddmm_executors():
         print("SPMD2_OK")
     """)
     assert "SPMD2_OK" in out
+
+
+def test_shard_map_format_general_executors():
+    """Format-general lowering survives the real shard_map backend: a DCSR
+    operand under the nnz SpMM executor and a COO operand under the
+    row-based SDDMM executor (densified-root view) both match the oracle."""
+    out = run_sub("""
+        import numpy as np
+        import repro.core as rc
+        from repro.core import formats as F
+        from repro.core.lower import (default_nnz_schedule,
+                                      default_row_schedule, lower)
+        from repro.core.tensor import Tensor
+        from repro.distributed.executor import to_spmd
+        from repro.distributed.mesh import machine_to_mesh
+
+        M = rc.Machine(("x", 8))
+        rng = np.random.default_rng(2)
+        n, m, K = 96, 80, 8
+        dB = ((rng.random((n, m)) < 0.1) *
+              rng.standard_normal((n, m))).astype(np.float32)
+        dB[5] = 0
+        mesh = machine_to_mesh(M)
+
+        B = Tensor.from_dense("B", dB, F.DCSR())
+        dC = rng.standard_normal((m, 6)).astype(np.float32)
+        stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (n, 6)), B=B,
+                            C=Tensor.from_dense("C", dC))
+        k = lower(stmt, M, schedule=default_nnz_schedule(stmt, M))
+        assert k.fallbacks == [], k.fallbacks
+        y = to_spmd(k, mesh)()
+        assert np.allclose(y, dB @ dC, atol=1e-3), k.leaf_name
+
+        Bc = Tensor.from_dense("B", dB, F.COO(2))
+        dCc = rng.standard_normal((n, K)).astype(np.float32)
+        dDd = rng.standard_normal((K, m)).astype(np.float32)
+        A = Tensor.from_dense("A", (dB != 0) * 1.0, F.CSR())
+        stmt2 = rc.parse_tin("A(i,j) = B(i,j) * C(i,k) * D(k,j)", A=A, B=Bc,
+                             C=Tensor.from_dense("C", dCc),
+                             D=Tensor.from_dense("D", dDd))
+        k2 = lower(stmt2, M, schedule=default_row_schedule(stmt2, M))
+        assert k2.fallbacks == [], k2.fallbacks
+        flat = to_spmd(k2, mesh)()
+        got = Tensor("A", Bc.shape, Bc.format, Bc.levels, flat, Bc.dtype)
+        exp = (dB != 0) * dB * (dCc @ dDd)
+        assert np.allclose(got.to_dense(), exp, atol=1e-3), k2.leaf_name
+        print("FG_SPMD_OK")
+    """)
+    assert "FG_SPMD_OK" in out
