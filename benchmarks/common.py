@@ -1,8 +1,16 @@
-"""Benchmark harness utilities: timing + CSV output."""
+"""Benchmark harness utilities: timing + CSV output + result registry.
+
+Every ``csv_row`` is also recorded in ``RESULTS`` so ``run.py --json`` can
+emit a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
+suite — the perf-trajectory artifact uploaded by nightly CI."""
 from __future__ import annotations
 
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List, Tuple
+
+# (name, us_per_call) rows recorded since the last drain — run.py drains
+# between suites so each suite gets its own JSON file.
+RESULTS: List[Tuple[str, float]] = []
 
 
 def time_fn(fn: Callable, warmup: int = 3, iters: int = 10) -> float:
@@ -20,5 +28,13 @@ def time_fn(fn: Callable, warmup: int = 3, iters: int = 10) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
+    RESULTS.append((name, float(us_per_call)))
     print(row, flush=True)
     return row
+
+
+def drain_results() -> Dict[str, float]:
+    """Return rows recorded since the last drain and reset the registry."""
+    out = dict(RESULTS)
+    RESULTS.clear()
+    return out

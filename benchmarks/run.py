@@ -8,12 +8,18 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
   bench_mismatch      — §II-D: data vs computation distribution (C4)
   bench_weak_scaling  — Fig. 13: banded SpMV weak scaling
   bench_pallas_kernels— leaf/packing microbench
+  bench_bcsr          — direct blocked (BCSR) path vs conversion fallback
 
-Scale flag: ``--quick`` shrinks inputs for CI-speed runs.
+Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
+writes a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
+suite to ``--out-dir`` — the perf-trajectory artifacts collected by
+nightly CI.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 
 
@@ -21,10 +27,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
+    ap.add_argument("--json", action="store_true",
+                    help="write BENCH_<suite>.json alongside the CSV")
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for the BENCH_*.json files")
     args = ap.parse_args()
 
-    from . import (bench_load_balance, bench_mismatch, bench_pallas_kernels,
-                   bench_spadd3, bench_vs_interp, bench_weak_scaling)
+    from . import (bench_bcsr, bench_load_balance, bench_mismatch,
+                   bench_pallas_kernels, bench_spadd3, bench_vs_interp,
+                   bench_weak_scaling)
+    from .common import drain_results
 
     print("name,us_per_call,derived")
     suites = {
@@ -39,16 +51,26 @@ def main() -> None:
             base_n=8000 if args.quick else 40000),
         "pallas_kernels": lambda: bench_pallas_kernels.run(
             n=4000 if args.quick else 20000),
+        "bcsr": lambda: bench_bcsr.run(
+            *((1024, 1024) if args.quick else (4096, 4096)),
+            j=32 if args.quick else 64),
     }
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue
+        drain_results()        # reset the registry for this suite
         print(f"# --- {name} ---", flush=True)
         try:
             fn()
         except Exception as e:  # noqa: BLE001 — report, keep the harness going
             print(f"{name}_ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
             raise
+        if args.json:
+            os.makedirs(args.out_dir, exist_ok=True)
+            path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+            with open(path, "w") as fh:
+                json.dump(drain_results(), fh, indent=2, sort_keys=True)
+            print(f"# wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -256,6 +256,13 @@ class FormatCaps:
     partitions own contiguous *row* windows and leaves may compute into a
     local output slice; false (e.g. CSC) means nnz leaves must reduce over
     the full output extent instead.
+
+    ``block_row_partitionable`` / ``block_nnz_partitionable``: the blocked
+    analogs — a universe partition of dimension 0 can be realized as a
+    contiguous *block-row* interval, and the stored-block position space
+    can be split evenly. True for row-major dense-root block grids (BCSR),
+    which is what the direct blocked leaves consume; blocked formats with a
+    compressed or column-major root still go through a conversion.
     """
 
     key: str
@@ -266,12 +273,16 @@ class FormatCaps:
     row_partitionable: bool
     nnz_partitionable: bool
     root_tracks_dim0: bool
+    block_row_partitionable: bool = False
+    block_nnz_partitionable: bool = False
 
 
 def capabilities(f: Format) -> FormatCaps:
     row_major = f.mode_ordering == tuple(range(len(f.levels)))
     root_compressed = f.levels[0].compressed
     dim0_at_root = f.dim_of_level(0) == 0
+    blocked_direct = (f.is_blocked and dim0_at_root and not root_compressed
+                      and f.is_sparse)
     return FormatCaps(
         key=format_key(f),
         order=len(f.levels),
@@ -281,6 +292,8 @@ def capabilities(f: Format) -> FormatCaps:
         row_partitionable=dim0_at_root and not f.is_blocked,
         nnz_partitionable=f.is_sparse and not f.is_blocked,
         root_tracks_dim0=dim0_at_root,
+        block_row_partitionable=blocked_direct,
+        block_nnz_partitionable=blocked_direct,
     )
 
 
@@ -288,12 +301,18 @@ def supports_2d_default(f: Format, space: str) -> bool:
     """Default capability contract shared by the 2-D kernel families
     (spmv/spmm/sddmm/spadd3): universe needs a row-partitionable operand
     (CSR directly; DCSR/COO via the densified row-window view), nnz needs
-    an nnz-splittable position space (any unblocked sparse format). Kernel
-    modules wrap this in their own ``supports()`` so a family that grows a
-    format-specific leaf (the spmttkrp override pattern) can diverge."""
+    an nnz-splittable position space (any unblocked sparse format). Blocked
+    formats (BCSR) lower directly under BOTH strategies at block
+    granularity — block-row windows for universe, equal stored-block splits
+    for nnz — through the bcsr leaves. Kernel modules wrap this in their
+    own ``supports()`` so a family that grows a format-specific leaf (the
+    spmttkrp override pattern) can diverge."""
     caps = capabilities(f)
     if caps.order != 2:
         return False
+    if caps.blocked:
+        return (caps.block_row_partitionable if space == "universe"
+                else caps.block_nnz_partitionable)
     if space == "universe":
         return caps.row_partitionable
     return caps.nnz_partitionable

@@ -35,10 +35,11 @@ import numpy as np
 
 from . import formats as fmt
 from .partition import (ShardedTensor, TensorPartition,
+                        block_aligned_row_bounds, materialize_add_stream,
+                        materialize_bcsr_nnz, materialize_bcsr_rows,
                         materialize_coo_nnz, materialize_csr_rows,
                         materialize_dense_rows, materialize_replicated,
-                        partition_by_bounds, partition_nonzeros,
-                        partition_tensor_nonzeros,
+                        partition_by_bounds, partition_tensor_nonzeros,
                         partition_tensor_rows, replicate_tensor)
 from .schedule import DistStrategy, Schedule
 from .tdn import Distribution, Machine
@@ -47,6 +48,8 @@ from .tin import Assignment, IndexVar
 
 log = logging.getLogger("repro.lower")
 from ..kernels import ref as K
+from ..kernels.layout import (pack_mat_inner_blocks, pack_mat_row_blocks,
+                              pack_rowwindow_blocks, pack_vec_blocks)
 
 
 @dataclasses.dataclass
@@ -164,11 +167,30 @@ def _scatter_vals(total_nnz, val_blocks, nnz_start, nnz_count):
 def _nbytes(t: Tensor) -> int:
     if t.format.is_all_dense:
         return int(np.prod(t.shape)) * t.vals.dtype.itemsize
+    if t.format.is_blocked:
+        # block-granular payload: one (br, bc) tile + one block coord per
+        # stored block position, plus the block-grid pos arrays
+        tile = int(np.prod(t.format.block_shape)) * t.vals.dtype.itemsize
+        n_blocks = int(t.vals.shape[0]) if t.vals.ndim else 0
+        n = n_blocks * (tile + 4)
+        for ld in t.levels:
+            if ld.pos is not None:
+                n += ld.pos.nbytes
+        return n
     n = t.nnz * (t.vals.dtype.itemsize + 4)  # vals + one crd per level approx
     for ld in t.levels:
         if ld.pos is not None:
             n += ld.pos.nbytes
     return n
+
+
+def _scatter_block_vals(total_blocks, tile_blocks, nnz_start, nnz_count):
+    """Blocked value-region assembly: per-color (br, bc) output tiles into
+    the global stored-block axis — ``_scatter_rows`` with the block axis as
+    the row dimension."""
+    br, bc = tile_blocks.shape[2], tile_blocks.shape[3]
+    return _scatter_rows((max(total_blocks, 1), br, bc), tile_blocks,
+                         nnz_start, nnz_count)[:total_blocks]
 
 
 # ---------------------------------------------------------------------------
@@ -221,11 +243,22 @@ def _normalize_operands(
     mapping: Dict[str, Tensor] = {}
     fallbacks: List[str] = []
     declared: Dict[str, str] = {}
+    # Blocked operands of a multi-operand family (spadd3) must share ONE
+    # block layout — the tile-union leaves merge tiles positionally. Mixed
+    # layouts force the blocked operands through the conversion fallback.
+    sparse_ops = {acc.tensor.name: acc.tensor for acc in stmt.rhs.accesses()
+                  if acc.tensor.format.is_sparse}
+    force_convert: set = set()
+    if (len(sparse_ops) > 1
+            and any(t.format.is_blocked for t in sparse_ops.values())
+            and len({t.format for t in sparse_ops.values()}) > 1):
+        force_convert = {name for name, t in sparse_ops.items()
+                         if t.format.is_blocked}
     for acc in stmt.rhs.accesses():
         t = acc.tensor
         if not t.format.is_sparse or t.name in mapping:
             continue
-        if supports(t.format, space):
+        if supports(t.format, space) and t.name not in force_convert:
             continue
         if not isinstance(t, Tensor):   # TensorVar dry-run: nothing to convert
             continue
@@ -278,6 +311,17 @@ def lower(
         # coordinate-value loop -> createInitialUniversePartitions
         n = stmt.var_extent(dist_var)
         bounds = partition_by_bounds(n, pieces)
+        # A blocked root-partitioned operand snaps the universe split to
+        # block-row boundaries so EVERY co-partitioned tensor (dense row
+        # operands, the output) shares the same per-color row windows.
+        for acc in stmt.rhs.accesses():
+            t = acc.tensor
+            if (t.format.is_sparse and t.format.is_blocked
+                    and dist_var in acc.idx
+                    and t.format.level_of_dim(acc.idx.index(dist_var)) == 0):
+                bounds = block_aligned_row_bounds(
+                    n, pieces, t.format.block_shape[0])
+                break
         for acc in stmt.accesses():
             t = acc.tensor
             if t.name in plans:
@@ -292,21 +336,29 @@ def lower(
             plans[t.name] = replicate_tensor(t, pieces)
     elif (sig, strat.space) in _SELF_MATERIALIZING:
         # spadd3/nnz: the position space is the CONCATENATED stored-entry
-        # stream of all addends; the emitter packs its own equal chunks, so
-        # plan each operand's equal nnz split (imbalance ~0 by construction)
-        # and materialize nothing. Comm = every chunk's union ships to the
-        # root for the cross-chunk merge (rows+cols+vals per entry).
-        total_entries = 0
+        # stream of all addends. Plan each operand's equal nnz split
+        # (imbalance ~0 by construction); the packed chunk shards come from
+        # the materialization layer (materialize_add_stream, cached so a
+        # straggler re-plan reuses the stream). Comm = every chunk's union
+        # ships to the root for the cross-chunk merge — coords+vals per
+        # entry, a whole (br, bc) tile per entry for blocked operands.
+        add_tensors = []
         for acc in stmt.rhs.accesses():
             t = acc.tensor
             if t.name in plans:
                 continue
             if t.format.is_sparse:
                 plans[t.name] = partition_tensor_nonzeros(t, pieces)
-                total_entries += t.nnz
+                add_tensors.append(t)
             else:
                 plans[t.name] = replicate_tensor(t, pieces)
-        comm.reduce_bytes += total_entries * 12
+        shards["_addstream"] = materialize_add_stream(add_tensors, pieces)
+        n_entries = shards["_addstream"].meta["n_entries"]
+        if add_tensors and add_tensors[0].format.is_blocked:
+            tile = int(np.prod(add_tensors[0].format.block_shape))
+            comm.reduce_bytes += n_entries * (8 + tile * 4)
+        else:
+            comm.reduce_bytes += n_entries * 12
     else:
         # coordinate-position loop -> createInitialNonZeroPartition of the
         # position-space (sparse) tensor, then partition the remaining
@@ -343,9 +395,13 @@ def lower(
             shards[name] = materialize_replicated(t, pieces)
             comm.replicate_bytes += _nbytes(t)
         elif strat.space == "nnz" and t.format.is_sparse:
-            shards[name] = materialize_coo_nnz(t, plan)
+            shards[name] = (materialize_bcsr_nnz(t, plan)
+                            if t.format.is_blocked
+                            else materialize_coo_nnz(t, plan))
         elif t.format.is_all_dense:
             shards[name] = materialize_dense_rows(t, plan.root_coord_bounds)
+        elif t.format.is_blocked:
+            shards[name] = materialize_bcsr_rows(t, plan)
         else:
             shards[name] = materialize_csr_rows(t, plan)
 
@@ -361,7 +417,16 @@ def lower(
 
     if strat.space == "nnz" and (sig, strat.space) not in _SELF_MATERIALIZING:
         ov = plans[next(iter(plans))]  # position tensor plan
-        if ov.tensor.format.dim_of_level(0) != 0:
+        if ov.tensor.format.is_blocked:
+            # overlapping BLOCK-rows reduce across colors; the payload per
+            # overlapped block-row is its br-row output stripe
+            bb = ov.levels[0].coord_bounds
+            br = ov.tensor.format.block_shape[0]
+            comm.reduce_bytes += int(
+                (bb[:, 1] - bb[:, 0]).sum()
+                - (bb[:, 1].max() - bb[:, 0].min())
+            ) * br * 4
+        elif ov.tensor.format.dim_of_level(0) != 0:
             # storage root doesn't track output rows (CSC): every color
             # reduces a FULL-extent output partial (see _nnz_row_windows).
             # reduce_bytes is the per-reduction payload; total_network_bytes
@@ -470,6 +535,28 @@ def _emit(stmt, strat, plans, shards, jit=True) -> Tuple[str, Callable]:
         ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "universe"): _emit_spmttkrp_rows,
         ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "nnz"): _emit_spmttkrp_nnz,
     }
+    # Blocked sparse operands route to the direct blocked (BCSR) leaves —
+    # the format-specialized column of the table (paper: one leaf per
+    # expression × strategy × format point).
+    primary = None
+    for acc in stmt.rhs.accesses():
+        if acc.tensor.format.is_sparse:
+            primary = acc.tensor
+            break
+    if primary is not None and primary.format.is_blocked:
+        table = {
+            ("d1(i)=s2(i,j)*d1(j)", "universe"): _emit_bcsr_spmv_rows,
+            ("d1(i)=s2(i,j)*d1(j)", "nnz"): _emit_bcsr_spmv_nnz,
+            ("d2(i,j)=s2(i,k)*d2(k,j)", "universe"): _emit_bcsr_spmm_rows,
+            ("d2(i,j)=s2(i,k)*d2(k,j)", "nnz"): _emit_bcsr_spmm_nnz,
+            ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "universe"):
+                _emit_bcsr_spadd3_rows,
+            ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "nnz"):
+                _emit_bcsr_spadd3_nnz,
+            ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "universe"):
+                _emit_bcsr_sddmm_rows,
+            ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "nnz"): _emit_bcsr_sddmm_nnz,
+        }
     emitter = table.get(key)
     if emitter is None:
         emitter = _emit_generic_fallback
@@ -607,26 +694,17 @@ def _emit_spadd3_nnz(stmt, strat, plans, shards, jit=True):
     """Non-zero SpAdd: the coordinate-position loop of an addition iterates
     the CONCATENATED stored-entry stream of all addends; splitting it evenly
     is the load-balanced strategy (paper §II-D applied to additions — the
-    union position space is the natural fused space). Each color's leaf
+    union position space is the natural fused space). The packed chunks
+    come from the materialization layer (``materialize_add_stream``, keyed
+    ``_addstream`` in the shard set) so a straggler re-plan re-slices a
+    cached stream instead of re-walking the operands. Each color's leaf
     performs the two-phase union on its chunk; host assembly merges
     boundary-straddling duplicates in from_coo(dedupe=True)."""
-    accs = stmt.rhs.accesses()
-    tensors = [acc.tensor for acc in accs]
     n_rows, n_cols = stmt.lhs.tensor.shape
     pieces = strat.pieces
-    coords = np.concatenate([t.coords() for t in tensors], axis=0)
-    vals = np.concatenate([np.asarray(t.vals).reshape(-1) for t in tensors])
-    bounds = partition_nonzeros(coords.shape[0], pieces)
-    counts = (bounds[:, 1] - bounds[:, 0]).astype(np.int32)
-    max_c = int(counts.max()) if counts.size else 0
-    rows_sh = np.zeros((pieces, max_c), dtype=np.int32)
-    cols_sh = np.zeros((pieces, max_c), dtype=np.int32)
-    vals_sh = np.zeros((pieces, max_c), dtype=vals.dtype)
-    for p in range(pieces):
-        lo, hi = int(bounds[p, 0]), int(bounds[p, 1])
-        rows_sh[p, : hi - lo] = coords[lo:hi, 0]
-        cols_sh[p, : hi - lo] = coords[lo:hi, 1]
-        vals_sh[p, : hi - lo] = vals[lo:hi]
+    S = shards["_addstream"]
+    a = S.arrays
+    max_c = int(S.meta["max_nnz"])
 
     def fn(rows, cols, v, cnt):
         leaf = partial(K.leaf_spadd_union_chunk, n_rows=n_rows)
@@ -640,7 +718,8 @@ def _emit_spadd3_nnz(stmt, strat, plans, shards, jit=True):
                                    np.zeros((0, 2), np.int64),
                                    np.zeros((0,), np.float32), fmt.CSR())
         r, c, v, k = (np.asarray(x) for x in
-                      f(rows_sh, cols_sh, vals_sh, jnp.asarray(counts)))
+                      f(a["dim0"], a["dim1"], a["vals"],
+                        jnp.asarray(a["nnz_count"])))
         out_r, out_c, out_v = [], [], []
         for p in range(pieces):
             kk = int(k[p])
@@ -717,6 +796,255 @@ def _emit_sddmm_nnz(stmt, strat, plans, shards, jit=True):
     return run
 
 
+# ---------------------------------------------------------------------------
+# Direct blocked (BCSR) emitters — no conversion, no scalarization: the
+# shards carry (br, bc) value tiles and the leaves contract them as dense
+# tile matmuls (kernels/ref.py leaf_bcsr_*, kernels/bcsr.py on TPU).
+# ---------------------------------------------------------------------------
+
+def _bcsr_nnz_windows(B: ShardedTensor):
+    """Block-row window parameters for a bcsr_nnz shard set; empty shard
+    sets (all-zero operand) fall back to full-grid windows so clip bounds
+    and segment counts stay positive."""
+    a = B.arrays
+    max_brows = int(B.meta["max_brows"])
+    if max_brows > 0:
+        return a["brow_start"], a["row_start"], a["row_count"], max_brows
+    pieces = B.pieces
+    n = int(B.meta["n_rows"])
+    brow_start = jnp.zeros((pieces,), dtype=jnp.int32)
+    row_start = jnp.zeros((pieces,), dtype=jnp.int32)
+    row_count = jnp.full((pieces,), n, dtype=jnp.int32)
+    return brow_start, row_start, row_count, max(int(B.meta["grid_rows"]), 1)
+
+
+def _emit_bcsr_spmv_rows(stmt, strat, plans, shards, jit=True):
+    B = shards[stmt.rhs.accesses()[0].tensor.name]
+    c = shards[stmt.rhs.accesses()[1].tensor.name]
+    n = stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
+                            int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+    def fn(pos, crd, tiles, cb, row_start, row_count):
+        blocks = jax.vmap(K.leaf_bcsr_spmv_rows, in_axes=(0, 0, 0, None))(
+            pos, crd, tiles, cb)                 # (P, max_brows * br)
+        return _scatter_rows((n,), blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["vals"], c_blk,
+                                a["row_start"], a["row_count"]))
+
+
+def _emit_bcsr_spmv_nnz(stmt, strat, plans, shards, jit=True):
+    B = shards[stmt.rhs.accesses()[0].tensor.name]
+    c = shards[stmt.rhs.accesses()[1].tensor.name]
+    n = stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    brow_start, row_start, row_count, max_brows = _bcsr_nnz_windows(B)
+    c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
+                            int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+    def fn(bd0, bd1, tiles, cb, brow_start, row_start, row_count):
+        rl = jnp.clip(bd0 - brow_start[:, None], 0, max_brows - 1)
+        blocks = jax.vmap(
+            K.leaf_bcsr_spmv_nnz, in_axes=(0, 0, 0, None, None))(
+            rl, bd1, tiles, cb, max_brows)       # (P, max_brows * br)
+        return _scatter_rows((n,), blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["bdim0"], a["bdim1"], a["vals"], c_blk,
+                                brow_start, row_start, row_count))
+
+
+def _emit_bcsr_spmm_rows(stmt, strat, plans, shards, jit=True):
+    Bacc, Cacc = stmt.rhs.accesses()
+    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+    def fn(pos, crd, tiles, Cb, row_start, row_count):
+        blocks = jax.vmap(K.leaf_bcsr_spmm_rows, in_axes=(0, 0, 0, None))(
+            pos, crd, tiles, Cb)                 # (P, max_brows * br, J)
+        return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["vals"], C_blk,
+                                a["row_start"], a["row_count"]))
+
+
+def _emit_bcsr_spmm_nnz(stmt, strat, plans, shards, jit=True):
+    Bacc, Cacc = stmt.rhs.accesses()
+    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    brow_start, row_start, row_count, max_brows = _bcsr_nnz_windows(B)
+    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+    def fn(bd0, bd1, tiles, Cb, brow_start, row_start, row_count):
+        rl = jnp.clip(bd0 - brow_start[:, None], 0, max_brows - 1)
+        blocks = jax.vmap(
+            K.leaf_bcsr_spmm_nnz, in_axes=(0, 0, 0, None, None))(
+            rl, bd1, tiles, Cb, max_brows)
+        return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+    f = _jit(fn, jit)
+    return lambda: np.asarray(f(a["bdim0"], a["bdim1"], a["vals"], C_blk,
+                                brow_start, row_start, row_count))
+
+
+def _emit_bcsr_sddmm_rows(stmt, strat, plans, shards, jit=True):
+    """Blocked row-based SDDMM: B's shard tiles sampled against the local C
+    row blocks and replicated D column blocks; output tiles stay aligned
+    with B's stored block positions (pattern-preserving at block
+    granularity)."""
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    br, bc = int(B.meta["br"]), int(B.meta["bc"])
+    max_brows = int(B.meta["max_brows"])
+    # local C row blocks: pad the per-color row windows to the block grid
+    C_blk = pack_rowwindow_blocks(C.arrays["vals"], max_brows, br)
+    D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
+                                  int(B.meta["grid_cols"]), bc)
+    vb = plans[Bt.name].vals_bounds
+    total_blocks = int(Bt.levels[1].nnz or 0)
+    nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
+    nnz_count = jnp.asarray((vb[:, 1] - vb[:, 0]).astype(np.int32))
+
+    def fn(pos, crd, tiles, Cl, Db):
+        def leaf(pos, crd, tiles, Cl):
+            brow = K.rows_from_pos(pos, crd.shape[0])
+            return K.leaf_bcsr_sddmm(brow, crd, tiles, Cl, Db)
+        out = jax.vmap(leaf)(pos, crd, tiles, Cl)   # (P, max_bnnz, br, bc)
+        return _scatter_block_vals(total_blocks, out, nnz_start, nnz_count)
+
+    f = _jit(fn, jit)
+
+    def run():
+        new_tiles = np.asarray(f(a["pos1"], a["crd1"], a["vals"], C_blk,
+                                 D_blk))
+        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
+                      new_tiles, Bt.dtype)
+
+    return run
+
+
+def _emit_bcsr_sddmm_nnz(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    br, bc = int(B.meta["br"]), int(B.meta["bc"])
+    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                int(B.meta["grid_rows"]), br)
+    D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
+                                  int(B.meta["grid_cols"]), bc)
+    vb = plans[Bt.name].vals_bounds
+    total_blocks = int(Bt.levels[1].nnz or 0)
+    nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
+
+    def fn(bd0, bd1, tiles, Cb, Db, counts):
+        out = jax.vmap(K.leaf_bcsr_sddmm, in_axes=(0, 0, 0, None, None))(
+            bd0, bd1, tiles, Cb, Db)
+        return _scatter_block_vals(total_blocks, out, nnz_start, counts)
+
+    f = _jit(fn, jit)
+
+    def run():
+        new_tiles = np.asarray(f(a["bdim0"], a["bdim1"], a["vals"], C_blk,
+                                 D_blk, a["nnz_count"]))
+        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
+                      new_tiles, Bt.dtype)
+
+    return run
+
+
+def _emit_bcsr_spadd3_rows(stmt, strat, plans, shards, jit=True):
+    """Fused blocked three-way add over shared block-row windows: per-shard
+    tile union (duplicate blocks merge by summing tiles), host assembly
+    rebuilds the blocked output DIRECTLY with Tensor.from_blocks — the
+    output format follows the inputs' blocked format."""
+    accs = stmt.rhs.accesses()
+    Bs = [shards[acc.tensor.name] for acc in accs]
+    Bt = accs[0].tensor
+    n_rows, n_cols = stmt.lhs.tensor.shape
+    br, bc = int(Bs[0].meta["br"]), int(Bs[0].meta["bc"])
+
+    def fn(args):
+        (p1, c1, t1), (p2, c2, t2), (p3, c3, t3) = args
+        return jax.vmap(K.leaf_bcsr_spadd3_rows)(
+            p1, c1, t1, p2, c2, t2, p3, c3, t3)
+
+    f = _jit(fn, jit)
+
+    def run():
+        args = tuple(
+            (S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"])
+            for S in Bs)
+        rows, cols, tiles, counts = (np.asarray(x) for x in f(args))
+        brs = np.asarray(Bs[0].arrays["brow_start"])
+        out_coords, out_tiles = [], []
+        for p in range(rows.shape[0]):
+            k = int(counts[p])
+            out_coords.append(
+                np.stack([rows[p, :k] + brs[p], cols[p, :k]], axis=1))
+            out_tiles.append(tiles[p, :k])
+        return Tensor.from_blocks(
+            stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
+            np.concatenate(out_coords), np.concatenate(out_tiles),
+            dedupe=False)    # block-row windows are disjoint
+
+    return run
+
+
+def _emit_bcsr_spadd3_nnz(stmt, strat, plans, shards, jit=True):
+    """Blocked non-zero SpAdd: equal chunks of the concatenated BLOCK
+    stream (materialize_add_stream), per-chunk tile union, host merge of
+    chunk-boundary duplicate blocks in Tensor.from_blocks(dedupe=True)."""
+    S = shards["_addstream"]
+    a = S.arrays
+    Bt = stmt.rhs.accesses()[0].tensor
+    n_rows, n_cols = stmt.lhs.tensor.shape
+    gr = int(S.meta["grid_rows"])
+    br, bc = int(S.meta["br"]), int(S.meta["bc"])
+    max_c = int(S.meta["max_nnz"])
+
+    def fn(bd0, bd1, tiles, cnt):
+        leaf = partial(K.leaf_bcsr_spadd_union_chunk, n_brows=gr)
+        return jax.vmap(leaf)(bd0, bd1, tiles, cnt)
+
+    f = _jit(fn, jit)
+
+    def run():
+        if max_c == 0:
+            return Tensor.from_blocks(
+                stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
+                np.zeros((0, 2), np.int64), np.zeros((0, br, bc), np.float32))
+        rows, cols, tiles, counts = (np.asarray(x) for x in
+                                     f(a["dim0"], a["dim1"], a["vals"],
+                                       jnp.asarray(a["nnz_count"])))
+        out_coords, out_tiles = [], []
+        for p in range(rows.shape[0]):
+            k = int(counts[p])
+            out_coords.append(np.stack([rows[p, :k], cols[p, :k]], axis=1))
+            out_tiles.append(tiles[p, :k])
+        return Tensor.from_blocks(
+            stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
+            np.concatenate(out_coords), np.concatenate(out_tiles),
+            dedupe=True)
+
+    return run
+
+
 def _emit_spttv_rows(stmt, strat, plans, shards, jit=True):
     accs = stmt.rhs.accesses()
     B = shards[accs[0].tensor.name]
@@ -740,10 +1068,13 @@ def _emit_spttv_rows(stmt, strat, plans, shards, jit=True):
     def run():
         new_vals = np.asarray(f(a["pos1"], a["crd1"], a["pos2"], a["crd2"],
                                 a["vals"], cv))
-        # output tensor: (i,j) matrix with B's ij pattern (CSR)
+        # output tensor: (i,j) matrix with B's ij pattern, in the format
+        # the input's first two levels spell — CSF yields CSR, DCSF yields
+        # DCSR (the output format follows the input's)
         import copy
         lv = [copy.copy(Bt.levels[0]), copy.copy(Bt.levels[1])]
-        return Tensor(stmt.lhs.tensor.name, Bt.shape[:2], fmt.CSR(), lv,
+        out_fmt = fmt.Format(Bt.format.levels[:2])
+        return Tensor(stmt.lhs.tensor.name, Bt.shape[:2], out_fmt, lv,
                       new_vals, Bt.dtype)
 
     return run
@@ -773,8 +1104,10 @@ def _emit_spttv_nnz(stmt, strat, plans, shards, jit=True):
         for p in range(counts.shape[0]):
             mask[p * mn: p * mn + counts[p]] = True
         coords = np.stack([di[mask], dj[mask]], 1)
+        # the assembled output format follows the input's (i, j) levels
+        out_fmt = fmt.Format(Bt.format.levels[:2])
         return Tensor.from_coo(stmt.lhs.tensor.name, Bt.shape[:2], coords,
-                               prod[mask], fmt.CSR(), dedupe=True)
+                               prod[mask], out_fmt, dedupe=True)
 
     return run
 

@@ -21,6 +21,7 @@ which is Legion's coherence story made explicit.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -172,6 +173,17 @@ def _dense_prefix(tensor: Tensor) -> int:
     return sum(1 for lf in tensor.format.levels if not lf.compressed)
 
 
+def block_aligned_row_bounds(n: int, pieces: int, block_rows: int) -> Bounds:
+    """Equal universe split of ``[0, n)`` whose cut points land on block-row
+    boundaries: split the block-row grid evenly, then scale back to rows
+    (clipped to ``n`` for the boundary block). Row-partitioning a blocked
+    tensor and its unblocked co-operands with these bounds keeps every
+    color's row window identical across formats."""
+    grid_rows = -(-n // block_rows)
+    bb = partition_by_bounds(grid_rows, pieces)
+    return np.minimum(bb * block_rows, n)
+
+
 def partition_tensor_rows(tensor: Tensor, row_bounds: Bounds) -> TensorPartition:
     """Universe partition of the ROOT level by coordinate intervals, derived
     downward through the whole tree (paper: ``partitionFromParent`` chain).
@@ -180,8 +192,12 @@ def partition_tensor_rows(tensor: Tensor, row_bounds: Bounds) -> TensorPartition
     A Dense root keys the chain directly (CSR/CSF); a Compressed root
     (DCSR/DCSF/COO) is bucketed with ``partition_by_value_ranges`` over its
     sorted ``crd`` first — paper Table I's Compressed/universe entry — and
-    the image chain continues from the resulting position interval.
+    the image chain continues from the resulting position interval. Blocked
+    tensors partition at block-row granularity (see
+    ``partition_tensor_block_rows``).
     """
+    if tensor.format.is_blocked:
+        return partition_tensor_block_rows(tensor, row_bounds)
     pieces = row_bounds.shape[0]
     levels: List[LevelPartition] = []
     order = tensor.order
@@ -233,6 +249,70 @@ def partition_tensor_rows(tensor: Tensor, row_bounds: Bounds) -> TensorPartition
     )
 
 
+def partition_tensor_block_rows(tensor: Tensor, row_bounds: Bounds,
+                                ) -> TensorPartition:
+    """Universe partition of a blocked tensor at BLOCK-ROW granularity.
+
+    The coordinate tree indexes the block grid, so a row interval realizes
+    as a contiguous block-row interval: the given row bounds are snapped to
+    block boundaries (identity when the caller used
+    ``block_aligned_row_bounds``; unaligned cuts give the straddling block
+    to the earlier color so windows stay disjoint), then the image chain
+    derives the stored-block position interval exactly as for CSR.
+    ``vals_bounds`` index the (n_blocks, br, bc) tile axis;
+    ``root_coord_bounds`` stay in ROW space (clipped to the tensor edge) so
+    output scatters are format-agnostic."""
+    assert tensor.format.is_blocked and tensor.order == 2
+    if _dense_prefix(tensor) != 1:
+        raise ValueError(
+            f"direct block partition needs a dense root: {tensor.format}")
+    br = tensor.format.block_shape[0]
+    n = tensor.shape[0]
+    pieces = row_bounds.shape[0]
+    blo = row_bounds[:, 0].astype(np.int64) // br
+    bhi = -(-row_bounds[:, 1].astype(np.int64) // br)
+    for p in range(1, pieces):          # disjoint block windows
+        blo[p] = max(blo[p], bhi[p - 1])
+        bhi[p] = max(bhi[p], blo[p])
+    bb = np.stack([blo, bhi], axis=1)
+    pos_bounds = image(tensor.levels[1].pos, bb)
+    levels = [LevelPartition(coord_bounds=bb.copy()),
+              LevelPartition(pos_bounds=pos_bounds.copy())]
+    rows = np.minimum(bb * br, n)
+    return TensorPartition(
+        tensor=tensor, pieces=pieces, levels=levels,
+        vals_bounds=pos_bounds, root_coord_bounds=rows,
+        overlapping_root=False,
+    )
+
+
+def partition_tensor_block_nonzeros(tensor: Tensor, pieces: int,
+                                    weights: Optional[np.ndarray] = None,
+                                    ) -> TensorPartition:
+    """Non-zero partition of a blocked tensor: equal (or weighted) split of
+    the STORED-BLOCK position space, root block-row ownership derived with
+    preimage. The per-color payload is block-granular — each position moves
+    a whole (br, bc) tile."""
+    assert tensor.format.is_blocked and tensor.order == 2
+    if _dense_prefix(tensor) != 1:
+        raise ValueError(
+            f"direct block partition needs a dense root: {tensor.format}")
+    br = tensor.format.block_shape[0]
+    n = tensor.shape[0]
+    n_blocks = tensor.levels[1].nnz or 0
+    init = partition_nonzeros(n_blocks, pieces, weights)
+    up = preimage(tensor.levels[1].pos, init)       # block-row entry bounds
+    levels = [LevelPartition(coord_bounds=up.copy()),
+              LevelPartition(pos_bounds=init.copy())]
+    rows = np.minimum(up * br, n)
+    return TensorPartition(
+        tensor=tensor, pieces=pieces, levels=levels,
+        vals_bounds=init.astype(np.int64),
+        root_coord_bounds=rows.astype(np.int64),
+        overlapping_root=True,
+    )
+
+
 def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
                               weights: Optional[np.ndarray] = None,
                               fused_levels: Optional[int] = None,
@@ -245,16 +325,12 @@ def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
     re-plan). ``fused_levels`` < order realizes PARTIAL fusion (paper
     Fig. 5's "non-zero tubes": T_xyz with xy→f splits the level-2 position
     space evenly, then derives the leaf via image and the root via
-    preimage)."""
+    preimage). Blocked tensors split their stored-block position space
+    (``partition_tensor_block_nonzeros``)."""
     if tensor.format.is_all_dense:
         raise ValueError("non-zero partition of a dense tensor — use rows")
     if tensor.format.is_blocked:
-        # blocked coords() drops block-padding cells, so position-space
-        # slices would misalign with vals; the capability layer routes
-        # these through a conversion before lowering.
-        raise ValueError(
-            f"non-zero partition of blocked format {tensor.format} — "
-            "convert first (formats.conversion_target)")
+        return partition_tensor_block_nonzeros(tensor, pieces, weights)
     order = tensor.order
     n_dense = _dense_prefix(tensor)
     split_level = order - 1 if fused_levels is None else fused_levels - 1
@@ -361,7 +437,10 @@ class ShardedTensor:
         if vb is None or "vals" not in self.arrays:
             return 0.0
         real = float((vb[:, 1] - vb[:, 0]).sum())
-        alloc = float(np.prod(self.arrays["vals"].shape))
+        v = self.arrays["vals"]
+        if v.ndim > 2:      # blocked shards: bounds count (br, bc) tiles
+            real *= float(np.prod(v.shape[2:]))
+        alloc = float(np.prod(v.shape))
         return 0.0 if alloc == 0 else 1.0 - real / alloc
 
 
@@ -565,6 +644,199 @@ def materialize_coo_nnz(tensor: Tensor, part: TensorPartition) -> ShardedTensor:
               "root_dim": tensor.format.dim_of_level(0)},
         partition=part,
     )
+
+
+def _blocked_meta(tensor: Tensor) -> Dict[str, int]:
+    br, bc = tensor.format.block_shape
+    return {
+        "br": br, "bc": bc,
+        "n_rows": tensor.shape[0], "n_cols": tensor.shape[1],
+        "grid_rows": tensor.levels[0].size,
+        "grid_cols": tensor.levels[1].size,
+    }
+
+
+def materialize_bcsr_rows(tensor: Tensor, part: TensorPartition,
+                          ) -> ShardedTensor:
+    """Blocked-CSR shard per color from a block-row interval partition.
+
+    The per-shard layout is the CSR convention lifted to the block grid:
+    ``pos1``/``crd1`` walk block-rows/block-columns, ``vals`` keeps each
+    stored position's dense (br, bc) tile — the shard ships MXU-ready
+    tiles, never scalarized entries. Boundary blocks retain their
+    zero-padding cells; ``row_count`` (row space, clipped to the tensor
+    edge) is what keeps that padding out of assembled results."""
+    pieces = part.pieces
+    br, bc = tensor.format.block_shape
+    bb = part.levels[0].coord_bounds                 # block-row windows
+    pb = part.levels[1].pos_bounds                   # stored-block windows
+    brow_counts = bb[:, 1] - bb[:, 0]
+    max_brows = int(brow_counts.max()) if pieces else 0
+    max_bnnz = int((pb[:, 1] - pb[:, 0]).max()) if pieces else 0
+    ld = tensor.levels[1]
+    pos_shards = np.zeros((pieces, max_brows + 1), dtype=INT)
+    crd_shards = np.zeros((pieces, max_bnnz), dtype=INT)
+    vals_shards = np.zeros((pieces, max_bnnz, br, bc), dtype=tensor.vals.dtype)
+    for p in range(pieces):
+        blo, bhi = int(bb[p, 0]), int(bb[p, 1])
+        clo, chi = int(pb[p, 0]), int(pb[p, 1])
+        local_pos = ld.pos[blo: bhi + 1].astype(np.int64) - clo
+        local_pos = _pad_to(local_pos.astype(INT), max_brows + 1,
+                            fill=int(local_pos[-1]) if local_pos.size else 0)
+        pos_shards[p] = local_pos
+        crd_shards[p, : chi - clo] = ld.crd[clo:chi]
+        vals_shards[p, : chi - clo] = tensor.vals[clo:chi]
+    rb = part.root_coord_bounds
+    arrays = {
+        "pos1": pos_shards,
+        "crd1": crd_shards,
+        "vals": vals_shards,
+        "row_start": rb[:, 0].astype(INT),
+        "row_count": (rb[:, 1] - rb[:, 0]).astype(INT),
+        "brow_start": bb[:, 0].astype(INT),
+        "brow_count": brow_counts.astype(INT),
+        "nnz_count": (pb[:, 1] - pb[:, 0]).astype(INT),
+    }
+    meta = dict(_blocked_meta(tensor), max_rows=max_brows * br,
+                max_brows=max_brows, max_bnnz=max_bnnz)
+    return ShardedTensor(kind="bcsr_rows", pieces=pieces, arrays=arrays,
+                         meta=meta, partition=part)
+
+
+def materialize_bcsr_nnz(tensor: Tensor, part: TensorPartition,
+                         ) -> ShardedTensor:
+    """Equal-stored-block shards from a block non-zero partition: per-color
+    global (block-row, block-col) columns + (br, bc) value tiles, plus the
+    preimage-derived block-row ownership window (overlapping — boundary
+    block-rows reduce across colors, the paper's §II-D trade made at block
+    granularity)."""
+    pieces = part.pieces
+    br, bc = tensor.format.block_shape
+    vb = part.vals_bounds
+    bcoords = tensor.block_coords().astype(np.int64)     # (nb, 2) dim order
+    counts = vb[:, 1] - vb[:, 0]
+    max_bnnz = int(counts.max()) if pieces else 0
+    bdim0 = np.zeros((pieces, max_bnnz), dtype=INT)
+    bdim1 = np.zeros((pieces, max_bnnz), dtype=INT)
+    vals_shards = np.zeros((pieces, max_bnnz, br, bc), dtype=tensor.vals.dtype)
+    for p in range(pieces):
+        lo, hi = int(vb[p, 0]), int(vb[p, 1])
+        bdim0[p, : hi - lo] = bcoords[lo:hi, 0]
+        bdim1[p, : hi - lo] = bcoords[lo:hi, 1]
+        vals_shards[p, : hi - lo] = tensor.vals[lo:hi]
+    rb = part.root_coord_bounds
+    bb = part.levels[0].coord_bounds
+    arrays = {
+        "bdim0": bdim0,
+        "bdim1": bdim1,
+        "vals": vals_shards,
+        "nnz_count": counts.astype(INT),
+        "row_start": rb[:, 0].astype(INT),
+        "row_count": (rb[:, 1] - rb[:, 0]).astype(INT),
+        "brow_start": bb[:, 0].astype(INT),
+        "brow_count": (bb[:, 1] - bb[:, 0]).astype(INT),
+    }
+    meta = dict(_blocked_meta(tensor),
+                max_rows=int((rb[:, 1] - rb[:, 0]).max()) if pieces else 0,
+                max_brows=int((bb[:, 1] - bb[:, 0]).max()) if pieces else 0,
+                max_bnnz=max_bnnz, root_dim=0)
+    return ShardedTensor(kind="bcsr_nnz", pieces=pieces, arrays=arrays,
+                         meta=meta, partition=part)
+
+
+# ---------------------------------------------------------------------------
+# SpAdd non-zero strategy: the position space is the CONCATENATED
+# stored-entry stream of all addends. Packing that stream is a
+# materialization (not a plan) step — cached so a re-plan (straggler
+# weights re-lower over the SAME operands) only re-slices the chunks.
+# ---------------------------------------------------------------------------
+
+_ADD_STREAM_CACHE: Dict[str, dict] = {}
+ADD_STREAM_STATS = {"hits": 0, "misses": 0}
+
+
+def _stream_fingerprint(tensors: Sequence[Tensor]) -> int:
+    """CRC over every operand's storage regions — catches in-place value
+    OR structure mutation between lowers. O(nnz) but pure streaming
+    reads, far cheaper than re-walking coords() and re-concatenating."""
+    h = 0
+    for t in tensors:
+        h = zlib.crc32(np.ascontiguousarray(t.vals), h)
+        for ld in t.levels:
+            if ld.pos is not None:
+                h = zlib.crc32(np.ascontiguousarray(ld.pos), h)
+            if ld.crd is not None:
+                h = zlib.crc32(np.ascontiguousarray(ld.crd), h)
+    return h
+
+
+def concat_entry_stream(tensors: Sequence[Tensor]) -> Dict[str, np.ndarray]:
+    """Concatenated coordinate/value stream of the addends, in operand
+    order. Blocked operands concatenate their BLOCK streams ((n_blocks, 2)
+    grid coords + (n_blocks, br, bc) tiles); unblocked ones their scalar
+    coordinate streams. Cached so re-planning reuses the packed arrays:
+    the entry pins the operand objects (object identity, so no stale
+    ``id()`` reuse) and a storage fingerprint guards against in-place
+    mutation between lowers."""
+    fp = _stream_fingerprint(tensors)
+    cached = _ADD_STREAM_CACHE.get("stream")
+    if (cached is not None
+            and len(cached["tensors"]) == len(tensors)
+            and all(a is b for a, b in zip(cached["tensors"], tensors))
+            and cached["fp"] == fp):
+        ADD_STREAM_STATS["hits"] += 1
+        return cached
+    ADD_STREAM_STATS["misses"] += 1
+    if tensors[0].format.is_blocked:
+        bs = tensors[0].format.block_shape
+        coords = np.concatenate(
+            [t.block_coords().astype(np.int64) for t in tensors], axis=0)
+        vals = np.concatenate(
+            [t.vals.reshape((-1,) + tuple(bs)) for t in tensors], axis=0)
+    else:
+        coords = np.concatenate([t.coords().astype(np.int64)
+                                 for t in tensors], axis=0)
+        vals = np.concatenate([np.asarray(t.vals).reshape(-1)
+                               for t in tensors], axis=0)
+    stream = {"coords": coords, "vals": vals,
+              "tensors": tuple(tensors), "fp": fp}
+    _ADD_STREAM_CACHE["stream"] = stream   # keep the latest stream only
+    return stream
+
+
+def materialize_add_stream(tensors: Sequence[Tensor], pieces: int,
+                           weights: Optional[np.ndarray] = None,
+                           ) -> ShardedTensor:
+    """Equal (or straggler-weighted) chunks of the concatenated addend
+    stream, padded to the uniform chunk size — the shard set consumed by
+    the nnz SpAdd emitters (scalar or blocked)."""
+    stream = concat_entry_stream(tensors)
+    coords, vals = stream["coords"], stream["vals"]
+    blocked = tensors[0].format.is_blocked
+    bounds = partition_nonzeros(coords.shape[0], pieces, weights)
+    counts = (bounds[:, 1] - bounds[:, 0]).astype(INT)
+    max_c = int(counts.max()) if pieces else 0
+    d0 = np.zeros((pieces, max_c), dtype=INT)
+    d1 = np.zeros((pieces, max_c), dtype=INT)
+    vshape = (pieces, max_c) + tuple(vals.shape[1:])
+    vs = np.zeros(vshape, dtype=vals.dtype)
+    for p in range(pieces):
+        lo, hi = int(bounds[p, 0]), int(bounds[p, 1])
+        d0[p, : hi - lo] = coords[lo:hi, 0]
+        d1[p, : hi - lo] = coords[lo:hi, 1]
+        vs[p, : hi - lo] = vals[lo:hi]
+    t0 = tensors[0]
+    part = TensorPartition(tensor=t0, pieces=pieces, levels=[],
+                           vals_bounds=bounds.astype(np.int64))
+    arrays = {"dim0": d0, "dim1": d1, "vals": vs, "nnz_count": counts}
+    meta: Dict[str, int] = {"max_nnz": max_c,
+                            "n_entries": int(coords.shape[0])}
+    kind = "add_stream"
+    if blocked:
+        meta.update(_blocked_meta(t0))
+        kind = "add_stream_blocked"
+    return ShardedTensor(kind=kind, pieces=pieces, arrays=arrays, meta=meta,
+                         partition=part)
 
 
 def materialize_replicated(tensor: Tensor, pieces: int) -> ShardedTensor:

@@ -133,6 +133,52 @@ class Tensor:
                       block_vals[order_idx], arr.dtype)
 
     @staticmethod
+    def from_blocks(
+        name: str,
+        shape: Sequence[int],
+        format: Format,
+        block_coords: np.ndarray,
+        block_vals: np.ndarray,
+        dedupe: bool = True,
+    ) -> "Tensor":
+        """Assemble a blocked tensor directly from ``(n_blocks, order)``
+        block-grid coordinates (dimension order) + ``(n_blocks, *block)``
+        value tiles — the blocked analog of :meth:`from_coo`, used by the
+        direct BCSR execution path to rebuild outputs without densifying.
+        ``dedupe=True`` merges duplicate block coordinates by summing their
+        tiles (chunk-boundary duplicates of the nnz strategy)."""
+        assert format.is_blocked
+        shape = tuple(int(s) for s in shape)
+        bs = format.block_shape
+        grid = tuple(-(-s // b) for s, b in zip(shape, bs))
+        bc = np.asarray(block_coords, dtype=np.int64).reshape(-1, len(shape))
+        bv = np.asarray(block_vals).reshape((-1,) + tuple(bs))
+        if bc.shape[0] == 0:
+            skeleton = Tensor.from_coo(
+                name, grid, bc, np.zeros((0,), np.float64),
+                fmt.Format(format.levels, format.mode_ordering), dedupe=False)
+            return Tensor(name, shape, format, skeleton.levels,
+                          bv.astype(bv.dtype), bv.dtype)
+        if dedupe:
+            lin = np.zeros(bc.shape[0], dtype=np.int64)
+            for d in range(len(shape)):
+                lin = lin * grid[d] + bc[:, d]
+            order = np.argsort(lin, kind="stable")
+            lin, bc, bv = lin[order], bc[order], bv[order]
+            uniq, inv = np.unique(lin, return_inverse=True)
+            merged = np.zeros((uniq.shape[0],) + tuple(bs), dtype=bv.dtype)
+            np.add.at(merged, inv, bv)
+            keep = np.searchsorted(lin, uniq)
+            bc, bv = bc[keep], merged
+        # grid-tree skeleton carries the stored order back to the tiles
+        skeleton = Tensor.from_coo(
+            name, grid, bc, np.arange(bc.shape[0], dtype=np.float64),
+            fmt.Format(format.levels, format.mode_ordering), dedupe=False)
+        order_idx = skeleton.vals.astype(np.int64)
+        return Tensor(name, shape, format, skeleton.levels, bv[order_idx],
+                      bv.dtype)
+
+    @staticmethod
     def from_coo(
         name: str,
         shape: Sequence[int],

@@ -24,6 +24,8 @@ from ..compat import shard_map
 from ..core.lower import LoweredKernel
 from ..core.tdn import Machine
 from ..kernels import ref as K
+from ..kernels.layout import (pack_mat_inner_blocks, pack_mat_row_blocks,
+                              pack_rowwindow_blocks, pack_vec_blocks)
 from .mesh import machine_to_mesh
 
 
@@ -213,6 +215,201 @@ def sddmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     return call
 
 
+def bcsr_spmv_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """Direct blocked SpMV under shard_map: each color's shard carries
+    (br, bc) value tiles over its block-row window; the dense vector is
+    broadcast pre-packed into column blocks. Disjoint block-aligned row
+    windows assemble without reduction."""
+    B = kernel.shards[kernel.stmt.rhs.accesses()[0].tensor.name]
+    c = kernel.shards[kernel.stmt.rhs.accesses()[1].tensor.name]
+    n = kernel.stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
+                            int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=P(axis))
+    def run(pos, crd, tiles, cb):
+        return K.leaf_bcsr_spmv_rows(pos[0], crd[0], tiles[0], cb)[None]
+
+    def call():
+        yb = np.asarray(run(jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
+                            jnp.asarray(a["vals"]), jnp.asarray(c_blk)))
+        out = np.zeros(n, np.float32)
+        rs, cnt = np.asarray(a["row_start"]), np.asarray(a["row_count"])
+        for p in range(yb.shape[0]):
+            out[rs[p]: rs[p] + cnt[p]] = yb[p, : cnt[p]]
+        return out
+
+    return call
+
+
+def bcsr_spmv_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """Blocked non-zero SpMV under shard_map: every color reduces a
+    full-block-grid partial with psum — global block-rows, so overlapping
+    block-row ownership needs no window bookkeeping."""
+    B = kernel.shards[kernel.stmt.rhs.accesses()[0].tensor.name]
+    c = kernel.shards[kernel.stmt.rhs.accesses()[1].tensor.name]
+    n = kernel.stmt.lhs.tensor.shape[0]
+    gr = int(B.meta["grid_rows"])
+    a = B.arrays
+    c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
+                            int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=P())
+    def run(bd0, bd1, tiles, cb):
+        y = K.leaf_bcsr_spmv_nnz(bd0[0], bd1[0], tiles[0], cb, gr)
+        return jax.lax.psum(y, axis_name=axis)
+
+    def call():
+        y = np.asarray(run(jnp.asarray(a["bdim0"]), jnp.asarray(a["bdim1"]),
+                           jnp.asarray(a["vals"]), jnp.asarray(c_blk)))
+        return y[:n]
+
+    return call
+
+
+def bcsr_spmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """Blocked row-based SpMM: per color the shard's tiles contract against
+    the broadcast row-blocked dense operand — every stored block a dense
+    (br, bc) @ (bc, J) matmul."""
+    Bacc, Cacc = kernel.stmt.rhs.accesses()
+    B = kernel.shards[Bacc.tensor.name]
+    C = kernel.shards[Cacc.tensor.name]
+    n, J = kernel.stmt.lhs.tensor.shape
+    a = B.arrays
+    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=P(axis))
+    def run(pos, crd, tiles, Cb):
+        return K.leaf_bcsr_spmm_rows(pos[0], crd[0], tiles[0], Cb)[None]
+
+    def call():
+        yb = np.asarray(run(jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
+                            jnp.asarray(a["vals"]), jnp.asarray(C_blk)))
+        out = np.zeros((n, J), np.float32)
+        rs, cnt = np.asarray(a["row_start"]), np.asarray(a["row_count"])
+        for p in range(yb.shape[0]):
+            out[rs[p]: rs[p] + cnt[p]] = yb[p, : cnt[p]]
+        return out
+
+    return call
+
+
+def bcsr_spmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """Blocked non-zero SpMM under shard_map: global block-rows over the
+    full grid extent, psum-reduced — the blocked analog of spmm_nnz."""
+    Bacc, Cacc = kernel.stmt.rhs.accesses()
+    B = kernel.shards[Bacc.tensor.name]
+    C = kernel.shards[Cacc.tensor.name]
+    n = kernel.stmt.lhs.tensor.shape[0]
+    gr = int(B.meta["grid_rows"])
+    a = B.arrays
+    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=P())
+    def run(bd0, bd1, tiles, Cb):
+        y = K.leaf_bcsr_spmm_nnz(bd0[0], bd1[0], tiles[0], Cb, gr)
+        return jax.lax.psum(y, axis_name=axis)
+
+    def call():
+        y = np.asarray(run(jnp.asarray(a["bdim0"]), jnp.asarray(a["bdim1"]),
+                           jnp.asarray(a["vals"]), jnp.asarray(C_blk)))
+        return y[:n]
+
+    return call
+
+
+def bcsr_sddmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """Blocked row-based SDDMM under shard_map: B's block-row shard sampled
+    against its local C row blocks (block-aligned windows) and the
+    broadcast column-blocked D; tiles reassemble by value-space bounds."""
+    accs = kernel.stmt.rhs.accesses()
+    B = kernel.shards[accs[0].tensor.name]
+    C = kernel.shards[accs[1].tensor.name]
+    D = kernel.shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    br, bc = int(B.meta["br"]), int(B.meta["bc"])
+    max_brows = int(B.meta["max_brows"])
+    C_blk = pack_rowwindow_blocks(C.arrays["vals"], max_brows, br)
+    D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
+                                  int(B.meta["grid_cols"]), bc)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
+        out_specs=P(axis))
+    def run(pos, crd, tiles, Cl, Db):
+        brow = K.rows_from_pos(pos[0], crd[0].shape[0])
+        return K.leaf_bcsr_sddmm(brow, crd[0], tiles[0], Cl[0], Db)[None]
+
+    def call():
+        out_tiles = np.asarray(run(
+            jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
+            jnp.asarray(a["vals"]), jnp.asarray(C_blk), jnp.asarray(D_blk)))
+        total_blocks = int(Bt.levels[1].nnz or 0)
+        flat = np.zeros((total_blocks, br, bc), np.float32)
+        vb = kernel.plans[Bt.name].vals_bounds
+        cnt = np.asarray(a["nnz_count"])
+        for p in range(out_tiles.shape[0]):
+            flat[vb[p, 0]: vb[p, 0] + cnt[p]] = out_tiles[p, : cnt[p]]
+        return flat
+
+    return call
+
+
+def bcsr_sddmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """Blocked non-zero SDDMM: equal stored-block shards sample the
+    broadcast block-packed factors; output tiles stay aligned with the
+    stored block positions (no reduction — pattern-preserving)."""
+    accs = kernel.stmt.rhs.accesses()
+    B = kernel.shards[accs[0].tensor.name]
+    C = kernel.shards[accs[1].tensor.name]
+    D = kernel.shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    br, bc = int(B.meta["br"]), int(B.meta["bc"])
+    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                int(B.meta["grid_rows"]), br)
+    D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
+                                  int(B.meta["grid_cols"]), bc)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(), P()),
+        out_specs=P(axis))
+    def run(bd0, bd1, tiles, Cb, Db):
+        return K.leaf_bcsr_sddmm(bd0[0], bd1[0], tiles[0], Cb, Db)[None]
+
+    def call():
+        out_tiles = np.asarray(run(
+            jnp.asarray(a["bdim0"]), jnp.asarray(a["bdim1"]),
+            jnp.asarray(a["vals"]), jnp.asarray(C_blk), jnp.asarray(D_blk)))
+        total_blocks = int(Bt.levels[1].nnz or 0)
+        flat = np.zeros((total_blocks, br, bc), np.float32)
+        vb = kernel.plans[Bt.name].vals_bounds
+        cnt = np.asarray(a["nnz_count"])
+        for p in range(out_tiles.shape[0]):
+            flat[vb[p, 0]: vb[p, 0] + cnt[p]] = out_tiles[p, : cnt[p]]
+        return flat
+
+    return call
+
+
 SPMD_BUILDERS: Dict[str, Callable] = {
     "spmv_rows": spmv_rows_spmd,
     "spmv_nnz": spmv_nnz_spmd,
@@ -220,6 +417,12 @@ SPMD_BUILDERS: Dict[str, Callable] = {
     "spmm_nnz": spmm_nnz_spmd,
     "sddmm_rows": sddmm_rows_spmd,
     "sddmm_nnz": sddmm_nnz_spmd,
+    "bcsr_spmv_rows": bcsr_spmv_rows_spmd,
+    "bcsr_spmv_nnz": bcsr_spmv_nnz_spmd,
+    "bcsr_spmm_rows": bcsr_spmm_rows_spmd,
+    "bcsr_spmm_nnz": bcsr_spmm_nnz_spmd,
+    "bcsr_sddmm_rows": bcsr_sddmm_rows_spmd,
+    "bcsr_sddmm_nnz": bcsr_sddmm_nnz_spmd,
 }
 
 

@@ -92,6 +92,96 @@ def ell_pack(pos: np.ndarray, crd: np.ndarray, vals: np.ndarray,
     return (blocks, *packed_extra)
 
 
+@dataclasses.dataclass
+class BcsrEllBlocks:
+    """Block-row-group ELL arrays for a blocked (BCSR) shard.
+
+    The scalar row-block ELL lifted one level: groups of ``block_R``
+    BLOCK-rows, each group's stored blocks padded to a lane-aligned count;
+    per stored block we keep the relative block-row, the block-column and
+    the dense (br, bc) value tile. ``brows_rel == block_R`` marks padding
+    (zero tiles)."""
+
+    brows_rel: np.ndarray   # (n_groups, bnnz)
+    crd: np.ndarray         # (n_groups, bnnz) block-columns
+    vals: np.ndarray        # (n_groups, bnnz, br, bc) tiles
+    block_R: int
+    n_brows: int
+
+    def padding_waste(self) -> float:
+        alloc = self.brows_rel.size
+        real = int((self.brows_rel < self.block_R).sum())
+        return 0.0 if alloc == 0 else 1.0 - real / alloc
+
+
+def bcsr_ell_pack(pos: np.ndarray, crd: np.ndarray, tiles: np.ndarray,
+                  block_R: int = 8, block_nb: int = 16) -> BcsrEllBlocks:
+    """Re-block a blocked-CSR (pos, crd, (nb, br, bc) tiles) into
+    block-row-group ELL for the Pallas bcsr kernels."""
+    pos = np.asarray(pos, dtype=np.int64)
+    n_brows = pos.shape[0] - 1
+    n_groups = max(-(-n_brows // block_R), 1)
+    gpos = pos[np.minimum(np.arange(n_groups + 1) * block_R, n_brows)]
+    gcounts = np.diff(gpos)
+    bnnz = int(gcounts.max()) if n_groups else 0
+    bnnz = max(-(-bnnz // block_nb) * block_nb, block_nb)
+    brows = np.repeat(np.arange(n_brows, dtype=np.int64), np.diff(pos))
+    br, bc = tiles.shape[1], tiles.shape[2]
+    rr = np.full((n_groups, bnnz), block_R, dtype=INT)
+    cc = np.zeros((n_groups, bnnz), dtype=INT)
+    vv = np.zeros((n_groups, bnnz, br, bc), dtype=tiles.dtype)
+    for g in range(n_groups):
+        lo, hi = int(gpos[g]), int(gpos[g + 1])
+        k = hi - lo
+        rr[g, :k] = (brows[lo:hi] - g * block_R).astype(INT)
+        cc[g, :k] = crd[lo:hi]
+        vv[g, :k] = tiles[lo:hi]
+    return BcsrEllBlocks(brows_rel=rr, crd=cc, vals=vv, block_R=block_R,
+                         n_brows=n_brows)
+
+
+# -- dense-operand packing for the blocked leaves ---------------------------
+# Reshape unblocked co-operands into blocks aligned with a blocked sparse
+# operand's (br, bc) grid. Host-side materialize-time work, numpy only so
+# core.lower can call these without importing the Pallas modules.
+
+def pack_vec_blocks(c: np.ndarray, grid_cols: int, bc: int) -> np.ndarray:
+    """Dense vector (m,) → column blocks (grid_cols, bc), zero-padded."""
+    c = np.asarray(c)
+    out = np.zeros((grid_cols * bc,), dtype=c.dtype)
+    out[: c.shape[0]] = c
+    return out.reshape(grid_cols, bc)
+
+
+def pack_mat_row_blocks(C: np.ndarray, grid: int, b: int) -> np.ndarray:
+    """Dense matrix (n, K) → leading-dim blocks (grid, b, K), zero-padded."""
+    C = np.asarray(C)
+    out = np.zeros((grid * b, C.shape[1]), dtype=C.dtype)
+    out[: C.shape[0]] = C
+    return out.reshape(grid, b, C.shape[1])
+
+
+def pack_rowwindow_blocks(Cv: np.ndarray, max_brows: int, b: int,
+                          ) -> np.ndarray:
+    """Per-color dense row windows (P, max_rows, K) → block-grid row
+    blocks (P, max_brows, b, K), zero-padding rows past each window (the
+    local C operand of the blocked row-based SDDMM)."""
+    Cv = np.asarray(Cv)
+    pad = max_brows * b - Cv.shape[1]
+    Cv = np.pad(Cv, ((0, 0), (0, max(pad, 0)), (0, 0)))[:, : max_brows * b]
+    return Cv.reshape(Cv.shape[0], max_brows, b, Cv.shape[2])
+
+
+def pack_mat_inner_blocks(D: np.ndarray, grid: int, b: int) -> np.ndarray:
+    """Dense matrix (K, m) → trailing-dim blocks (grid, K, b): the column
+    blocks an SDDMM leaf gathers by block-column."""
+    D = np.asarray(D)
+    out = np.zeros((D.shape[0], grid * b), dtype=D.dtype)
+    out[:, : D.shape[1]] = D
+    return np.ascontiguousarray(
+        out.reshape(D.shape[0], grid, b).transpose(1, 0, 2))
+
+
 def coo_block_pad(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
                   block_n: int = 128):
     """Pad sorted COO arrays to a multiple of ``block_n`` for the two-phase

@@ -22,7 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .layout import coo_block_pad, ell_pack
+from .bcsr import bcsr_sddmm, bcsr_spadd3, bcsr_spmm, bcsr_spmv
+from .layout import (bcsr_ell_pack, coo_block_pad, ell_pack,
+                     pack_mat_inner_blocks, pack_mat_row_blocks,
+                     pack_vec_blocks)
 from .sddmm import sddmm_coo
 from .spadd3 import spadd3_dense_tiles
 from .spmm import spmm_ell
@@ -87,6 +90,97 @@ def spmm(pos, crd, vals, C, impl: str = "xla",
                  block_r=block_r, block_n=block_n, block_j=block_j,
                  interpret=_interpret())
     return y[: pos.shape[0] - 1]
+
+
+# ---------------------------------------------------------------------------
+# Blocked (BCSR) ops — the direct blocked path's public API. Inputs are the
+# block-grid CSR arrays (pos over block-rows, crd block-columns, (nb, br,
+# bc) value tiles); dense co-operands are packed into matching blocks here.
+# ---------------------------------------------------------------------------
+
+def spmv_bcsr(pos, crd, tiles, c, impl: str = "xla",
+              block_R: int = 8, block_nb: int = 16):
+    """y(grid_rows * br,) = BCSR(pos, crd, tiles) @ c — slice to n_rows."""
+    tiles = np.asarray(tiles)
+    bc = tiles.shape[2]
+    grid_cols = -(-np.asarray(c).shape[0] // bc)
+    c_blk = pack_vec_blocks(np.asarray(c), grid_cols, bc)
+    if impl == "xla":
+        return jax.jit(ref.leaf_bcsr_spmv_rows)(
+            jnp.asarray(pos), jnp.asarray(crd), jnp.asarray(tiles),
+            jnp.asarray(c_blk))
+    blocks = bcsr_ell_pack(np.asarray(pos), np.asarray(crd), tiles,
+                           block_R=block_R, block_nb=block_nb)
+    y = bcsr_spmv(jnp.asarray(blocks.brows_rel), jnp.asarray(blocks.crd),
+                  jnp.asarray(blocks.vals), jnp.asarray(c_blk),
+                  block_R=block_R, block_nb=block_nb,
+                  interpret=_interpret())
+    return y[: (pos.shape[0] - 1) * tiles.shape[1]]
+
+
+def spmm_bcsr(pos, crd, tiles, C, impl: str = "xla",
+              block_R: int = 8, block_nb: int = 16):
+    """Y(grid_rows * br, J) = BCSR @ C(K, J) — slice to n_rows."""
+    tiles = np.asarray(tiles)
+    bc = tiles.shape[2]
+    C = np.asarray(C)
+    grid_cols = -(-C.shape[0] // bc)
+    C_blk = pack_mat_row_blocks(C, grid_cols, bc)
+    if impl == "xla":
+        return jax.jit(ref.leaf_bcsr_spmm_rows)(
+            jnp.asarray(pos), jnp.asarray(crd), jnp.asarray(tiles),
+            jnp.asarray(C_blk))
+    blocks = bcsr_ell_pack(np.asarray(pos), np.asarray(crd), tiles,
+                           block_R=block_R, block_nb=block_nb)
+    y = bcsr_spmm(jnp.asarray(blocks.brows_rel), jnp.asarray(blocks.crd),
+                  jnp.asarray(blocks.vals), jnp.asarray(C_blk),
+                  block_R=block_R, block_nb=block_nb,
+                  interpret=_interpret())
+    return y[: (pos.shape[0] - 1) * tiles.shape[1]]
+
+
+def sddmm_bcsr(brow, bcol, tiles, C, D, impl: str = "xla",
+               block_nb: int = 16):
+    """out tiles (nb, br, bc) = tiles ⊙ sampled C(n,K) @ D(K,m) blocks."""
+    tiles = np.asarray(tiles)
+    br, bc = tiles.shape[1], tiles.shape[2]
+    C, D = np.asarray(C), np.asarray(D)
+    C_blk = pack_mat_row_blocks(C, -(-C.shape[0] // br), br)
+    D_blk = pack_mat_inner_blocks(D, -(-D.shape[1] // bc), bc)
+    if impl == "xla":
+        return jax.jit(ref.leaf_bcsr_sddmm)(
+            jnp.asarray(brow), jnp.asarray(bcol), jnp.asarray(tiles),
+            jnp.asarray(C_blk), jnp.asarray(D_blk))
+    nb = tiles.shape[0]
+    pad = -(-max(nb, 1) // block_nb) * block_nb - nb
+    bpad = np.concatenate([np.asarray(brow, np.int32),
+                           np.zeros(pad, np.int32)])
+    cpad = np.concatenate([np.asarray(bcol, np.int32),
+                           np.zeros(pad, np.int32)])
+    tpad = np.concatenate([tiles, np.zeros((pad, br, bc), tiles.dtype)])
+    out = bcsr_sddmm(jnp.asarray(bpad), jnp.asarray(cpad),
+                     jnp.asarray(tpad), jnp.asarray(C_blk),
+                     jnp.asarray(D_blk), block_nb=block_nb,
+                     interpret=_interpret())
+    return out[:nb]
+
+
+def spadd3_bcsr_dense(bcsr1, bcsr2, bcsr3, n_rows: int, n_cols: int,
+                      impl: str = "pallas", block_R: int = 8):
+    """Dense(n, m) = B + C + D from three blocked (pos, crd, tiles)
+    triples sharing one block shape — the fused blocked add."""
+    bc = np.asarray(bcsr1[2]).shape[2]
+    grid_cols = -(-n_cols // bc)
+    if impl == "xla":
+        f = jax.jit(partial(ref.leaf_bcsr_spadd3_dense, grid_cols=grid_cols))
+        dense = f(*(jnp.asarray(x) for t in (bcsr1, bcsr2, bcsr3)
+                    for x in t))
+        return dense[:n_rows, :n_cols]
+    packed = [bcsr_ell_pack(np.asarray(p), np.asarray(c), np.asarray(t),
+                            block_R=block_R)
+              for (p, c, t) in (bcsr1, bcsr2, bcsr3)]
+    return bcsr_spadd3(*packed, n_rows=n_rows, n_cols=n_cols,
+                       block_R=block_R, interpret=_interpret())
 
 
 # ---------------------------------------------------------------------------

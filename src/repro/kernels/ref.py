@@ -207,6 +207,141 @@ def leaf_spadd3_dense_rows(pos1, crd1, v1, pos2, crd2, v2, pos3, crd3, v3,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Blocked (BCSR) leaves — every stored position carries a dense (br, bc)
+# value tile, so the inner op per position is a dense tile matmul (the MXU
+# contract the direct blocked path compiles to). Dense co-operands arrive
+# pre-reshaped into matching blocks (kernels.bcsr pack_* helpers); boundary
+# blocks keep their zero padding, which multiplies away.
+# ---------------------------------------------------------------------------
+
+def leaf_bcsr_spmv_rows(pos, crd, bvals, c_blk):
+    """y_local(R*br,) from a blocked row shard: per stored block a
+    (br, bc) @ (bc,) tile matvec, segment-summed over block-rows.
+    ``c_blk`` is the dense vector in column blocks, (grid_cols, bc)."""
+    R = pos.shape[0] - 1
+    brow = rows_from_pos(pos, crd.shape[0])
+    cg = jnp.take(c_blk, crd, axis=0)                  # (NB, bc)
+    prod = jnp.einsum("nrc,nc->nr", bvals, cg)
+    acc = jax.ops.segment_sum(prod, brow, num_segments=R)
+    return acc.reshape(-1)
+
+
+def leaf_bcsr_spmv_nnz(brow_local, bcol, bvals, c_blk, max_brows):
+    """Equal-stored-block shard: block-rows already rebased to the shard's
+    block-row window; padding blocks have zero tiles."""
+    cg = jnp.take(c_blk, bcol, axis=0)
+    prod = jnp.einsum("nrc,nc->nr", bvals, cg)
+    acc = jax.ops.segment_sum(prod, brow_local, num_segments=max_brows)
+    return acc.reshape(-1)
+
+
+def leaf_bcsr_spmm_rows(pos, crd, bvals, C_blk):
+    """Y_local(R*br, J): per stored block a dense (br, bc) @ (bc, J)
+    matmul. ``C_blk`` is the dense operand in row blocks, (grid_cols, bc, J)."""
+    R = pos.shape[0] - 1
+    brow = rows_from_pos(pos, crd.shape[0])
+    cg = jnp.take(C_blk, crd, axis=0)                  # (NB, bc, J)
+    prod = jnp.einsum("nrc,ncj->nrj", bvals, cg)
+    acc = jax.ops.segment_sum(prod, brow, num_segments=R)
+    return acc.reshape(-1, cg.shape[-1])
+
+
+def leaf_bcsr_spmm_nnz(brow_local, bcol, bvals, C_blk, max_brows):
+    cg = jnp.take(C_blk, bcol, axis=0)
+    prod = jnp.einsum("nrc,ncj->nrj", bvals, cg)
+    acc = jax.ops.segment_sum(prod, brow_local, num_segments=max_brows)
+    return acc.reshape(-1, cg.shape[-1])
+
+
+def leaf_bcsr_sddmm(brow, bcol, bvals, C_blk, D_blk):
+    """out tiles (NB, br, bc) = bvals ⊙ (C row-block @ D col-block), the
+    pattern-preserving sampled product at block granularity. ``C_blk``
+    (n_brow_blocks, br, K) row blocks — shard-local under rows, the full
+    grid under nnz; ``D_blk`` (grid_cols, K, bc) column blocks."""
+    Cg = jnp.take(C_blk, brow, axis=0)                 # (NB, br, K)
+    Dg = jnp.take(D_blk, bcol, axis=0)                 # (NB, K, bc)
+    sampled = jnp.einsum("nrk,nkc->nrc", Cg, Dg)
+    return bvals * sampled
+
+
+def _tile_union(brows, bcols, tiles, valid):
+    """Shared two-phase union over (block-row, block-col) keyed TILE
+    streams: lexsort, segment-sum duplicate tiles, compact. ``brows`` must
+    already carry the past-every-valid sentinel on invalid slots."""
+    if brows.shape[0] == 0:      # statically-empty stream (empty operands)
+        return (brows.astype(jnp.int32), bcols.astype(jnp.int32), tiles,
+                jnp.zeros((), jnp.int32))
+    order = jnp.lexsort((bcols, brows))
+    r_s, c_s, t_s = brows[order], bcols[order], tiles[order]
+    valid_s = valid[order]
+    newseg = jnp.concatenate([
+        jnp.array([True]),
+        (r_s[1:] != r_s[:-1]) | (c_s[1:] != c_s[:-1]),
+    ])
+    n = brows.shape[0]
+    seg_id = jnp.cumsum(newseg) - 1
+    out_tiles = jax.ops.segment_sum(t_s, seg_id, num_segments=n)
+    first = jax.ops.segment_min(jnp.arange(n, dtype=jnp.int32), seg_id,
+                                num_segments=n)
+    first = jnp.clip(first, 0, n - 1)
+    out_r = jnp.take(r_s, first)
+    out_c = jnp.take(c_s, first)
+    count = jnp.sum((newseg & valid_s).astype(jnp.int32))
+    in_range = jnp.arange(n) < count
+    out_r = jnp.where(in_range, out_r, 0).astype(jnp.int32)
+    out_c = jnp.where(in_range, out_c, 0).astype(jnp.int32)
+    out_tiles = jnp.where(in_range[:, None, None], out_tiles, 0)
+    return out_r, out_c, out_tiles, count
+
+
+def leaf_bcsr_spadd3_rows(pos1, crd1, t1, pos2, crd2, t2, pos3, crd3, t3):
+    """Fused three-way blocked add over a block-row shard: union of the
+    three block coordinate streams, duplicate blocks merged by summing
+    their (br, bc) tiles — no scalarization. Returns a padded union block
+    stream (brows_local, bcols, tiles, count)."""
+    R = pos1.shape[0] - 1
+    brows = jnp.concatenate([
+        rows_from_pos(pos1, crd1.shape[0]),
+        rows_from_pos(pos2, crd2.shape[0]),
+        rows_from_pos(pos3, crd3.shape[0]),
+    ])
+    bcols = jnp.concatenate([crd1, crd2, crd3])
+    tiles = jnp.concatenate([t1, t2, t3])
+    valid = jnp.concatenate([
+        jnp.arange(crd1.shape[0]) < (pos1[-1] - pos1[0]),
+        jnp.arange(crd2.shape[0]) < (pos2[-1] - pos2[0]),
+        jnp.arange(crd3.shape[0]) < (pos3[-1] - pos3[0]),
+    ])
+    brows = jnp.where(valid, brows, R).astype(jnp.int32)
+    return _tile_union(brows, bcols, tiles, valid)
+
+
+def leaf_bcsr_spadd_union_chunk(brows, bcols, tiles, count, n_brows):
+    """Per-chunk union leaf for the blocked nnz SpAdd strategy: the chunk
+    slices the concatenated BLOCK stream of all addends; duplicate blocks
+    straddling chunk boundaries merge in the host assembly
+    (Tensor.from_blocks dedupe)."""
+    n = brows.shape[0]
+    valid = jnp.arange(n) < count
+    brows = jnp.where(valid, brows, n_brows).astype(jnp.int32)
+    return _tile_union(brows, bcols, tiles, valid)
+
+
+def leaf_bcsr_spadd3_dense(pos1, crd1, t1, pos2, crd2, t2, pos3, crd3, t3,
+                           grid_cols):
+    """Dense-accumulate variant of the blocked add (the XLA counterpart of
+    the bcsr_spadd3 Pallas kernel): scatter-add all three tile streams into
+    a dense block grid, return row-major dense (R*br, grid_cols*bc)."""
+    R = pos1.shape[0] - 1
+    br, bc = t1.shape[1], t1.shape[2]
+    out = jnp.zeros((R, grid_cols, br, bc), dtype=t1.dtype)
+    for pos, crd, t in ((pos1, crd1, t1), (pos2, crd2, t2), (pos3, crd3, t3)):
+        brow = rows_from_pos(pos, crd.shape[0])
+        out = out.at[brow, crd].add(t)
+    return out.transpose(0, 2, 1, 3).reshape(R * br, grid_cols * bc)
+
+
 def leaf_spttv_rows(pos1, crd1, pos2, crd2, vals, c):
     """A(i,j) = B(i,j,k)·c(k) over a CSF row shard. Output sparsity equals
     B's (i,j) pattern (paper §V-B) → returns vals aligned with level-1

@@ -27,7 +27,9 @@ def supports(format: "fmt.Format", space: str) -> bool:
     leaf is storage-order agnostic (per-position sampled products), so any
     unblocked sparse format works under nnz — including CSC, whose vals
     simply stay in column-major position order. Universe needs the
-    row-window view."""
+    row-window view. BCSR lowers directly to sampled block products
+    (kernels/bcsr.py), the output tiles staying aligned with the stored
+    block positions."""
     return fmt.supports_2d_default(format, space)
 
 

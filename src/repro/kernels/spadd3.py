@@ -27,8 +27,11 @@ from ..core import formats as fmt
 def supports(format: "fmt.Format", space: str) -> bool:
     """Format-dispatch query. The union-add leaves iterate all operands in
     row order, so universe needs the row-window view for EVERY operand;
-    the nnz strategy splits the concatenated coordinate stream of the three
-    operands, which any unblocked sparse format can feed."""
+    the nnz strategy splits the concatenated coordinate stream of the
+    three operands, which any unblocked sparse format can feed. Blocked
+    operands lower directly via the tile-union leaves (kernels/bcsr.py),
+    merging duplicate blocks by summing (br, bc) tiles — lower.py falls
+    back to conversion when the three operands' block shapes disagree."""
     return fmt.supports_2d_default(format, space)
 
 

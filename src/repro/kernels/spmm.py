@@ -28,7 +28,8 @@ from ..core import formats as fmt
 def supports(format: "fmt.Format", space: str) -> bool:
     """Format-dispatch query — same capability contract as spmv (the sparse
     operand's row/nnz iteration is identical; only the dense operand
-    changes)."""
+    changes). BCSR lowers directly: each stored block is a dense
+    (br, bc) @ (bc, J) MXU matmul (kernels/bcsr.py)."""
     return fmt.supports_2d_default(format, space)
 
 

@@ -38,7 +38,9 @@ def supports(format: "fmt.Format", space: str) -> bool:
     maps to contiguous storage — CSR directly, DCSR/COO via the densified
     row-window view. Non-zero leaves need an nnz-splittable position space
     (any unblocked sparse format; non-row-major roots like CSC reduce over
-    the full output extent instead of a row window)."""
+    the full output extent instead of a row window). Blocked formats
+    (BCSR) route to the direct blocked leaves (kernels/bcsr.py) under both
+    strategies — block-row windows / stored-block splits."""
     return fmt.supports_2d_default(format, space)
 
 

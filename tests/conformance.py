@@ -192,7 +192,8 @@ def test_matrix_empty_operands(fmt_name, fmt_ctor, strategy, caplog):
     ("spmm", "dcsr", "nnz"),
     ("sddmm", "csc", "nnz"),
     ("spadd3", "coo", "rows"),
-    ("spmv", "bcsr", "nnz"),       # exercises the conversion-fallback path
+    ("spmv", "bcsr", "nnz"),       # exercises the direct blocked path
+    ("spmv", "csc", "rows"),       # exercises the conversion-fallback path
 ])
 def test_matrix_smoke(expr, fmt_name, strategy, caplog):
     ctor = dict(FORMATS_2D)[fmt_name]
@@ -214,8 +215,8 @@ def test_direct_cells_do_not_convert(caplog):
 # deliberately when adding a direct kernel (and prune the matching ROADMAP
 # open item).
 DIRECT_CONTRACT = {
-    ("2d", "rows"): {"csr", "dcsr", "coo"},
-    ("2d", "nnz"): {"csr", "csc", "dcsr", "coo"},
+    ("2d", "rows"): {"csr", "dcsr", "coo", "bcsr"},
+    ("2d", "nnz"): {"csr", "csc", "dcsr", "coo", "bcsr"},
     ("3d", "rows"): {"csf", "dcsf"},
     ("3d", "nnz"): {"csf", "dcsf", "coo3"},
 }
