@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
   bench_weak_scaling  — Fig. 13: banded SpMV weak scaling
   bench_pallas_kernels— leaf/packing microbench
   bench_bcsr          — direct blocked (BCSR) path vs conversion fallback
+  bench_replan        — re-plan fast path: cold lower vs warm re-lower
+                        (plan/shard/runner caches) vs execute-only
 
 Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
 writes a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
@@ -26,7 +28,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default="")
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite names (default: all)")
     ap.add_argument("--json", action="store_true",
                     help="write BENCH_<suite>.json alongside the CSV")
     ap.add_argument("--out-dir", default=".",
@@ -34,8 +37,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (bench_bcsr, bench_load_balance, bench_mismatch,
-                   bench_pallas_kernels, bench_spadd3, bench_vs_interp,
-                   bench_weak_scaling)
+                   bench_pallas_kernels, bench_replan, bench_spadd3,
+                   bench_vs_interp, bench_weak_scaling)
     from .common import drain_results
 
     print("name,us_per_call,derived")
@@ -54,9 +57,18 @@ def main() -> None:
         "bcsr": lambda: bench_bcsr.run(
             *((1024, 1024) if args.quick else (4096, 4096)),
             j=32 if args.quick else 64),
+        "replan": lambda: bench_replan.run(
+            *((2048, 2048) if args.quick else (4096, 4096)),
+            j=32 if args.quick else 64),
     }
+    only = {s for s in args.only.split(",") if s} if args.only else None
+    if only:
+        unknown = only - suites.keys()
+        if unknown:
+            ap.error(f"unknown suite(s): {', '.join(sorted(unknown))}; "
+                     f"available: {', '.join(suites)}")
     for name, fn in suites.items():
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         drain_results()        # reset the registry for this suite
         print(f"# --- {name} ---", flush=True)

@@ -16,8 +16,8 @@ from .formats import (BCSR, COO, CSC, CSF, CSR, DCSF, DCSR, DDC, Compressed,
                       Dense, DenseMat, DenseND, DenseVec, Format, Singleton,
                       SparseVec, capabilities, conversion_target, format_key)
 from .interp import interpret
-from .lower import (LoweredKernel, default_nnz_schedule, default_row_schedule,
-                    lower)
+from .lower import (CacheStats, LoweredKernel, clear_lowering_caches,
+                    default_nnz_schedule, default_row_schedule, lower)
 from .partition import (ShardedTensor, TensorPartition, image,
                         partition_by_bounds, partition_tensor_nonzeros,
                         partition_tensor_rows, preimage, replicate_tensor)
@@ -30,7 +30,8 @@ __all__ = [
     "formats", "BCSR", "COO", "CSC", "CSF", "CSR", "DCSF", "DCSR", "DDC",
     "Compressed", "Dense", "DenseMat", "DenseND", "DenseVec", "Format",
     "Singleton", "capabilities", "conversion_target", "format_key",
-    "SparseVec", "interpret", "LoweredKernel", "default_nnz_schedule",
+    "SparseVec", "interpret", "CacheStats", "LoweredKernel",
+    "clear_lowering_caches", "default_nnz_schedule",
     "default_row_schedule", "lower", "image", "preimage",
     "partition_by_bounds", "partition_tensor_nonzeros",
     "partition_tensor_rows", "replicate_tensor", "CPUThread", "Schedule",

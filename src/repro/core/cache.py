@@ -1,0 +1,88 @@
+"""Bounded LRU caches for the re-plan fast path.
+
+DISTAL-style systems separate the expensive format/partition *assembly*
+step from steady-state execution; our analog is a trio of content-keyed
+caches (shard materialization in :mod:`.partition`, plan memoization and
+compiled runners in :mod:`.lower`, shard_map executables in
+:mod:`repro.distributed.executor`) all built on this one LRU. Keys are
+content fingerprints (CRC over storage regions), so a re-plan over
+unchanged operands is near-free while any value or structure change —
+including in-place mutation — misses and re-packs.
+
+Every cache is bounded (the unbounded-growth latent in the original
+one-off add-stream cache) and keeps ``hits`` / ``misses`` / ``evictions``
+counters that :class:`repro.core.lower.LoweredKernel` snapshots per lower
+call (``kernel.cache``), alongside ``CommStats``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Dict, Hashable, Optional, Sequence, Tuple
+
+
+def avals_key(arrays: Sequence) -> Tuple:
+    """Shapes/dtypes key component shared by the compiled-runner caches
+    (core.lower._runner, distributed.executor._spmd_runner)."""
+    return tuple((tuple(a.shape), str(a.dtype)) for a in arrays)
+
+
+class LRUCache:
+    """A bounded mapping with least-recently-used eviction + counters."""
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._d: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self.stats: Dict[str, int] = {"hits": 0, "misses": 0, "evictions": 0}
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        """Return the cached value (refreshing recency) or None; counts a
+        hit or a miss either way — pair every ``get`` with a ``put`` on
+        None so the counters read as cache effectiveness."""
+        try:
+            value = self._d[key]
+        except KeyError:
+            self.stats["misses"] += 1
+            return None
+        self._d.move_to_end(key)
+        self.stats["hits"] += 1
+        return value
+
+    def put(self, key: Hashable, value: Any) -> None:
+        self._d[key] = value
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.stats["evictions"] += 1
+
+    def get_or_build(self, key: Hashable, factory: Callable[[], Any]) -> Any:
+        """Return the cached value, or build + insert it (one hit or miss
+        is counted either way)."""
+        value = self.get(key)
+        if value is None:
+            value = factory()
+            self.put(key, value)
+        return value
+
+    def set_capacity(self, capacity: int) -> None:
+        """Re-bound the cache (evicting oldest entries if shrinking)."""
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.stats["evictions"] += 1
+
+    def clear(self) -> None:
+        """Drop all entries (counters are kept; reset via reset_stats)."""
+        self._d.clear()
+
+    def reset_stats(self) -> None:
+        self.stats.update(hits=0, misses=0, evictions=0)
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key: Hashable) -> bool:  # no recency update
+        return key in self._d

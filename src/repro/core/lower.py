@@ -33,14 +33,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .cache import LRUCache, avals_key
 from . import formats as fmt
-from .partition import (ShardedTensor, TensorPartition,
-                        block_aligned_row_bounds, materialize_add_stream,
+from .partition import (SHARD_CACHE_STATS, ShardedTensor, TensorPartition,
+                        block_aligned_row_bounds, clear_shard_cache,
+                        fingerprint_memo, materialize_add_stream,
                         materialize_bcsr_nnz, materialize_bcsr_rows,
                         materialize_coo_nnz, materialize_csr_rows,
                         materialize_dense_rows, materialize_replicated,
                         partition_by_bounds, partition_tensor_nonzeros,
-                        partition_tensor_rows, replicate_tensor)
+                        partition_tensor_rows, replicate_tensor,
+                        tensor_fingerprint, weights_fingerprint)
 from .schedule import DistStrategy, Schedule
 from .tdn import Distribution, Machine
 from .tensor import Tensor
@@ -84,6 +87,90 @@ class CommStats:
         }
 
 
+# ---------------------------------------------------------------------------
+# Re-plan fast path: plan memoization + compiled-runner reuse. Together with
+# partition.SHARD_CACHE these make re-lowering over unchanged inputs
+# near-free — the expensive assembly (partition walk, numpy shard packing,
+# jit re-tracing) happens once; a straggler re-plan or repeated solve pays
+# only content fingerprinting + execution.
+# ---------------------------------------------------------------------------
+
+# Memoized plans: (signature, strategy, pieces, weights, operand
+# fingerprints) -> {name: TensorPartition}. An unchanged schedule over
+# unchanged operands skips the partitioning walk entirely; _plans_equal is
+# the differential check (tests assert a memoized plan equals a freshly
+# computed one).
+_PLAN_CACHE = LRUCache(capacity=64)
+PLAN_CACHE_STATS = _PLAN_CACHE.stats
+
+# Compiled runners: (emitter name, static trace constants, shard array
+# shapes/dtypes) -> the jitted compute fn. The emitter name encodes
+# expression × strategy × format family (bcsr emitters are distinct
+# functions); shard avals subsume the declared-format component because the
+# emitters are format-general once shards are materialized (the densified
+# row-window view). Reusing the jitted callable object is what lets jax's
+# compilation cache hit instead of re-tracing per lower.
+_RUNNER_CACHE = LRUCache(capacity=128)
+RUNNER_CACHE_STATS = _RUNNER_CACHE.stats
+
+
+def set_plan_cache_capacity(capacity: int) -> None:
+    _PLAN_CACHE.set_capacity(capacity)
+
+
+def set_runner_cache_capacity(capacity: int) -> None:
+    _RUNNER_CACHE.set_capacity(capacity)
+
+
+def clear_lowering_caches() -> None:
+    """Drop plan, runner, shard, and SPMD-executable caches — the cold
+    path, used by benchmarks to measure what re-lowering cost before the
+    caches."""
+    _PLAN_CACHE.clear()
+    _RUNNER_CACHE.clear()
+    clear_shard_cache()
+    import sys
+    executor = sys.modules.get("repro.distributed.executor")
+    if executor is not None:     # deferred: executor imports this module
+        executor.clear_spmd_cache()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Per-lower cache effectiveness, snapshotted onto LoweredKernel.cache
+    (alongside CommStats): how much of this lower's plan / shard-packing /
+    jit-tracing work was reused from previous lowers."""
+
+    plan_hits: int = 0
+    plan_misses: int = 0
+    shard_hits: int = 0
+    shard_misses: int = 0
+    runner_hits: int = 0
+    runner_misses: int = 0
+
+    @property
+    def warm(self) -> bool:
+        """True when the lower re-assembled nothing (full fast path)."""
+        return (self.plan_misses == 0 and self.shard_misses == 0
+                and self.runner_misses == 0)
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+def _cache_snapshot() -> Tuple[int, ...]:
+    return (PLAN_CACHE_STATS["hits"], PLAN_CACHE_STATS["misses"],
+            SHARD_CACHE_STATS["hits"], SHARD_CACHE_STATS["misses"],
+            RUNNER_CACHE_STATS["hits"], RUNNER_CACHE_STATS["misses"])
+
+
+def _cache_delta(snap: Tuple[int, ...]) -> CacheStats:
+    now = _cache_snapshot()
+    d = [b - a for a, b in zip(snap, now)]
+    return CacheStats(plan_hits=d[0], plan_misses=d[1], shard_hits=d[2],
+                      shard_misses=d[3], runner_hits=d[4], runner_misses=d[5])
+
+
 @dataclasses.dataclass
 class LoweredKernel:
     """A compiled distributed sparse kernel + its plan artifacts.
@@ -107,6 +194,7 @@ class LoweredKernel:
     leaf_name: str
     fallbacks: List[str] = dataclasses.field(default_factory=list)
     declared_formats: Dict[str, str] = dataclasses.field(default_factory=dict)
+    cache: CacheStats = dataclasses.field(default_factory=CacheStats)
 
     def run(self):
         return self.runner()
@@ -284,112 +372,93 @@ def lower(
     schedule: Optional[Schedule] = None,
     distributions: Optional[Dict[str, Distribution]] = None,
     jit: bool = True,
+    weights: Optional[np.ndarray] = None,
 ) -> LoweredKernel:
     """Compile a scheduled TIN statement into a distributed executable.
 
     ``distributions`` declares the *data* distribution per tensor (TDN). The
     *computation* distribution comes from the schedule. Where they disagree
     the kernel stays correct but `comm.redistribute_bytes` charges the
-    reshuffle (paper §II-D)."""
+    reshuffle (paper §II-D).
+
+    ``weights`` (pieces,) skews the non-zero splits toward faster shards —
+    the straggler re-plan (runtime/fault.StragglerMitigator emits them;
+    re-lowering with new weights is the re-plan, and the plan/shard/runner
+    caches make everything the weights did NOT change near-free). Ignored
+    by universe (rows) schedules, whose splits are coordinate-driven."""
+    with fingerprint_memo():   # one O(nnz) CRC per tensor per lower
+        return _lower_impl(stmt, machine, schedule, distributions, jit,
+                           weights)
+
+
+def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
     if schedule is None:
         schedule = default_row_schedule(stmt, machine)
     strat = schedule.strategy()
     pieces = strat.pieces
     sig = stmt.signature()
+    snap = _cache_snapshot()
 
     # Format dispatch: convert operands with no direct kernel (logged).
     stmt, fallbacks, declared_formats = _normalize_operands(stmt, strat.space)
 
     out_t: Tensor = stmt.lhs.tensor
-    plans: Dict[str, TensorPartition] = {}
     shards: Dict[str, ShardedTensor] = {}
     comm = CommStats(pieces=pieces)
 
     # ---- Step 1 & 2 of Fig. 9a: initial + derived partitions --------------
-    dist_var = strat.var
-    if strat.space == "universe":
-        # coordinate-value loop -> createInitialUniversePartitions
-        n = stmt.var_extent(dist_var)
-        bounds = partition_by_bounds(n, pieces)
-        # A blocked root-partitioned operand snaps the universe split to
-        # block-row boundaries so EVERY co-partitioned tensor (dense row
-        # operands, the output) shares the same per-color row windows.
-        for acc in stmt.rhs.accesses():
-            t = acc.tensor
-            if (t.format.is_sparse and t.format.is_blocked
-                    and dist_var in acc.idx
-                    and t.format.level_of_dim(acc.idx.index(dist_var)) == 0):
-                bounds = block_aligned_row_bounds(
-                    n, pieces, t.format.block_shape[0])
-                break
+    # Memoized on (signature, strategy, operand fingerprints, weights): an
+    # unchanged schedule over unchanged operands skips partitioning.
+    plan_key = _plan_cache_key(stmt, strat, weights)
+    plans = _PLAN_CACHE.get(plan_key) if plan_key is not None else None
+    if plans is not None:
+        # Rebind each memoized plan to the CURRENT statement's tensor
+        # objects: the cached plans pin the objects from the lower that
+        # populated them, and the key only proves the current tensors'
+        # content — a pinned object may have been mutated in place since.
+        current: Dict[str, Tensor] = {}
         for acc in stmt.accesses():
-            t = acc.tensor
-            if t.name in plans:
-                continue
-            if dist_var in acc.idx:
-                lvl_dim = acc.idx.index(dist_var)
-                if t.format.level_of_dim(lvl_dim) == 0:
-                    plans[t.name] = partition_tensor_rows(t, bounds)
-                    continue
-            # not indexed by the distributed var at the root -> communicate
-            # fetches the whole tensor per color (replication)
-            plans[t.name] = replicate_tensor(t, pieces)
-    elif (sig, strat.space) in _SELF_MATERIALIZING:
-        # spadd3/nnz: the position space is the CONCATENATED stored-entry
-        # stream of all addends. Plan each operand's equal nnz split
-        # (imbalance ~0 by construction); the packed chunk shards come from
-        # the materialization layer (materialize_add_stream, cached so a
-        # straggler re-plan reuses the stream). Comm = every chunk's union
-        # ships to the root for the cross-chunk merge — coords+vals per
-        # entry, a whole (br, bc) tile per entry for blocked operands.
-        add_tensors = []
+            current.setdefault(acc.tensor.name, acc.tensor)
+        plans = {name: dataclasses.replace(p, tensor=current[name])
+                 for name, p in plans.items()}
+    else:
+        plans = _compute_plans(stmt, strat, out_t, weights)
+        if plan_key is not None:
+            # Stored without tensor refs: the cache holds only the small
+            # bounds arrays instead of pinning O(nnz) storage of up to
+            # `capacity` statements; hits rebind (above) by name, and
+            # every plan name is an access name by construction.
+            _PLAN_CACHE.put(plan_key, {
+                name: dataclasses.replace(p, tensor=None)
+                for name, p in plans.items()})
+
+    # ---- materialize -------------------------------------------------------
+    if (sig, strat.space) in _SELF_MATERIALIZING:
+        # spadd3/nnz: the emitter consumes equal (or straggler-weighted)
+        # chunks of the CONCATENATED stored-entry stream, packed by the
+        # materialization layer (cached — a weighted re-plan re-slices the
+        # cached stream). Comm = every chunk's union ships to the root for
+        # the cross-chunk merge — coords+vals per entry, a whole (br, bc)
+        # tile per entry for blocked operands.
+        add_tensors, seen = [], set()
         for acc in stmt.rhs.accesses():
             t = acc.tensor
-            if t.name in plans:
-                continue
-            if t.format.is_sparse:
-                plans[t.name] = partition_tensor_nonzeros(t, pieces)
+            if t.format.is_sparse and t.name not in seen:
+                seen.add(t.name)
                 add_tensors.append(t)
-            else:
-                plans[t.name] = replicate_tensor(t, pieces)
-        shards["_addstream"] = materialize_add_stream(add_tensors, pieces)
+        shards["_addstream"] = materialize_add_stream(add_tensors, pieces,
+                                                      weights)
         n_entries = shards["_addstream"].meta["n_entries"]
         if add_tensors and add_tensors[0].format.is_blocked:
             tile = int(np.prod(add_tensors[0].format.block_shape))
             comm.reduce_bytes += n_entries * (8 + tile * 4)
         else:
             comm.reduce_bytes += n_entries * 12
-    else:
-        # coordinate-position loop -> createInitialNonZeroPartition of the
-        # position-space (sparse) tensor, then partition the remaining
-        # coordinate trees from its derived root partition.
-        pos_tensor = None
-        for acc in stmt.rhs.accesses():
-            if acc.tensor.format.is_sparse:
-                pos_tensor = acc.tensor
-                break
-        if pos_tensor is None:
-            raise ValueError("nnz schedule requires a sparse rhs tensor")
-        p = partition_tensor_nonzeros(pos_tensor, pieces)
-        plans[pos_tensor.name] = p
-        root_bounds = p.root_coord_bounds
-        for acc in stmt.accesses():
-            t = acc.tensor
-            if t.name in plans:
-                continue
-            if (t is out_t and not t.format.is_sparse
-                    and stmt.lhs.idx
-                    and stmt.lhs.idx[0] == pos_tensor_root_var(stmt, pos_tensor)):
-                plans[t.name] = partition_tensor_rows(t, root_bounds)
-            else:
-                plans[t.name] = replicate_tensor(t, pieces)
-
-    # ---- materialize -------------------------------------------------------
     for name, plan in plans.items():
         t = plan.tensor
         if (sig, strat.space) in _SELF_MATERIALIZING:
             continue  # the emitter packs its own chunks (spadd3/nnz)
-        if t is out_t and _output_is_assembled(sig):
+        if name == out_t.name and _output_is_assembled(sig):
             continue  # outputs assembled from leaf results, not materialized
         if plan.replicated:
             shards[name] = materialize_replicated(t, pieces)
@@ -446,7 +515,98 @@ def lower(
         stmt=stmt, strategy=strat, machine=machine, plans=plans,
         shards=shards, runner=runner, comm=comm, leaf_name=leaf_name,
         fallbacks=fallbacks, declared_formats=declared_formats,
+        cache=_cache_delta(snap),
     )
+
+
+def _plan_cache_key(stmt: Assignment, strat: DistStrategy,
+                    weights: Optional[np.ndarray]) -> Optional[Tuple]:
+    """Memoization key for the partitioning step: signature + strategy +
+    per-operand content fingerprints (+ straggler weights). None disables
+    caching (dry-run TensorVar operands have no storage to fingerprint)."""
+    ops = []
+    for acc in stmt.accesses():
+        t = acc.tensor
+        if not isinstance(t, Tensor):
+            return None
+        ops.append((t.name, tensor_fingerprint(t),
+                    tuple(v.name for v in acc.idx)))
+    return (stmt.signature(), strat.space, strat.var.name, strat.pieces,
+            weights_fingerprint(weights), tuple(ops))
+
+
+def _compute_plans(stmt: Assignment, strat: DistStrategy, out_t: Tensor,
+                   weights: Optional[np.ndarray],
+                   ) -> Dict[str, TensorPartition]:
+    """Fig. 9a steps 1 & 2: initial + derived coordinate-tree partitions."""
+    plans: Dict[str, TensorPartition] = {}
+    pieces = strat.pieces
+    sig = stmt.signature()
+    dist_var = strat.var
+    if strat.space == "universe":
+        # coordinate-value loop -> createInitialUniversePartitions
+        n = stmt.var_extent(dist_var)
+        bounds = partition_by_bounds(n, pieces)
+        # A blocked root-partitioned operand snaps the universe split to
+        # block-row boundaries so EVERY co-partitioned tensor (dense row
+        # operands, the output) shares the same per-color row windows.
+        for acc in stmt.rhs.accesses():
+            t = acc.tensor
+            if (t.format.is_sparse and t.format.is_blocked
+                    and dist_var in acc.idx
+                    and t.format.level_of_dim(acc.idx.index(dist_var)) == 0):
+                bounds = block_aligned_row_bounds(
+                    n, pieces, t.format.block_shape[0])
+                break
+        for acc in stmt.accesses():
+            t = acc.tensor
+            if t.name in plans:
+                continue
+            if dist_var in acc.idx:
+                lvl_dim = acc.idx.index(dist_var)
+                if t.format.level_of_dim(lvl_dim) == 0:
+                    plans[t.name] = partition_tensor_rows(t, bounds)
+                    continue
+            # not indexed by the distributed var at the root -> communicate
+            # fetches the whole tensor per color (replication)
+            plans[t.name] = replicate_tensor(t, pieces)
+    elif (sig, strat.space) in _SELF_MATERIALIZING:
+        # spadd3/nnz: plan each operand's equal nnz split (imbalance ~0 by
+        # construction); the packed chunk shards come from the
+        # materialization layer at materialize time.
+        for acc in stmt.rhs.accesses():
+            t = acc.tensor
+            if t.name in plans:
+                continue
+            if t.format.is_sparse:
+                plans[t.name] = partition_tensor_nonzeros(t, pieces)
+            else:
+                plans[t.name] = replicate_tensor(t, pieces)
+    else:
+        # coordinate-position loop -> createInitialNonZeroPartition of the
+        # position-space (sparse) tensor, then partition the remaining
+        # coordinate trees from its derived root partition.
+        pos_tensor = None
+        for acc in stmt.rhs.accesses():
+            if acc.tensor.format.is_sparse:
+                pos_tensor = acc.tensor
+                break
+        if pos_tensor is None:
+            raise ValueError("nnz schedule requires a sparse rhs tensor")
+        p = partition_tensor_nonzeros(pos_tensor, pieces, weights)
+        plans[pos_tensor.name] = p
+        root_bounds = p.root_coord_bounds
+        for acc in stmt.accesses():
+            t = acc.tensor
+            if t.name in plans:
+                continue
+            if (t is out_t and not t.format.is_sparse
+                    and stmt.lhs.idx
+                    and stmt.lhs.idx[0] == pos_tensor_root_var(stmt, pos_tensor)):
+                plans[t.name] = partition_tensor_rows(t, root_bounds)
+            else:
+                plans[t.name] = replicate_tensor(t, pieces)
+    return plans
 
 
 def pos_tensor_root_var(stmt: Assignment, pos_tensor: Tensor) -> IndexVar:
@@ -567,8 +727,19 @@ def _emit(stmt, strat, plans, shards, jit=True) -> Tuple[str, Callable]:
     return name, runner
 
 
-def _jit(fn, jit):
-    return jax.jit(fn) if jit else fn
+def _runner(jit, name, static, arrays, build):
+    """Compiled-runner cache front-end used by every emitter.
+
+    ``build()`` returns the raw compute fn; all per-lower DATA must flow
+    through its arguments (``arrays`` is the argument prototype used for the
+    shapes/dtypes key component) and every Python constant baked into the
+    trace must be listed in ``static``. On a key match the previously
+    jitted callable is returned, so jax's compilation cache hits instead of
+    re-tracing — this is what makes a warm re-lower skip compilation."""
+    if not jit:
+        return build()
+    key = (name, tuple(static), avals_key(arrays))
+    return _RUNNER_CACHE.get_or_build(key, lambda: jax.jit(build()))
 
 
 def _emit_spmv_rows(stmt, strat, plans, shards, jit=True):
@@ -583,9 +754,10 @@ def _emit_spmv_rows(stmt, strat, plans, shards, jit=True):
             pos, crd, vals, cvec)
         return _scatter_rows((n,), blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["vals"], cv,
-                                a["row_start"], a["row_count"]))
+    args = (a["pos1"], a["crd1"], a["vals"], cv,
+            a["row_start"], a["row_count"])
+    f = _runner(jit, "spmv_rows", (n,), args, lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _nnz_row_windows(B: ShardedTensor, n: int):
@@ -616,9 +788,9 @@ def _emit_spmv_nnz(stmt, strat, plans, shards, jit=True):
             rl, cols, vals, cvec, max_rows)
         return _scatter_rows((n,), blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["dim0"], a["dim1"], a["vals"], cv,
-                                row_start, row_count))
+    args = (a["dim0"], a["dim1"], a["vals"], cv, row_start, row_count)
+    f = _runner(jit, "spmv_nnz", (n, max_rows), args, lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_spmm_rows(stmt, strat, plans, shards, jit=True):
@@ -633,9 +805,10 @@ def _emit_spmm_rows(stmt, strat, plans, shards, jit=True):
             pos, crd, vals, Cmat)
         return _scatter_rows(out_shape, blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["vals"], Cv,
-                                a["row_start"], a["row_count"]))
+    args = (a["pos1"], a["crd1"], a["vals"], Cv,
+            a["row_start"], a["row_count"])
+    f = _runner(jit, "spmm_rows", out_shape, args, lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_spmm_nnz(stmt, strat, plans, shards, jit=True):
@@ -652,9 +825,9 @@ def _emit_spmm_nnz(stmt, strat, plans, shards, jit=True):
             rl, cols, vals, Cmat, max_rows)
         return _scatter_rows(out_shape, blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["dim0"], a["dim1"], a["vals"], Cv,
-                                row_start, row_count))
+    args = (a["dim0"], a["dim1"], a["vals"], Cv, row_start, row_count)
+    f = _runner(jit, "spmm_nnz", out_shape + (max_rows,), args, lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_spadd3_rows(stmt, strat, plans, shards, jit=True):
@@ -663,16 +836,16 @@ def _emit_spadd3_rows(stmt, strat, plans, shards, jit=True):
     n_rows, n_cols = stmt.lhs.tensor.shape
 
     def fn(args):
-        (p1, c1, v1), (p2, c2, v2), (p3, c3, v3), rs, rc = args
+        (p1, c1, v1), (p2, c2, v2), (p3, c3, v3) = args
         leaf = partial(K.leaf_spadd3_rows, n_cols=n_cols)
         return jax.vmap(leaf)(p1, c1, v1, p2, c2, v2, p3, c3, v3)
 
-    f = _jit(fn, jit)
+    args = tuple(
+        (S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"]) for S in Bs)
+    flat = tuple(x for trip in args for x in trip)
+    f = _runner(jit, "spadd3_rows", (n_rows, n_cols), flat, lambda: fn)
 
     def run():
-        args = tuple(
-            (S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"]) for S in Bs
-        ) + (Bs[0].arrays["row_start"], Bs[0].arrays["row_count"])
         rows, cols, vals, counts = (np.asarray(x) for x in f(args))
         # global assembly: offset shard-local rows by row_start
         out_rows, out_cols, out_vals = [], [], []
@@ -710,7 +883,9 @@ def _emit_spadd3_nnz(stmt, strat, plans, shards, jit=True):
         leaf = partial(K.leaf_spadd_union_chunk, n_rows=n_rows)
         return jax.vmap(leaf)(rows, cols, v, cnt)
 
-    f = _jit(fn, jit)
+    f = _runner(jit, "spadd3_nnz", (n_rows,),
+                (a["dim0"], a["dim1"], a["vals"], a["nnz_count"]),
+                lambda: fn)
 
     def run():
         if max_c == 0:
@@ -752,15 +927,16 @@ def _emit_sddmm_rows(stmt, strat, plans, shards, jit=True):
     nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
     nnz_count = jnp.asarray((vb[:, 1] - vb[:, 0]).astype(np.int32))
 
-    def fn(pos, crd, vals, Cl, Dm):
+    def fn(pos, crd, vals, Cl, Dm, nnz_start, nnz_count):
         out = jax.vmap(K.leaf_sddmm_rows, in_axes=(0, 0, 0, 0, None))(
             pos, crd, vals, Cl, Dm)
         return _scatter_vals(total_nnz, out, nnz_start, nnz_count)
 
-    f = _jit(fn, jit)
+    args = (a["pos1"], a["crd1"], a["vals"], Cv, Dv, nnz_start, nnz_count)
+    f = _runner(jit, "sddmm_rows", (total_nnz,), args, lambda: fn)
 
     def run():
-        new_vals = np.asarray(f(a["pos1"], a["crd1"], a["vals"], Cv, Dv))
+        new_vals = np.asarray(f(*args))
         return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
                       new_vals, Bt.dtype)
 
@@ -779,16 +955,17 @@ def _emit_sddmm_nnz(stmt, strat, plans, shards, jit=True):
     total_nnz = Bt.nnz
     nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
 
-    def fn(rows, cols, vals, Cm, Dm, counts):
+    def fn(rows, cols, vals, Cm, Dm, counts, nnz_start):
         out = jax.vmap(K.leaf_sddmm_nnz, in_axes=(0, 0, 0, None, None))(
             rows, cols, vals, Cm, Dm)
         return _scatter_vals(total_nnz, out, nnz_start, counts)
 
-    f = _jit(fn, jit)
+    args = (a["dim0"], a["dim1"], a["vals"], Cv, Dv, a["nnz_count"],
+            nnz_start)
+    f = _runner(jit, "sddmm_nnz", (total_nnz,), args, lambda: fn)
 
     def run():
-        new_vals = np.asarray(f(a["dim0"], a["dim1"], a["vals"], Cv, Dv,
-                                a["nnz_count"]))
+        new_vals = np.asarray(f(*args))
         out = stmt.lhs.tensor
         return Tensor(out.name, Bt.shape, Bt.format, Bt.levels, new_vals,
                       Bt.dtype)
@@ -831,9 +1008,10 @@ def _emit_bcsr_spmv_rows(stmt, strat, plans, shards, jit=True):
             pos, crd, tiles, cb)                 # (P, max_brows * br)
         return _scatter_rows((n,), blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["vals"], c_blk,
-                                a["row_start"], a["row_count"]))
+    args = (a["pos1"], a["crd1"], a["vals"], c_blk,
+            a["row_start"], a["row_count"])
+    f = _runner(jit, "bcsr_spmv_rows", (n,), args, lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_bcsr_spmv_nnz(stmt, strat, plans, shards, jit=True):
@@ -852,9 +1030,10 @@ def _emit_bcsr_spmv_nnz(stmt, strat, plans, shards, jit=True):
             rl, bd1, tiles, cb, max_brows)       # (P, max_brows * br)
         return _scatter_rows((n,), blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["bdim0"], a["bdim1"], a["vals"], c_blk,
-                                brow_start, row_start, row_count))
+    args = (a["bdim0"], a["bdim1"], a["vals"], c_blk,
+            brow_start, row_start, row_count)
+    f = _runner(jit, "bcsr_spmv_nnz", (n, max_brows), args, lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_bcsr_spmm_rows(stmt, strat, plans, shards, jit=True):
@@ -870,9 +1049,10 @@ def _emit_bcsr_spmm_rows(stmt, strat, plans, shards, jit=True):
             pos, crd, tiles, Cb)                 # (P, max_brows * br, J)
         return _scatter_rows(out_shape, blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["vals"], C_blk,
-                                a["row_start"], a["row_count"]))
+    args = (a["pos1"], a["crd1"], a["vals"], C_blk,
+            a["row_start"], a["row_count"])
+    f = _runner(jit, "bcsr_spmm_rows", out_shape, args, lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_bcsr_spmm_nnz(stmt, strat, plans, shards, jit=True):
@@ -891,9 +1071,11 @@ def _emit_bcsr_spmm_nnz(stmt, strat, plans, shards, jit=True):
             rl, bd1, tiles, Cb, max_brows)
         return _scatter_rows(out_shape, blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["bdim0"], a["bdim1"], a["vals"], C_blk,
-                                brow_start, row_start, row_count))
+    args = (a["bdim0"], a["bdim1"], a["vals"], C_blk,
+            brow_start, row_start, row_count)
+    f = _runner(jit, "bcsr_spmm_nnz", out_shape + (max_brows,), args,
+                lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_bcsr_sddmm_rows(stmt, strat, plans, shards, jit=True):
@@ -918,18 +1100,19 @@ def _emit_bcsr_sddmm_rows(stmt, strat, plans, shards, jit=True):
     nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
     nnz_count = jnp.asarray((vb[:, 1] - vb[:, 0]).astype(np.int32))
 
-    def fn(pos, crd, tiles, Cl, Db):
+    def fn(pos, crd, tiles, Cl, Db, nnz_start, nnz_count):
         def leaf(pos, crd, tiles, Cl):
             brow = K.rows_from_pos(pos, crd.shape[0])
             return K.leaf_bcsr_sddmm(brow, crd, tiles, Cl, Db)
         out = jax.vmap(leaf)(pos, crd, tiles, Cl)   # (P, max_bnnz, br, bc)
         return _scatter_block_vals(total_blocks, out, nnz_start, nnz_count)
 
-    f = _jit(fn, jit)
+    args = (a["pos1"], a["crd1"], a["vals"], C_blk, D_blk,
+            nnz_start, nnz_count)
+    f = _runner(jit, "bcsr_sddmm_rows", (total_blocks,), args, lambda: fn)
 
     def run():
-        new_tiles = np.asarray(f(a["pos1"], a["crd1"], a["vals"], C_blk,
-                                 D_blk))
+        new_tiles = np.asarray(f(*args))
         return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
                       new_tiles, Bt.dtype)
 
@@ -952,16 +1135,17 @@ def _emit_bcsr_sddmm_nnz(stmt, strat, plans, shards, jit=True):
     total_blocks = int(Bt.levels[1].nnz or 0)
     nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
 
-    def fn(bd0, bd1, tiles, Cb, Db, counts):
+    def fn(bd0, bd1, tiles, Cb, Db, counts, nnz_start):
         out = jax.vmap(K.leaf_bcsr_sddmm, in_axes=(0, 0, 0, None, None))(
             bd0, bd1, tiles, Cb, Db)
         return _scatter_block_vals(total_blocks, out, nnz_start, counts)
 
-    f = _jit(fn, jit)
+    args = (a["bdim0"], a["bdim1"], a["vals"], C_blk, D_blk,
+            a["nnz_count"], nnz_start)
+    f = _runner(jit, "bcsr_sddmm_nnz", (total_blocks,), args, lambda: fn)
 
     def run():
-        new_tiles = np.asarray(f(a["bdim0"], a["bdim1"], a["vals"], C_blk,
-                                 D_blk, a["nnz_count"]))
+        new_tiles = np.asarray(f(*args))
         return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
                       new_tiles, Bt.dtype)
 
@@ -984,12 +1168,13 @@ def _emit_bcsr_spadd3_rows(stmt, strat, plans, shards, jit=True):
         return jax.vmap(K.leaf_bcsr_spadd3_rows)(
             p1, c1, t1, p2, c2, t2, p3, c3, t3)
 
-    f = _jit(fn, jit)
+    args = tuple(
+        (S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"]) for S in Bs)
+    flat = tuple(x for trip in args for x in trip)
+    f = _runner(jit, "bcsr_spadd3_rows", (n_rows, n_cols, br, bc), flat,
+                lambda: fn)
 
     def run():
-        args = tuple(
-            (S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"])
-            for S in Bs)
         rows, cols, tiles, counts = (np.asarray(x) for x in f(args))
         brs = np.asarray(Bs[0].arrays["brow_start"])
         out_coords, out_tiles = [], []
@@ -1022,7 +1207,9 @@ def _emit_bcsr_spadd3_nnz(stmt, strat, plans, shards, jit=True):
         leaf = partial(K.leaf_bcsr_spadd_union_chunk, n_brows=gr)
         return jax.vmap(leaf)(bd0, bd1, tiles, cnt)
 
-    f = _jit(fn, jit)
+    f = _runner(jit, "bcsr_spadd3_nnz", (gr, br, bc),
+                (a["dim0"], a["dim1"], a["vals"], a["nnz_count"]),
+                lambda: fn)
 
     def run():
         if max_c == 0:
@@ -1058,16 +1245,17 @@ def _emit_spttv_rows(stmt, strat, plans, shards, jit=True):
     ij_start = jnp.asarray(ij_bounds[:, 0].astype(np.int32))
     ij_count = jnp.asarray((ij_bounds[:, 1] - ij_bounds[:, 0]).astype(np.int32))
 
-    def fn(pos1, crd1, pos2, crd2, vals, cvec):
+    def fn(pos1, crd1, pos2, crd2, vals, cvec, ij_start, ij_count):
         out = jax.vmap(K.leaf_spttv_rows, in_axes=(0, 0, 0, 0, 0, None))(
             pos1, crd1, pos2, crd2, vals, cvec)
         return _scatter_vals(total_ij, out, ij_start, ij_count)
 
-    f = _jit(fn, jit)
+    args = (a["pos1"], a["crd1"], a["pos2"], a["crd2"], a["vals"], cv,
+            ij_start, ij_count)
+    f = _runner(jit, "spttv_rows", (total_ij,), args, lambda: fn)
 
     def run():
-        new_vals = np.asarray(f(a["pos1"], a["crd1"], a["pos2"], a["crd2"],
-                                a["vals"], cv))
+        new_vals = np.asarray(f(*args))
         # output tensor: (i,j) matrix with B's ij pattern, in the format
         # the input's first two levels spell — CSF yields CSR, DCSF yields
         # DCSR (the output format follows the input's)
@@ -1092,7 +1280,8 @@ def _emit_spttv_nnz(stmt, strat, plans, shards, jit=True):
     def fn(dk, vals, cvec):
         return vals * jnp.take(cvec, dk, axis=0)
 
-    f = _jit(fn, jit)
+    f = _runner(jit, "spttv_nnz", (), (a["dim2"], a["vals"], cv),
+                lambda: fn)
 
     def run():
         prod = np.asarray(f(a["dim2"], a["vals"], cv)).ravel()
@@ -1127,10 +1316,10 @@ def _emit_spmttkrp_rows(stmt, strat, plans, shards, jit=True):
             pos1, crd1, pos2, crd2, vals, Cm, Dm)
         return _scatter_rows(out_shape, blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["pos1"], a["crd1"], a["pos2"], a["crd2"],
-                                a["vals"], Cv, Dv, a["row_start"],
-                                a["row_count"]))
+    args = (a["pos1"], a["crd1"], a["pos2"], a["crd2"], a["vals"], Cv, Dv,
+            a["row_start"], a["row_count"])
+    f = _runner(jit, "spmttkrp_rows", out_shape, args, lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_spmttkrp_nnz(stmt, strat, plans, shards, jit=True):
@@ -1150,9 +1339,11 @@ def _emit_spmttkrp_nnz(stmt, strat, plans, shards, jit=True):
             rl, dj, dk, vals, Cm, Dm, max_rows)
         return _scatter_rows(out_shape, blocks, row_start, row_count)
 
-    f = _jit(fn, jit)
-    return lambda: np.asarray(f(a["dim0"], a["dim1"], a["dim2"], a["vals"],
-                                Cv, Dv, row_start, row_count))
+    args = (a["dim0"], a["dim1"], a["dim2"], a["vals"], Cv, Dv,
+            row_start, row_count)
+    f = _runner(jit, "spmttkrp_nnz", out_shape + (max_rows,), args,
+                lambda: fn)
+    return lambda: np.asarray(f(*args))
 
 
 def _emit_generic_fallback(stmt, strat, plans, shards, jit=True):

@@ -20,13 +20,15 @@ which is Legion's coherence story made explicit.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import zlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import formats as fmt
+from .cache import LRUCache
 from .tensor import Tensor, INT
 
 Bounds = np.ndarray  # (P, 2) int64, [lo, hi) per color
@@ -451,8 +453,109 @@ def _pad_to(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
     return np.concatenate([arr, np.full((pad,) + arr.shape[1:], fill, dtype=arr.dtype)])
 
 
+# ---------------------------------------------------------------------------
+# Shard-materialization cache: every materializer below consults one bounded
+# LRU keyed by (materializer kind, tensor content fingerprint, partition
+# interval fingerprint). A re-plan over unchanged operands (same schedule,
+# or new straggler weights that happen to reproduce the same bounds) returns
+# the packed arrays without touching numpy; any content change — including
+# in-place mutation of vals/pos/crd — changes the CRC and re-packs. This
+# generalizes the original one-off spadd3 add-stream cache to all six shard
+# conventions (and bounds it).
+# ---------------------------------------------------------------------------
+
+SHARD_CACHE = LRUCache(capacity=64)
+SHARD_CACHE_STATS = SHARD_CACHE.stats   # {"hits", "misses", "evictions"}
+
+
+def set_shard_cache_capacity(capacity: int) -> None:
+    """Re-bound the shard cache (entry cap, LRU eviction)."""
+    SHARD_CACHE.set_capacity(capacity)
+
+
+def clear_shard_cache() -> None:
+    SHARD_CACHE.clear()
+
+
+# Per-lower fingerprint memo: core.lower activates it for the duration of
+# one lower() call, so the O(nnz) CRC over a tensor's storage is computed
+# once even though the plan key and one or more materializers all need it.
+# Keyed by object identity — valid only within a single lower, where
+# in-place mutation mid-lower is already undefined; outside a memo scope
+# every call recomputes (that recompute IS the invalidation mechanism).
+_FP_MEMO: Optional[Dict[int, Tuple]] = None
+
+
+def tensor_fingerprint(t: Tensor) -> Tuple:
+    if _FP_MEMO is None:
+        return t.fingerprint()
+    fp = _FP_MEMO.get(id(t))
+    if fp is None:
+        fp = _FP_MEMO[id(t)] = t.fingerprint()
+    return fp
+
+
+@contextlib.contextmanager
+def fingerprint_memo():
+    global _FP_MEMO
+    prev = _FP_MEMO
+    _FP_MEMO = {}
+    try:
+        yield
+    finally:
+        _FP_MEMO = prev
+
+
+def _crc_arrays(h: int, *arrays: Optional[np.ndarray]) -> int:
+    for a in arrays:
+        if a is None:
+            h = zlib.crc32(b"-", h)
+        else:
+            h = zlib.crc32(
+                np.ascontiguousarray(np.asarray(a, dtype=np.int64)), h)
+    return h
+
+
+def partition_fingerprint(part: TensorPartition) -> Tuple:
+    """Hashable summary of a partition's interval structure; together with
+    ``Tensor.fingerprint()`` it keys a shard materialization — weighted
+    (straggler) re-plans change the bounds and therefore the key."""
+    h = 0
+    for lp in part.levels:
+        h = zlib.crc32(b"R" if lp.replicated else b"L", h)
+        h = _crc_arrays(h, lp.coord_bounds, lp.pos_bounds)
+    h = _crc_arrays(h, part.vals_bounds, part.root_coord_bounds)
+    return (part.pieces, part.replicated, part.overlapping_root, h)
+
+
+def _cached_shards(key: Tuple, build: Callable[[], ShardedTensor],
+                   partition: Optional[TensorPartition] = None,
+                   ) -> ShardedTensor:
+    """Cache front-end shared by the materializers: on a hit the packed
+    arrays are reused but the ``partition`` field is refreshed to the
+    caller's plan object (the bounds are equal by key construction; the
+    tensor reference inside may be an older content-identical object)."""
+    sh = SHARD_CACHE.get_or_build(key, build)
+    if partition is not None:
+        return dataclasses.replace(sh, partition=partition)
+    return sh
+
+
 def materialize_dense_rows(tensor: Tensor, bounds: Bounds,
                            pad_rows: Optional[int] = None) -> ShardedTensor:
+    tp = TensorPartition(tensor, bounds.shape[0],
+                         [LevelPartition(coord_bounds=bounds)],
+                         root_coord_bounds=bounds, vals_bounds=None)
+    key = ("dense_rows", tensor_fingerprint(tensor), _crc_arrays(0, bounds),
+           -1 if pad_rows is None else int(pad_rows))
+    return _cached_shards(
+        key, lambda: _materialize_dense_rows_impl(tensor, bounds, pad_rows,
+                                                  tp), partition=tp)
+
+
+def _materialize_dense_rows_impl(tensor: Tensor, bounds: Bounds,
+                                 pad_rows: Optional[int],
+                                 tp: TensorPartition) -> ShardedTensor:
     dense = tensor.to_dense()
     pieces = bounds.shape[0]
     counts = bounds[:, 1] - bounds[:, 0]
@@ -461,9 +564,6 @@ def materialize_dense_rows(tensor: Tensor, bounds: Bounds,
     for p in range(pieces):
         lo, hi = int(bounds[p, 0]), int(bounds[p, 1])
         shards[p, : hi - lo] = dense[lo:hi]
-    tp = TensorPartition(tensor, pieces, [LevelPartition(coord_bounds=bounds)],
-                         root_coord_bounds=bounds,
-                         vals_bounds=None)
     return ShardedTensor(
         kind="dense_rows",
         pieces=pieces,
@@ -478,6 +578,14 @@ def materialize_dense_rows(tensor: Tensor, bounds: Bounds,
 
 
 def materialize_csr_rows(tensor: Tensor, part: TensorPartition) -> ShardedTensor:
+    key = ("csr_rows", tensor_fingerprint(tensor),
+           partition_fingerprint(part))
+    return _cached_shards(
+        key, lambda: _materialize_csr_rows_impl(tensor, part), partition=part)
+
+
+def _materialize_csr_rows_impl(tensor: Tensor, part: TensorPartition,
+                               ) -> ShardedTensor:
     """CSR / CSF-convention shard per color from a row-interval partition.
 
     Local ``pos`` arrays are rebased to the shard's crd window and padded so
@@ -601,6 +709,14 @@ def materialize_csr_rows(tensor: Tensor, part: TensorPartition) -> ShardedTensor
 
 
 def materialize_coo_nnz(tensor: Tensor, part: TensorPartition) -> ShardedTensor:
+    key = ("coo_nnz", tensor_fingerprint(tensor),
+           partition_fingerprint(part))
+    return _cached_shards(
+        key, lambda: _materialize_coo_nnz_impl(tensor, part), partition=part)
+
+
+def _materialize_coo_nnz_impl(tensor: Tensor, part: TensorPartition,
+                              ) -> ShardedTensor:
     """Equal-nnz COO shards from a non-zero (fused) partition.
 
     Emits per-color coordinate columns (dimension order) + vals, padded to
@@ -658,6 +774,15 @@ def _blocked_meta(tensor: Tensor) -> Dict[str, int]:
 
 def materialize_bcsr_rows(tensor: Tensor, part: TensorPartition,
                           ) -> ShardedTensor:
+    key = ("bcsr_rows", tensor_fingerprint(tensor),
+           partition_fingerprint(part))
+    return _cached_shards(
+        key, lambda: _materialize_bcsr_rows_impl(tensor, part),
+        partition=part)
+
+
+def _materialize_bcsr_rows_impl(tensor: Tensor, part: TensorPartition,
+                                ) -> ShardedTensor:
     """Blocked-CSR shard per color from a block-row interval partition.
 
     The per-shard layout is the CSR convention lifted to the block grid:
@@ -705,6 +830,14 @@ def materialize_bcsr_rows(tensor: Tensor, part: TensorPartition,
 
 def materialize_bcsr_nnz(tensor: Tensor, part: TensorPartition,
                          ) -> ShardedTensor:
+    key = ("bcsr_nnz", tensor_fingerprint(tensor),
+           partition_fingerprint(part))
+    return _cached_shards(
+        key, lambda: _materialize_bcsr_nnz_impl(tensor, part), partition=part)
+
+
+def _materialize_bcsr_nnz_impl(tensor: Tensor, part: TensorPartition,
+                               ) -> ShardedTensor:
     """Equal-stored-block shards from a block non-zero partition: per-color
     global (block-row, block-col) columns + (br, bc) value tiles, plus the
     preimage-derived block-row ownership window (overlapping — boundary
@@ -747,46 +880,29 @@ def materialize_bcsr_nnz(tensor: Tensor, part: TensorPartition,
 # ---------------------------------------------------------------------------
 # SpAdd non-zero strategy: the position space is the CONCATENATED
 # stored-entry stream of all addends. Packing that stream is a
-# materialization (not a plan) step — cached so a re-plan (straggler
-# weights re-lower over the SAME operands) only re-slices the chunks.
+# materialization (not a plan) step — both the concatenated stream and the
+# sliced chunk shards live in SHARD_CACHE, so a re-plan over the same
+# operands reuses the shards outright and a re-plan with NEW straggler
+# weights only re-slices the cached stream.
 # ---------------------------------------------------------------------------
 
-_ADD_STREAM_CACHE: Dict[str, dict] = {}
+# Add-stream view of the shard cache (kept for observability: the original
+# one-off stream cache exposed these and tests pin the re-plan semantics).
 ADD_STREAM_STATS = {"hits": 0, "misses": 0}
-
-
-def _stream_fingerprint(tensors: Sequence[Tensor]) -> int:
-    """CRC over every operand's storage regions — catches in-place value
-    OR structure mutation between lowers. O(nnz) but pure streaming
-    reads, far cheaper than re-walking coords() and re-concatenating."""
-    h = 0
-    for t in tensors:
-        h = zlib.crc32(np.ascontiguousarray(t.vals), h)
-        for ld in t.levels:
-            if ld.pos is not None:
-                h = zlib.crc32(np.ascontiguousarray(ld.pos), h)
-            if ld.crd is not None:
-                h = zlib.crc32(np.ascontiguousarray(ld.crd), h)
-    return h
 
 
 def concat_entry_stream(tensors: Sequence[Tensor]) -> Dict[str, np.ndarray]:
     """Concatenated coordinate/value stream of the addends, in operand
     order. Blocked operands concatenate their BLOCK streams ((n_blocks, 2)
     grid coords + (n_blocks, br, bc) tiles); unblocked ones their scalar
-    coordinate streams. Cached so re-planning reuses the packed arrays:
-    the entry pins the operand objects (object identity, so no stale
-    ``id()`` reuse) and a storage fingerprint guards against in-place
-    mutation between lowers."""
-    fp = _stream_fingerprint(tensors)
-    cached = _ADD_STREAM_CACHE.get("stream")
-    if (cached is not None
-            and len(cached["tensors"]) == len(tensors)
-            and all(a is b for a, b in zip(cached["tensors"], tensors))
-            and cached["fp"] == fp):
-        ADD_STREAM_STATS["hits"] += 1
+    coordinate streams. Cached by content fingerprint so a weighted
+    re-plan (new chunk bounds over the SAME operands) re-slices instead of
+    re-walking the coordinate trees."""
+    key = ("add_stream_src",
+           tuple(tensor_fingerprint(t) for t in tensors))
+    cached = SHARD_CACHE.get(key)
+    if cached is not None:
         return cached
-    ADD_STREAM_STATS["misses"] += 1
     if tensors[0].format.is_blocked:
         bs = tensors[0].format.block_shape
         coords = np.concatenate(
@@ -798,15 +914,37 @@ def concat_entry_stream(tensors: Sequence[Tensor]) -> Dict[str, np.ndarray]:
                                  for t in tensors], axis=0)
         vals = np.concatenate([np.asarray(t.vals).reshape(-1)
                                for t in tensors], axis=0)
-    stream = {"coords": coords, "vals": vals,
-              "tensors": tuple(tensors), "fp": fp}
-    _ADD_STREAM_CACHE["stream"] = stream   # keep the latest stream only
+    stream = {"coords": coords, "vals": vals}
+    SHARD_CACHE.put(key, stream)
     return stream
+
+
+def weights_fingerprint(weights: Optional[np.ndarray]) -> Optional[int]:
+    """CRC key component for a straggler-weight vector (None = equal)."""
+    if weights is None:
+        return None
+    return zlib.crc32(np.ascontiguousarray(
+        np.asarray(weights, dtype=np.float64)))
 
 
 def materialize_add_stream(tensors: Sequence[Tensor], pieces: int,
                            weights: Optional[np.ndarray] = None,
                            ) -> ShardedTensor:
+    key = ("add_stream", tuple(tensor_fingerprint(t) for t in tensors),
+           int(pieces), weights_fingerprint(weights))
+    hit = SHARD_CACHE.get(key)
+    if hit is not None:
+        ADD_STREAM_STATS["hits"] += 1
+        return hit
+    ADD_STREAM_STATS["misses"] += 1
+    sh = _materialize_add_stream_impl(tensors, pieces, weights)
+    SHARD_CACHE.put(key, sh)
+    return sh
+
+
+def _materialize_add_stream_impl(tensors: Sequence[Tensor], pieces: int,
+                                 weights: Optional[np.ndarray] = None,
+                                 ) -> ShardedTensor:
     """Equal (or straggler-weighted) chunks of the concatenated addend
     stream, padded to the uniform chunk size — the shard set consumed by
     the nnz SpAdd emitters (scalar or blocked)."""
@@ -840,6 +978,13 @@ def materialize_add_stream(tensors: Sequence[Tensor], pieces: int,
 
 
 def materialize_replicated(tensor: Tensor, pieces: int) -> ShardedTensor:
+    key = ("replicated", tensor_fingerprint(tensor), int(pieces))
+    return _cached_shards(
+        key, lambda: _materialize_replicated_impl(tensor, pieces),
+        partition=replicate_tensor(tensor, pieces))
+
+
+def _materialize_replicated_impl(tensor: Tensor, pieces: int) -> ShardedTensor:
     if tensor.format.is_all_dense:
         arrays = {"vals": tensor.to_dense()}
     else:

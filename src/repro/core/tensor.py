@@ -21,6 +21,7 @@ assembly phase); compute kernels consume the arrays as jnp.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -306,6 +307,23 @@ class Tensor:
 
     def level(self, lvl: int) -> LevelData:
         return self.levels[lvl]
+
+    def fingerprint(self) -> Tuple:
+        """Content fingerprint: structural identity (format key, shape,
+        dtype) + a CRC over every storage region (pos/crd/vals). This is
+        the cache key unit of the re-plan fast path (partition.SHARD_CACHE,
+        lower's plan/runner caches): two Tensors with equal fingerprints
+        materialize identical shards, and an in-place mutation between
+        lowers changes the CRC — recomputed on every call, O(nnz) streaming
+        reads, far cheaper than re-packing."""
+        h = zlib.crc32(np.ascontiguousarray(self.vals))
+        for ld in self.levels:
+            if ld.pos is not None:
+                h = zlib.crc32(np.ascontiguousarray(ld.pos), h)
+            if ld.crd is not None:
+                h = zlib.crc32(np.ascontiguousarray(ld.crd), h)
+        return (fmt.format_key(self.format), self.shape,
+                str(np.dtype(self.dtype)), h)
 
     def block_coords(self) -> np.ndarray:
         """Blocked formats: (n_blocks, order) block-grid coordinates in

@@ -21,12 +21,41 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from ..compat import shard_map
+from ..core.cache import LRUCache, avals_key
 from ..core.lower import LoweredKernel
 from ..core.tdn import Machine
 from ..kernels import ref as K
 from ..kernels.layout import (pack_mat_inner_blocks, pack_mat_row_blocks,
                               pack_rowwindow_blocks, pack_vec_blocks)
 from .mesh import machine_to_mesh
+
+# Compiled shard_map executables, keyed like core.lower's runner cache
+# (builder name, mesh, axis, static trace constants, shard avals).
+# Re-building the SPMD executor after a re-lower then reuses the jitted
+# callable — jax's compilation cache hits instead of re-tracing the
+# collective program.
+_SPMD_RUN_CACHE = LRUCache(capacity=64)
+SPMD_RUN_STATS = _SPMD_RUN_CACHE.stats
+
+
+def set_spmd_cache_capacity(capacity: int) -> None:
+    _SPMD_RUN_CACHE.set_capacity(capacity)
+
+
+def clear_spmd_cache() -> None:
+    _SPMD_RUN_CACHE.clear()
+
+
+def _mesh_key(mesh: Mesh):
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
+
+
+def _spmd_runner(name, mesh, axis, static, arrays, build):
+    """Return the jitted shard_map executable for a builder, reusing a
+    cached one when (builder, mesh, axis, statics, shard avals) match."""
+    key = (name, _mesh_key(mesh), axis, tuple(static), avals_key(arrays))
+    return _SPMD_RUN_CACHE.get_or_build(key, lambda: jax.jit(build()))
 
 
 def spmv_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
@@ -38,14 +67,21 @@ def spmv_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     a = B.arrays
     max_rows = B.meta["max_rows"]
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(), P(axis)),
-        out_specs=P(axis))
-    def run(pos, crd, vals, cvec, row_count):
-        # leading shard axis has local extent 1 inside shard_map
-        y = K.leaf_spmv_rows(pos[0], crd[0], vals[0], cvec)
-        return y[None]
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(), P(axis)),
+            out_specs=P(axis))
+        def run(pos, crd, vals, cvec, row_count):
+            # leading shard axis has local extent 1 inside shard_map
+            y = K.leaf_spmv_rows(pos[0], crd[0], vals[0], cvec)
+            return y[None]
+        return run
+
+    run = _spmd_runner(
+        "spmv_rows", mesh, axis, (),
+        (a["pos1"], a["crd1"], a["vals"], c.arrays["vals"], a["row_count"]),
+        build)
 
     def call():
         y_blocks = run(jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
@@ -72,13 +108,19 @@ def spmv_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     n = kernel.stmt.lhs.tensor.shape[0]
     a = B.arrays
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P()),
-        out_specs=P())
-    def run(rows, cols, vals, cvec):
-        y = K.leaf_spmv_nnz(rows[0], cols[0], vals[0], cvec, n)
-        return jax.lax.psum(y, axis_name=axis)
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P())
+        def run(rows, cols, vals, cvec):
+            y = K.leaf_spmv_nnz(rows[0], cols[0], vals[0], cvec, n)
+            return jax.lax.psum(y, axis_name=axis)
+        return run
+
+    run = _spmd_runner(
+        "spmv_nnz", mesh, axis, (n,),
+        (a["dim0"], a["dim1"], a["vals"], c.arrays["vals"]), build)
 
     def call():
         return np.asarray(run(
@@ -97,12 +139,18 @@ def spmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     n, J = kernel.stmt.lhs.tensor.shape
     a = B.arrays
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P()),
-        out_specs=P(axis))
-    def run(pos, crd, vals, Cm):
-        return K.leaf_spmm_rows(pos[0], crd[0], vals[0], Cm)[None]
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(axis))
+        def run(pos, crd, vals, Cm):
+            return K.leaf_spmm_rows(pos[0], crd[0], vals[0], Cm)[None]
+        return run
+
+    run = _spmd_runner(
+        "spmm_rows", mesh, axis, (),
+        (a["pos1"], a["crd1"], a["vals"], C.arrays["vals"]), build)
 
     def call():
         yb = np.asarray(run(jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
@@ -127,12 +175,19 @@ def sddmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     D = kernel.shards[accs[2].tensor.name]
     a = B.arrays
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(), P()),
-        out_specs=P(axis))
-    def run(rows, cols, vals, Cm, Dm):
-        return K.leaf_sddmm_nnz(rows[0], cols[0], vals[0], Cm, Dm)[None]
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(), P()),
+            out_specs=P(axis))
+        def run(rows, cols, vals, Cm, Dm):
+            return K.leaf_sddmm_nnz(rows[0], cols[0], vals[0], Cm, Dm)[None]
+        return run
+
+    run = _spmd_runner(
+        "sddmm_nnz", mesh, axis, (),
+        (a["dim0"], a["dim1"], a["vals"], C.arrays["vals"],
+         D.arrays["vals"]), build)
 
     def call():
         out_vals = np.asarray(run(
@@ -162,14 +217,20 @@ def spmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     a = B.arrays
     sp = sparse_pspecs({"B": B, "C": C}, axis)
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(sp["B"]["dim0"], sp["B"]["dim1"], sp["B"]["vals"],
-                  sp["C"]["vals"]),
-        out_specs=P())
-    def run(rows, cols, vals, Cm):
-        y = K.leaf_spmm_nnz(rows[0], cols[0], vals[0], Cm, n)
-        return jax.lax.psum(y, axis_name=axis)
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(sp["B"]["dim0"], sp["B"]["dim1"], sp["B"]["vals"],
+                      sp["C"]["vals"]),
+            out_specs=P())
+        def run(rows, cols, vals, Cm):
+            y = K.leaf_spmm_nnz(rows[0], cols[0], vals[0], Cm, n)
+            return jax.lax.psum(y, axis_name=axis)
+        return run
+
+    run = _spmd_runner(
+        "spmm_nnz", mesh, axis, (n,),
+        (a["dim0"], a["dim1"], a["vals"], C.arrays["vals"]), build)
 
     def call():
         return np.asarray(run(
@@ -192,13 +253,21 @@ def sddmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     a = B.arrays
     sp = sparse_pspecs({"B": B, "C": C, "D": D}, axis)
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(sp["B"]["pos1"], sp["B"]["crd1"], sp["B"]["vals"],
-                  sp["C"]["vals"], sp["D"]["vals"]),
-        out_specs=P(axis))
-    def run(pos, crd, vals, Cl, Dm):
-        return K.leaf_sddmm_rows(pos[0], crd[0], vals[0], Cl[0], Dm)[None]
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(sp["B"]["pos1"], sp["B"]["crd1"], sp["B"]["vals"],
+                      sp["C"]["vals"], sp["D"]["vals"]),
+            out_specs=P(axis))
+        def run(pos, crd, vals, Cl, Dm):
+            return K.leaf_sddmm_rows(pos[0], crd[0], vals[0], Cl[0],
+                                     Dm)[None]
+        return run
+
+    run = _spmd_runner(
+        "sddmm_rows", mesh, axis, (),
+        (a["pos1"], a["crd1"], a["vals"], C.arrays["vals"],
+         D.arrays["vals"]), build)
 
     def call():
         out_vals = np.asarray(run(
@@ -227,12 +296,18 @@ def bcsr_spmv_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
                             int(B.meta["grid_cols"]), int(B.meta["bc"]))
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P()),
-        out_specs=P(axis))
-    def run(pos, crd, tiles, cb):
-        return K.leaf_bcsr_spmv_rows(pos[0], crd[0], tiles[0], cb)[None]
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(axis))
+        def run(pos, crd, tiles, cb):
+            return K.leaf_bcsr_spmv_rows(pos[0], crd[0], tiles[0], cb)[None]
+        return run
+
+    run = _spmd_runner(
+        "bcsr_spmv_rows", mesh, axis, (),
+        (a["pos1"], a["crd1"], a["vals"], c_blk), build)
 
     def call():
         yb = np.asarray(run(jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
@@ -258,13 +333,19 @@ def bcsr_spmv_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
                             int(B.meta["grid_cols"]), int(B.meta["bc"]))
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P()),
-        out_specs=P())
-    def run(bd0, bd1, tiles, cb):
-        y = K.leaf_bcsr_spmv_nnz(bd0[0], bd1[0], tiles[0], cb, gr)
-        return jax.lax.psum(y, axis_name=axis)
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P())
+        def run(bd0, bd1, tiles, cb):
+            y = K.leaf_bcsr_spmv_nnz(bd0[0], bd1[0], tiles[0], cb, gr)
+            return jax.lax.psum(y, axis_name=axis)
+        return run
+
+    run = _spmd_runner(
+        "bcsr_spmv_nnz", mesh, axis, (gr,),
+        (a["bdim0"], a["bdim1"], a["vals"], c_blk), build)
 
     def call():
         y = np.asarray(run(jnp.asarray(a["bdim0"]), jnp.asarray(a["bdim1"]),
@@ -286,12 +367,18 @@ def bcsr_spmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
                                 int(B.meta["grid_cols"]), int(B.meta["bc"]))
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P()),
-        out_specs=P(axis))
-    def run(pos, crd, tiles, Cb):
-        return K.leaf_bcsr_spmm_rows(pos[0], crd[0], tiles[0], Cb)[None]
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(axis))
+        def run(pos, crd, tiles, Cb):
+            return K.leaf_bcsr_spmm_rows(pos[0], crd[0], tiles[0], Cb)[None]
+        return run
+
+    run = _spmd_runner(
+        "bcsr_spmm_rows", mesh, axis, (),
+        (a["pos1"], a["crd1"], a["vals"], C_blk), build)
 
     def call():
         yb = np.asarray(run(jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
@@ -317,13 +404,19 @@ def bcsr_spmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
                                 int(B.meta["grid_cols"]), int(B.meta["bc"]))
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P()),
-        out_specs=P())
-    def run(bd0, bd1, tiles, Cb):
-        y = K.leaf_bcsr_spmm_nnz(bd0[0], bd1[0], tiles[0], Cb, gr)
-        return jax.lax.psum(y, axis_name=axis)
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P())
+        def run(bd0, bd1, tiles, Cb):
+            y = K.leaf_bcsr_spmm_nnz(bd0[0], bd1[0], tiles[0], Cb, gr)
+            return jax.lax.psum(y, axis_name=axis)
+        return run
+
+    run = _spmd_runner(
+        "bcsr_spmm_nnz", mesh, axis, (gr,),
+        (a["bdim0"], a["bdim1"], a["vals"], C_blk), build)
 
     def call():
         y = np.asarray(run(jnp.asarray(a["bdim0"]), jnp.asarray(a["bdim1"]),
@@ -349,13 +442,20 @@ def bcsr_sddmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
                                   int(B.meta["grid_cols"]), bc)
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
-        out_specs=P(axis))
-    def run(pos, crd, tiles, Cl, Db):
-        brow = K.rows_from_pos(pos[0], crd[0].shape[0])
-        return K.leaf_bcsr_sddmm(brow, crd[0], tiles[0], Cl[0], Db)[None]
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(axis), P()),
+            out_specs=P(axis))
+        def run(pos, crd, tiles, Cl, Db):
+            brow = K.rows_from_pos(pos[0], crd[0].shape[0])
+            return K.leaf_bcsr_sddmm(brow, crd[0], tiles[0], Cl[0],
+                                     Db)[None]
+        return run
+
+    run = _spmd_runner(
+        "bcsr_sddmm_rows", mesh, axis, (),
+        (a["pos1"], a["crd1"], a["vals"], C_blk, D_blk), build)
 
     def call():
         out_tiles = np.asarray(run(
@@ -388,12 +488,18 @@ def bcsr_sddmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
                                   int(B.meta["grid_cols"]), bc)
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(), P()),
-        out_specs=P(axis))
-    def run(bd0, bd1, tiles, Cb, Db):
-        return K.leaf_bcsr_sddmm(bd0[0], bd1[0], tiles[0], Cb, Db)[None]
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(), P()),
+            out_specs=P(axis))
+        def run(bd0, bd1, tiles, Cb, Db):
+            return K.leaf_bcsr_sddmm(bd0[0], bd1[0], tiles[0], Cb, Db)[None]
+        return run
+
+    run = _spmd_runner(
+        "bcsr_sddmm_nnz", mesh, axis, (),
+        (a["bdim0"], a["bdim1"], a["vals"], C_blk, D_blk), build)
 
     def call():
         out_tiles = np.asarray(run(

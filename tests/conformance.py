@@ -235,3 +235,19 @@ def test_census_matches_contract():
                     else "fallback")
         assert entry["status"] == expected, \
             f"cell {cid}: {entry['status']}, contract says {expected}"
+
+
+# Full-matrix totals, pinned so the cached lowering path (plan memo + shard
+# cache + runner reuse, ISSUE 3) cannot silently flip a cell's status: when
+# the whole matrix ran, the census must be exactly this.
+FULL_CENSUS_TOTALS = {"direct": 91, "fallback": 11}
+_FULL_CELL_COUNT = 102
+
+
+def test_census_totals_with_caching():
+    if len(CENSUS) < _FULL_CELL_COUNT:
+        pytest.skip("full matrix did not run (-k/-m subset)")
+    counts = {"direct": 0, "fallback": 0}
+    for entry in CENSUS.values():
+        counts[entry["status"]] += 1
+    assert counts == FULL_CENSUS_TOTALS, counts

@@ -1,0 +1,314 @@
+"""Re-plan fast path: fingerprinted shard/plan caches + compiled-runner
+reuse (ISSUE 3). Covers the straggler-weighted block splits that nothing
+drove before, LRU bounding/eviction, content-fingerprint invalidation
+(new tensors AND in-place mutation), the per-lower hit/miss counters on
+LoweredKernel, and the shard_map executable cache."""
+import numpy as np
+import pytest
+
+import repro.core as rc
+from repro.core import formats as F
+import sys
+
+from repro.core import partition as P
+from repro.core.interp import interpret
+from repro.core.lower import (clear_lowering_caches, default_nnz_schedule,
+                              default_row_schedule, lower)
+from repro.core.tensor import Tensor
+from repro.runtime.fault import StragglerMitigator
+
+# `repro.core.__init__` rebinds the name `lower` to the function, so the
+# module object must come from sys.modules.
+L = sys.modules["repro.core.lower"]
+
+N, M_COLS = 19, 13
+M4 = rc.Machine(("x", 4))
+
+
+def _sparse(rng, density=0.25):
+    d = ((rng.random((N, M_COLS)) < density) *
+         rng.standard_normal((N, M_COLS))).astype(np.float32)
+    d[rng.integers(0, N)] = 0                                    # empty row
+    return d
+
+
+def _spmv_stmt(dB, fm, seed=1):
+    rng = np.random.default_rng(seed)
+    B = Tensor.from_dense("B", dB, fm)
+    c = Tensor.from_dense("c", rng.standard_normal(M_COLS).astype(np.float32))
+    return rc.parse_tin("a(i) = B(i,j) * c(j)",
+                        a=Tensor.zeros_dense("a", (N,)), B=B, c=c)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: straggler-weighted block splits, driven end-to-end
+# ---------------------------------------------------------------------------
+
+def test_weighted_block_nonzero_splits():
+    """partition_tensor_block_nonzeros honors straggler weights: the slow
+    shard owns proportionally fewer stored blocks."""
+    rng = np.random.default_rng(3)
+    B = Tensor.from_dense("B", _sparse(rng, 0.4), F.BCSR((2, 2)))
+    mit = StragglerMitigator(4, report_budget=1)
+    mit.report_slow(2)
+    part = P.partition_tensor_block_nonzeros(B, 4, weights=mit.weights)
+    counts = part.vals_bounds[:, 1] - part.vals_bounds[:, 0]
+    assert counts.sum() == (B.levels[1].nnz or 0)    # all blocks covered
+    assert counts[2] < counts[0]                     # slow shard gets less
+    equal = P.partition_tensor_block_nonzeros(B, 4)
+    eq_counts = equal.vals_bounds[:, 1] - equal.vals_bounds[:, 0]
+    assert not np.array_equal(counts, eq_counts)
+
+
+@pytest.mark.parametrize("expr", ["spmv", "spmm"])
+def test_weighted_block_replan_matches_oracle(expr):
+    """The re-plan path end-to-end: lower blocked/nnz, then re-lower with
+    skewed per-piece weights — differentially checked against interp, with
+    unchanged operands' shards reused across the re-plan."""
+    rng = np.random.default_rng(7)
+    dB = _sparse(rng, 0.4)
+    B = Tensor.from_dense("B", dB, F.BCSR((2, 2)))
+    if expr == "spmv":
+        c = Tensor.from_dense(
+            "c", rng.standard_normal(M_COLS).astype(np.float32))
+        stmt = rc.parse_tin("a(i) = B(i,j) * c(j)",
+                            a=Tensor.zeros_dense("a", (N,)), B=B, c=c)
+    else:
+        C = Tensor.from_dense(
+            "C", rng.standard_normal((M_COLS, 7)).astype(np.float32))
+        stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (N, 7)), B=B, C=C)
+    clear_lowering_caches()
+    sched = default_nnz_schedule(stmt, M4)
+    k0 = lower(stmt, M4, schedule=sched)
+    np.testing.assert_allclose(k0.run(), interpret(stmt), atol=1e-3)
+    mit = StragglerMitigator(4, report_budget=1)
+    mit.report_slow(1)
+    k1 = lower(stmt, M4, schedule=sched, weights=mit.weights)
+    assert k1.leaf_name.startswith("bcsr_")
+    # weights actually changed the stored-block split of B ...
+    assert not np.array_equal(k0.plans["B"].vals_bounds,
+                              k1.plans["B"].vals_bounds)
+    # ... while the replicated co-operand's shards were reused
+    assert k1.cache.shard_hits >= 1
+    np.testing.assert_allclose(k1.run(), interpret(stmt), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: bounded caches + per-lower hit/miss counters
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_counters_on_kernel():
+    """LoweredKernel.cache records this lower's plan/shard/runner reuse
+    (alongside CommStats): cold = all misses, warm = all hits."""
+    rng = np.random.default_rng(11)
+    stmt = _spmv_stmt(_sparse(rng), F.CSR())
+    clear_lowering_caches()
+    k1 = lower(stmt, M4)
+    assert k1.cache.plan_misses == 1 and k1.cache.plan_hits == 0
+    assert k1.cache.shard_misses == 3          # B, c, and the dense output
+    assert k1.cache.runner_misses == 1
+    assert not k1.cache.warm
+    k2 = lower(stmt, M4)
+    assert k2.cache.warm
+    assert (k2.cache.plan_hits, k2.cache.shard_hits,
+            k2.cache.runner_hits) == (1, 3, 1)
+    d = k2.cache.as_dict()
+    assert d["shard_hits"] == 3 and d["runner_misses"] == 0
+    np.testing.assert_allclose(k2.run(), k1.run(), atol=1e-5)
+
+
+def test_shard_cache_lru_eviction():
+    """The shard cache is bounded: with a tiny cap, older entries evict
+    (no unbounded growth — the latent bug of the old add-stream cache)
+    and evicted entries re-materialize correctly."""
+    old_cap = P.SHARD_CACHE.capacity
+    rng = np.random.default_rng(13)
+    stmts = [_spmv_stmt(_sparse(rng), F.CSR(), seed=s) for s in range(3)]
+    try:
+        clear_lowering_caches()
+        P.set_shard_cache_capacity(2)
+        ev0 = P.SHARD_CACHE_STATS["evictions"]
+        results = [lower(s, M4).run() for s in stmts]
+        assert len(P.SHARD_CACHE) <= 2
+        assert P.SHARD_CACHE_STATS["evictions"] > ev0
+        # evicted shards re-pack on demand, results unchanged
+        again = lower(stmts[0], M4)
+        assert again.cache.shard_misses >= 1
+        np.testing.assert_allclose(again.run(), results[0], atol=1e-5)
+    finally:
+        P.set_shard_cache_capacity(old_cap)
+
+
+def test_runner_cache_lru_eviction():
+    old_cap = L._RUNNER_CACHE.capacity
+    rng = np.random.default_rng(17)
+    stmt = _spmv_stmt(_sparse(rng), F.CSR())
+    try:
+        clear_lowering_caches()
+        L.set_runner_cache_capacity(1)
+        ev0 = L.RUNNER_CACHE_STATS["evictions"]
+        lower(stmt, M4)                                       # spmv runner
+        lower(stmt, M4, schedule=default_nnz_schedule(stmt, M4))  # evicts it
+        assert len(L._RUNNER_CACHE) == 1
+        assert L.RUNNER_CACHE_STATS["evictions"] > ev0
+        k = lower(stmt, M4)                   # re-jits the evicted runner
+        assert k.cache.runner_misses == 1
+        np.testing.assert_allclose(k.run(), interpret(stmt), atol=1e-4)
+    finally:
+        L.set_runner_cache_capacity(old_cap)
+
+
+def test_plan_memo_differential():
+    """A memoized plan is exactly the plan a fresh partitioning walk would
+    produce (_plans_equal over every tensor)."""
+    rng = np.random.default_rng(19)
+    stmt = _spmv_stmt(_sparse(rng), F.DCSR())
+    clear_lowering_caches()
+    lower(stmt, M4)
+    k_memo = lower(stmt, M4)
+    assert k_memo.cache.plan_hits == 1
+    clear_lowering_caches()
+    k_fresh = lower(stmt, M4)
+    assert set(k_memo.plans) == set(k_fresh.plans)
+    for name in k_memo.plans:
+        assert L._plans_equal(k_memo.plans[name], k_fresh.plans[name]), name
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: invalidation — same shape, different content must re-pack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt_name,fmt_ctor,strategy", [
+    ("csr", F.CSR, "rows"),            # materialize_csr_rows
+    ("csr", F.CSR, "nnz"),             # materialize_coo_nnz
+    ("coo", lambda: F.COO(2), "nnz"),
+    ("bcsr", lambda: F.BCSR((2, 2)), "rows"),   # materialize_bcsr_rows
+    ("bcsr", lambda: F.BCSR((2, 2)), "nnz"),    # materialize_bcsr_nnz
+], ids=["csr-rows", "csr-nnz", "coo-nnz", "bcsr-rows", "bcsr-nnz"])
+def test_invalidation_value_change(fmt_name, fmt_ctor, strategy):
+    """A NEW Tensor with the same shape/pattern but different values (new
+    crc) must not reuse the stale shard — while untouched co-operands with
+    identical content still hit."""
+    rng = np.random.default_rng(23)
+    dB = _sparse(rng)
+    fm = fmt_ctor()
+    stmt1 = _spmv_stmt(dB, fm, seed=29)
+    sched = (default_row_schedule if strategy == "rows"
+             else default_nnz_schedule)
+    clear_lowering_caches()
+    k1 = lower(stmt1, M4, schedule=sched(stmt1, M4))
+    r1 = k1.run()
+    np.testing.assert_allclose(r1, interpret(stmt1), atol=1e-3)
+    stmt2 = _spmv_stmt(dB * 3.0, fm, seed=29)    # same c content (seed)
+    k2 = lower(stmt2, M4, schedule=sched(stmt2, M4))
+    assert k2.cache.shard_misses >= 1            # B re-packed, not stale
+    assert k2.cache.shard_hits >= 1              # identical c reused
+    r2 = k2.run()
+    np.testing.assert_allclose(r2, interpret(stmt2), atol=1e-3)
+    np.testing.assert_allclose(r2, 3.0 * np.asarray(r1), atol=1e-3)
+
+
+def test_invalidation_dense_and_replicated():
+    """Dense-row and replicated shards invalidate on content change too
+    (spmm: C is replicated under rows, the output is dense rows)."""
+    rng = np.random.default_rng(31)
+    dB = _sparse(rng)
+    dC = rng.standard_normal((M_COLS, 7)).astype(np.float32)
+
+    def mk(dCmat):
+        B = Tensor.from_dense("B", dB, F.CSR())
+        C = Tensor.from_dense("C", dCmat)
+        return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (N, 7)), B=B, C=C)
+
+    clear_lowering_caches()
+    stmt1 = mk(dC)
+    r1 = lower(stmt1, M4).run()
+    stmt2 = mk(dC * -2.0)
+    k2 = lower(stmt2, M4)
+    assert k2.cache.shard_misses >= 1            # replicated C re-packed
+    np.testing.assert_allclose(k2.run(), dB @ (dC * -2.0), atol=1e-3)
+    np.testing.assert_allclose(r1, dB @ dC, atol=1e-3)
+
+
+def test_invalidation_inplace_mutation():
+    """In-place mutation of vals between lowers changes the CRC: no stale
+    plan, shard, or result."""
+    rng = np.random.default_rng(37)
+    stmt = _spmv_stmt(_sparse(rng), F.CSR())
+    B = stmt.rhs.accesses()[0].tensor
+    clear_lowering_caches()
+    r1 = lower(stmt, M4).run()
+    B.vals[:] = B.vals * 5.0
+    k2 = lower(stmt, M4)
+    assert not k2.cache.warm and k2.cache.shard_misses >= 1
+    np.testing.assert_allclose(k2.run(), 5.0 * np.asarray(r1), atol=1e-3)
+
+
+def test_plan_cache_rebinds_current_tensors():
+    """A memoized plan must not pin stale tensor objects: mutate the
+    original tensor AFTER its plan is cached, then lower a FRESH tensor
+    whose content equals the original — the plan-key hit must serve the
+    fresh tensor's data, not the mutated original's."""
+    rng = np.random.default_rng(47)
+    dB = _sparse(rng)
+    stmt1 = _spmv_stmt(dB, F.CSR(), seed=53)
+    clear_lowering_caches()
+    r1 = lower(stmt1, M4).run()
+    B1 = stmt1.rhs.accesses()[0].tensor
+    B1.vals[:] = B1.vals * -9.0          # corrupt the pinned object
+    stmt2 = _spmv_stmt(dB, F.CSR(), seed=53)   # original content, new objects
+    k2 = lower(stmt2, M4)
+    assert k2.cache.plan_hits == 1       # key matches original content
+    np.testing.assert_allclose(k2.run(), r1, atol=1e-5)
+    np.testing.assert_allclose(k2.run(), interpret(stmt2), atol=1e-3)
+
+
+def test_spadd3_weighted_replan_reslices_cached_stream():
+    """spadd3/nnz with NEW straggler weights: the chunk shards miss (new
+    bounds) but the concatenated stream is reused — and the weighted
+    result still matches the oracle."""
+    rng = np.random.default_rng(41)
+    Bt = Tensor.from_dense("B", _sparse(rng), F.CSR())
+    Ct = Tensor.from_dense("C", _sparse(rng, 0.15), F.CSR())
+    Dt = Tensor.from_dense("D", _sparse(rng, 0.1), F.CSR())
+    A = Tensor.from_dense("A", np.zeros((N, M_COLS), np.float32), F.CSR())
+    stmt = rc.parse_tin("A(i,j) = B(i,j) + C(i,j) + D(i,j)",
+                        A=A, B=Bt, C=Ct, D=Dt)
+    sched = default_nnz_schedule(stmt, M4)
+    clear_lowering_caches()
+    lower(stmt, M4, schedule=sched)
+    P.ADD_STREAM_STATS.update(hits=0, misses=0)
+    src_hits0 = P.SHARD_CACHE_STATS["hits"]
+    w = np.array([1.0, 1.0, 0.25, 1.0])
+    k = lower(stmt, M4, schedule=sched, weights=w)
+    assert P.ADD_STREAM_STATS["misses"] == 1     # new bounds: chunks re-cut
+    assert P.SHARD_CACHE_STATS["hits"] > src_hits0   # stream itself reused
+    counts = k.shards["_addstream"].arrays["nnz_count"]
+    assert counts[2] < counts[0]                 # weighted chunks
+    expected = Bt.to_dense() + Ct.to_dense() + Dt.to_dense()
+    np.testing.assert_allclose(k.run().to_dense(), expected, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# shard_map executable reuse (distributed/executor.py)
+# ---------------------------------------------------------------------------
+
+def test_spmd_runner_cache_reuse():
+    from repro.distributed import executor
+    rng = np.random.default_rng(43)
+    dB = _sparse(rng)
+    stmt = _spmv_stmt(dB, F.CSR())
+    machine = rc.Machine(("x", 1))        # single-device CPU mesh
+    executor.clear_spmd_cache()
+    k1 = lower(stmt, machine)
+    y1 = executor.to_spmd(k1)()
+    misses1 = executor.SPMD_RUN_STATS["misses"]
+    k2 = lower(stmt, machine)             # warm re-lower ...
+    y2 = executor.to_spmd(k2)()           # ... reuses the jitted shard_map
+    assert executor.SPMD_RUN_STATS["misses"] == misses1
+    assert executor.SPMD_RUN_STATS["hits"] >= 1
+    np.testing.assert_allclose(y1, y2, atol=1e-6)
+    cv = np.asarray(stmt.rhs.accesses()[1].tensor.to_dense())
+    np.testing.assert_allclose(y1, dB @ cv, atol=1e-4)
