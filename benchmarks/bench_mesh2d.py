@@ -1,0 +1,67 @@
+"""1-D vs 2-D machine grids at FIXED piece count (ISSUE 4).
+
+SpMM on Px1 vs the P/2 x 2 grid: same number of pieces, different
+communication structure. The 1-D row distribution replicates the dense
+operand to every piece (|C|*(PQ-1) network bytes); the SUMMA-style grid
+broadcasts each k-window along x only and all-reduces output partials
+along y only (|C|*(P-1) + |A|*(Q-1)) — strictly fewer whenever
+|A| < P*|C|. Rows report wall time (us) with the comm volume and its
+per-axis attribution in the derived column; the *_comm_bytes rows carry
+the byte totals in the numeric column so BENCH_mesh2d.json pins the
+trajectory.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core.lower import (clear_lowering_caches, default_grid_schedule,
+                              default_row_schedule, lower)
+from repro.core.tensor import Tensor
+from .common import csv_row, time_fn
+
+
+def _spmm_stmt(rng, n, m, j, density=0.05):
+    dB = ((rng.random((n, m)) < density) *
+          rng.standard_normal((n, m))).astype(np.float32)
+    B = Tensor.from_dense("B", dB, F.CSR())
+    C = Tensor.from_dense("C", rng.standard_normal((m, j)).astype(np.float32))
+    return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (n, j)), B=B, C=C)
+
+
+def run(n=4096, m=4096, j=64, pieces=4):
+    rng = np.random.default_rng(0)
+    stmt = _spmm_stmt(rng, n, m, j)
+    m1 = rc.Machine(("x", pieces))
+    m2 = rc.Machine(("x", pieces // 2), ("y", 2))
+
+    clear_lowering_caches()
+    k1 = lower(stmt, m1, schedule=default_row_schedule(stmt, m1))
+    k2 = lower(stmt, m2, schedule=default_grid_schedule(stmt, m2))
+
+    b1 = k1.comm.total_network_bytes()
+    b2 = k2.comm.total_network_bytes()
+    ax = {name: a.network_bytes() for name, a in k2.comm.axes.items()}
+    assert b2 < b1, (
+        f"2-D SpMM must move strictly fewer bytes than 1-D at equal piece "
+        f"count: 2-D {b2} vs 1-D {b1}")
+
+    t1 = time_fn(k1.run)
+    t2 = time_fn(k2.run)
+    rows = [
+        csv_row(f"spmm_1d_{pieces}x1", t1 * 1e6, f"net_bytes={b1}"),
+        csv_row(f"spmm_2d_{pieces // 2}x2", t2 * 1e6,
+                f"net_bytes={b2};" +
+                ";".join(f"{a}_bytes={v}" for a, v in sorted(ax.items()))),
+        csv_row(f"spmm_1d_{pieces}x1_comm_bytes", float(b1), ""),
+        csv_row(f"spmm_2d_{pieces // 2}x2_comm_bytes", float(b2),
+                f"saving={1.0 - b2 / b1:.3f}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

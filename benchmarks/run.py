@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
   bench_bcsr          — direct blocked (BCSR) path vs conversion fallback
   bench_replan        — re-plan fast path: cold lower vs warm re-lower
                         (plan/shard/runner caches) vs execute-only
+  bench_mesh2d        — 1-D vs 2-D machine grid at fixed piece count:
+                        SpMM comm volume (per-axis) + wall time
 
 Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
 writes a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
@@ -36,9 +38,9 @@ def main() -> None:
                     help="directory for the BENCH_*.json files")
     args = ap.parse_args()
 
-    from . import (bench_bcsr, bench_load_balance, bench_mismatch,
-                   bench_pallas_kernels, bench_replan, bench_spadd3,
-                   bench_vs_interp, bench_weak_scaling)
+    from . import (bench_bcsr, bench_load_balance, bench_mesh2d,
+                   bench_mismatch, bench_pallas_kernels, bench_replan,
+                   bench_spadd3, bench_vs_interp, bench_weak_scaling)
     from .common import drain_results
 
     print("name,us_per_call,derived")
@@ -59,6 +61,9 @@ def main() -> None:
             j=32 if args.quick else 64),
         "replan": lambda: bench_replan.run(
             *((2048, 2048) if args.quick else (4096, 4096)),
+            j=32 if args.quick else 64),
+        "mesh2d": lambda: bench_mesh2d.run(
+            *((1024, 1024) if args.quick else (4096, 4096)),
             j=32 if args.quick else 64),
     }
     only = {s for s in args.only.split(",") if s} if args.only else None

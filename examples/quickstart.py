@@ -50,7 +50,7 @@ s = (Schedule(stmt, M)
      .parallelize(ii, CPUThread))     # leaf parallelism
 
 # --- Compile + run -----------------------------------------------------------
-kernel = rc.lower(stmt, M, schedule=s, distributions=distributions)
+kernel = rc.lower_stmt(stmt, M, schedule=s, distributions=distributions)
 y = kernel.run()
 
 expected = dense_B @ np.asarray(c.to_dense())

@@ -16,26 +16,39 @@ from .formats import (BCSR, COO, CSC, CSF, CSR, DCSF, DCSR, DDC, Compressed,
                       Dense, DenseMat, DenseND, DenseVec, Format, Singleton,
                       SparseVec, capabilities, conversion_target, format_key)
 from .interp import interpret
-from .lower import (CacheStats, LoweredKernel, clear_lowering_caches,
-                    default_nnz_schedule, default_row_schedule, lower)
+# NOTE: the lowering entry point is re-exported as ``lower_stmt`` — the
+# package attribute ``repro.core.lower`` stays bound to the SUBMODULE, so
+# ``import repro.core.lower as L`` returns the module (the name-shadowing
+# gotcha the re-plan PR had to work around with sys.modules). The function
+# spelling inside the module, ``repro.core.lower.lower``, is unchanged.
+from .lower import (AxisComm, CacheStats, CommStats, LoweredKernel,
+                    clear_lowering_caches, default_grid_nnz_schedule,
+                    default_grid_schedule, default_nnz_schedule,
+                    default_row_schedule)
+from .lower import lower as lower_stmt
+from . import grid
+from . import lower  # rebind the package attr to the submodule (see NOTE)
 from .partition import (ShardedTensor, TensorPartition, image,
-                        partition_by_bounds, partition_tensor_nonzeros,
-                        partition_tensor_rows, preimage, replicate_tensor)
+                        partition_by_bounds, partition_tensor_grid,
+                        partition_tensor_nonzeros, partition_tensor_rows,
+                        preimage, replicate_tensor)
 from .schedule import CPUThread, Schedule, TPUGrid, VectorLanes
 from .tdn import Distribution, Machine, dist
 from .tensor import Tensor, TensorVar
 from .tin import Access, Assignment, IndexVar, index_vars, parse_tin
 
 __all__ = [
-    "formats", "BCSR", "COO", "CSC", "CSF", "CSR", "DCSF", "DCSR", "DDC",
-    "Compressed", "Dense", "DenseMat", "DenseND", "DenseVec", "Format",
-    "Singleton", "capabilities", "conversion_target", "format_key",
-    "SparseVec", "interpret", "CacheStats", "LoweredKernel",
-    "clear_lowering_caches", "default_nnz_schedule",
-    "default_row_schedule", "lower", "image", "preimage",
-    "partition_by_bounds", "partition_tensor_nonzeros",
-    "partition_tensor_rows", "replicate_tensor", "CPUThread", "Schedule",
-    "TPUGrid", "VectorLanes", "Distribution", "Machine", "dist", "Tensor",
-    "TensorVar", "Access", "Assignment", "IndexVar", "index_vars",
-    "parse_tin", "ShardedTensor", "TensorPartition",
+    "formats", "grid", "BCSR", "COO", "CSC", "CSF", "CSR", "DCSF", "DCSR",
+    "DDC", "Compressed", "Dense", "DenseMat", "DenseND", "DenseVec",
+    "Format", "Singleton", "capabilities", "conversion_target",
+    "format_key", "SparseVec", "interpret", "AxisComm", "CacheStats",
+    "CommStats", "LoweredKernel", "clear_lowering_caches",
+    "default_grid_nnz_schedule", "default_grid_schedule",
+    "default_nnz_schedule", "default_row_schedule", "lower", "lower_stmt",
+    "image", "preimage", "partition_by_bounds", "partition_tensor_grid",
+    "partition_tensor_nonzeros", "partition_tensor_rows",
+    "replicate_tensor", "CPUThread", "Schedule", "TPUGrid", "VectorLanes",
+    "Distribution", "Machine", "dist", "Tensor", "TensorVar", "Access",
+    "Assignment", "IndexVar", "index_vars", "parse_tin", "ShardedTensor",
+    "TensorPartition",
 ]

@@ -1,0 +1,545 @@
+"""Multi-axis (grid) distribution subsystem — 2-D processor grids.
+
+SpDISTAL's `distribute((i, k, …) → (x, y, …))` maps SEVERAL index
+variables onto a multi-dimensional machine grid (the DISTAL machine
+abstraction, paper §II-C / Fig. 4c), with communication planned per grid
+axis. This module is that subsystem for 2-D grids:
+
+- :class:`GridPlan` — the per-axis universe splits and the cross-product
+  tile map: color ``(p, q)`` owns row window ``p`` × column window ``q``
+  of the distributed sparse operand (block-aligned when it is blocked).
+- **Per-axis communication planning**: operands sliced by the second loop
+  variable broadcast along ``x`` (all grid rows in a column share them),
+  operands sliced by the first broadcast along ``y``, and — when the
+  second variable is a reduction variable — output partials all-reduce
+  along ``y`` only. This is SUMMA specialized to sparse operands: a 2-D
+  SpMM at P×Q pieces moves ``|C|·(P−1) + |A|·(Q−1)`` bytes versus 1-D's
+  ``|C|·(PQ−1)``, strictly fewer whenever ``|A| < P·|C|``.
+- **Grid emitters**: the vmap simulation backend for SpMV / SpMM / SDDMM
+  tiles (scalar and blocked), reusing the same leaf kernels as the 1-D
+  path — a tile is just a CSR-convention shard with column-local
+  coordinates contracted against its axis-window co-operand slice. The
+  SPMD analogs live in ``distributed/executor.py`` (``*_grid_rows``
+  builders over a genuine ``Mesh((P, Q), ("x", "y"))`` with ``psum``
+  scoped to the reduction axis only).
+
+Grid NON-ZERO schedules do not pass through here: a nested pos-split
+canonicalizes to the flat equal split of the fused position space, so
+``core.lower`` runs them through the 1-D nnz machinery at ``P*Q`` pieces
+(bit-for-bit their ``Px1`` counterparts) and only re-attributes the
+communication to the axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import lower as L
+from .partition import (Bounds, ShardedTensor, TensorPartition,
+                        block_aligned_row_bounds, materialize_bcsr_grid,
+                        materialize_csr_grid, materialize_dense_cols,
+                        materialize_dense_rows, materialize_replicated,
+                        partition_by_bounds, partition_tensor_cols,
+                        partition_tensor_grid, partition_tensor_rows,
+                        replicate_tensor)
+from .schedule import DistStrategy
+from .tdn import Machine
+from .tensor import Tensor
+from .tin import Assignment
+from ..kernels import ref as K
+from ..kernels.layout import pack_rowwindow_blocks
+
+
+@dataclasses.dataclass
+class GridPlan:
+    """Per-axis splits + the cross-product tile map of a 2-D distribution.
+
+    ``row_bounds`` (P, 2) splits the first distributed variable's universe,
+    ``col_bounds`` (Q, 2) the second's; the flat color of tile ``(p, q)``
+    is ``p * Q + q`` (row-major), the convention every grid shard set and
+    emitter shares. Only universe strategies flow through a GridPlan —
+    grid nnz schedules canonicalize to the flat 1-D split (module
+    docstring)."""
+
+    axis_x: str
+    axis_y: str
+    row_bounds: Bounds                # (P, 2) over extent(vars[0])
+    col_bounds: Bounds                # (Q, 2) over extent(vars[1])
+
+    @property
+    def P(self) -> int:
+        return int(self.row_bounds.shape[0])
+
+    @property
+    def Q(self) -> int:
+        return int(self.col_bounds.shape[0])
+
+    @property
+    def pieces(self) -> int:
+        return self.P * self.Q
+
+    def tile_windows(self):
+        """Yield ``(p, q, (rlo, rhi), (clo, chi))`` in flat-color order."""
+        for p in range(self.P):
+            for q in range(self.Q):
+                yield (p, q,
+                       (int(self.row_bounds[p, 0]), int(self.row_bounds[p, 1])),
+                       (int(self.col_bounds[q, 0]), int(self.col_bounds[q, 1])))
+
+    def validate(self, n_rows: int, n_cols: int) -> None:
+        """Tiling invariant: the P×Q tiles cover ``[0, n_rows) × [0,
+        n_cols)`` exactly once — each axis's windows are sorted, disjoint,
+        and gap-free."""
+        for bounds, n, label in ((self.row_bounds, n_rows, "row"),
+                                 (self.col_bounds, n_cols, "col")):
+            if bounds[0, 0] != 0 or bounds[-1, 1] != n:
+                raise AssertionError(f"{label} windows do not span [0, {n})")
+            for w in range(bounds.shape[0]):
+                if bounds[w, 0] > bounds[w, 1]:
+                    raise AssertionError(f"negative {label} window {w}")
+                if w and bounds[w, 0] != bounds[w - 1, 1]:
+                    raise AssertionError(
+                        f"{label} windows {w - 1}/{w} overlap or gap")
+
+
+def compute_grid_plan(stmt: Assignment, strat: DistStrategy) -> GridPlan:
+    """Derive the per-axis universe splits for a 2-D universe strategy:
+    equal splits of the two distributed variables' extents, snapped to
+    block boundaries when the distributed sparse operand is blocked (so
+    every co-partitioned tensor shares the same per-color windows)."""
+    if not strat.is_grid or strat.space != "universe":
+        raise ValueError("grid plan requires a multi-var universe strategy")
+    if len(strat.vars) != 2:
+        raise NotImplementedError(
+            f"grid distribution supports exactly 2 machine dimensions, got "
+            f"{len(strat.vars)} distributed vars {strat.vars}")
+    dx, dy = strat.machine_dims[0], strat.machine_dims[1]
+    v0, v1 = strat.vars[0], strat.vars[1]
+    spa = stmt.sparse_accesses()[0]
+    if tuple(spa.idx[:2]) != (v0, v1):
+        raise NotImplementedError(
+            f"2-D grid distribution must distribute the sparse operand's "
+            f"first two index variables, got ({v0}, {v1}) for {spa}")
+    n0, n1 = stmt.var_extent(v0), stmt.var_extent(v1)
+    Bt = spa.tensor
+    if getattr(Bt.format, "is_blocked", False):
+        br, bc = Bt.format.block_shape
+        row_bounds = block_aligned_row_bounds(n0, dx.size, br)
+        col_bounds = block_aligned_row_bounds(n1, dy.size, bc)
+    else:
+        row_bounds = partition_by_bounds(n0, dx.size)
+        col_bounds = partition_by_bounds(n1, dy.size)
+    return GridPlan(axis_x=dx.name, axis_y=dy.name,
+                    row_bounds=row_bounds, col_bounds=col_bounds)
+
+
+def _grid_tag(acc, v0, v1) -> str:
+    """Which slicing a grid schedule gives this access: ``xy`` = cross
+    product tiles, ``x``/``y`` = sliced by that axis's windows, ``*`` =
+    replicated. The tag is also the communication key: an operand sliced
+    along one axis broadcasts along the ORTHOGONAL axis."""
+    t = acc.tensor
+    idx = tuple(acc.idx)
+    if (t.format.is_sparse and len(idx) >= 2
+            and idx[0] == v0 and idx[1] == v1):
+        return "xy"
+    if v0 in idx and idx.index(v0) == 0 and t.format.level_of_dim(0) == 0:
+        return "x"
+    if v1 in idx and idx.index(v1) == 0 and t.format.level_of_dim(0) == 0:
+        return "y"
+    if v1 in idx and idx.index(v1) == 1 and t.format.is_all_dense:
+        return "ycols"
+    return "*"
+
+
+def _grid_axis_tags(stmt: Assignment, strat: DistStrategy,
+                    ) -> Dict[str, str]:
+    v0, v1 = strat.vars[0], strat.vars[1]
+    tags: Dict[str, str] = {}
+    for acc in stmt.accesses():
+        tags.setdefault(acc.tensor.name, _grid_tag(acc, v0, v1))
+    return tags
+
+
+def _grid_plans(stmt: Assignment, strat: DistStrategy, gp: GridPlan,
+                ) -> Tuple[Dict[str, TensorPartition], Dict[str, str]]:
+    """Fig. 9a steps 1 & 2 on a grid: the distributed sparse operand (and a
+    sparse output sharing its index pattern) takes cross-product tiles;
+    every other operand is sliced by whichever distributed variable
+    indexes it — tagged with the axis it rides (``axis_of``)."""
+    axis_of = _grid_axis_tags(stmt, strat)
+    plans: Dict[str, TensorPartition] = {}
+    for acc in stmt.accesses():
+        t = acc.tensor
+        if t.name in plans:
+            continue
+        tag = axis_of[t.name]
+        if tag == "xy":
+            plans[t.name] = partition_tensor_grid(t, gp.row_bounds,
+                                                  gp.col_bounds)
+        elif tag == "x":
+            plans[t.name] = partition_tensor_rows(t, gp.row_bounds)
+        elif tag == "y":
+            plans[t.name] = partition_tensor_rows(t, gp.col_bounds)
+        elif tag == "ycols":
+            plans[t.name] = partition_tensor_cols(t, gp.col_bounds)
+        else:
+            plans[t.name] = replicate_tensor(t, gp.pieces)
+    return plans, axis_of
+
+
+def _grid_comm(stmt: Assignment, strat: DistStrategy, gp: GridPlan,
+               plans: Dict[str, TensorPartition], axis_of: Dict[str, str],
+               out_t: Tensor) -> L.CommStats:
+    """Per-axis communication plan. An operand sliced along one axis is
+    shared by (broadcast to) every color of the ORTHOGONAL axis; a fully
+    replicated operand broadcasts hierarchically (x once, then y within
+    each of the P grid rows); when the column variable is a reduction
+    variable, every grid row all-reduces its output window along y."""
+    P, Q = gp.P, gp.Q
+    comm = L.CommStats(pieces=gp.pieces)
+    axes = {gp.axis_x: L.AxisComm(size=P), gp.axis_y: L.AxisComm(size=Q)}
+    for name, plan in plans.items():
+        if name == out_t.name:
+            continue
+        t = plan.tensor
+        tag = axis_of[name]
+        if tag == "xy":
+            continue                      # tiles: owned, nothing moves
+        if tag == "*":
+            axes[gp.axis_x].broadcast_bytes += L._nbytes(t)
+            axes[gp.axis_y].broadcast_bytes += P * L._nbytes(t)
+        elif tag in ("y", "ycols"):       # sliced by y → broadcast along x
+            axes[gp.axis_x].broadcast_bytes += L._nbytes(t)
+        else:                             # sliced by x → broadcast along y
+            axes[gp.axis_y].broadcast_bytes += L._nbytes(t)
+    if strat.vars[1] in stmt.reduction_vars:
+        axes[gp.axis_y].reduce_bytes += L._nbytes(out_t)
+    comm.axes = axes
+    return comm
+
+
+# ---------------------------------------------------------------------------
+# The grid lowering entry point (called from core.lower._lower_impl)
+# ---------------------------------------------------------------------------
+
+def lower_grid(stmt: Assignment, machine: Machine, strat: DistStrategy,
+               jit: bool, fallbacks, declared_formats, snap,
+               distributions=None) -> "L.LoweredKernel":
+    out_t: Tensor = stmt.lhs.tensor
+    gp = compute_grid_plan(stmt, strat)
+
+    plan_key = L._plan_cache_key(stmt, strat, None)
+    plans = L._PLAN_CACHE.get(plan_key) if plan_key is not None else None
+    if plans is not None:
+        current: Dict[str, Tensor] = {}
+        for acc in stmt.accesses():
+            current.setdefault(acc.tensor.name, acc.tensor)
+        plans = {name: dataclasses.replace(p, tensor=current[name])
+                 for name, p in plans.items()}
+        axis_of = _grid_axis_tags(stmt, strat)
+    else:
+        plans, axis_of = _grid_plans(stmt, strat, gp)
+        if plan_key is not None:
+            L._PLAN_CACHE.put(plan_key, {
+                name: dataclasses.replace(p, tensor=None)
+                for name, p in plans.items()})
+
+    comm = _grid_comm(stmt, strat, gp, plans, axis_of, out_t)
+
+    # ---- materialize ------------------------------------------------------
+    shards: Dict[str, ShardedTensor] = {}
+    for name, plan in plans.items():
+        if name == out_t.name:
+            continue                      # grid outputs assemble from leaves
+        t = plan.tensor
+        if plan.replicated:
+            shards[name] = materialize_replicated(t, gp.pieces)
+        elif plan.grid is not None:
+            shards[name] = (materialize_bcsr_grid(t, plan)
+                            if t.format.is_blocked
+                            else materialize_csr_grid(t, plan))
+        elif plan.root_coord_bounds is None:
+            shards[name] = materialize_dense_cols(
+                t, plan.levels[1].coord_bounds)
+        else:
+            shards[name] = materialize_dense_rows(t, plan.root_coord_bounds)
+
+    # data-vs-computation distribution mismatch cost (C4), as in the 1-D
+    # path: a declared data distribution that does not match the grid plan
+    # charges the operand's reshuffle.
+    if distributions:
+        for name, d in distributions.items():
+            want = plans.get(name)
+            if want is None or want.replicated:
+                continue
+            have = d.plan(plans[name].tensor)
+            if not L._plans_equal(want, have):
+                comm.redistribute_bytes += L._nbytes(plans[name].tensor)
+
+    leaf_name, runner = _emit_grid(stmt, strat, gp, plans, shards, jit=jit)
+    return L.LoweredKernel(
+        stmt=stmt, strategy=strat, machine=machine, plans=plans,
+        shards=shards, runner=runner, comm=comm, leaf_name=leaf_name,
+        fallbacks=fallbacks, declared_formats=declared_formats,
+        cache=L._cache_delta(snap),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Grid emitters — vmap simulation backend. Tiles reuse the 1-D leaf
+# kernels: a (p, q) tile is a CSR-convention shard whose column-local crd
+# indexes the q-th window slice of the dense co-operand; SUMMA reduction is
+# the sum over the q axis of each grid row's partials.
+# ---------------------------------------------------------------------------
+
+def _emit_grid(stmt, strat, gp, plans, shards, jit=True):
+    sig = stmt.signature()
+    primary = None
+    for acc in stmt.rhs.accesses():
+        if acc.tensor.format.is_sparse:
+            primary = acc.tensor
+            break
+    blocked = primary is not None and primary.format.is_blocked
+    table = {
+        "d1(i)=s2(i,j)*d1(j)":
+            _emit_bcsr_spmv_grid if blocked else _emit_spmv_grid,
+        "d2(i,j)=s2(i,k)*d2(k,j)":
+            _emit_bcsr_spmm_grid if blocked else _emit_spmm_grid,
+        "s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)":
+            _emit_bcsr_sddmm_grid if blocked else _emit_sddmm_grid,
+    }
+    emitter = table.get(sig)
+    if emitter is None:
+        raise NotImplementedError(
+            f"no 2-D grid emitter for {sig}; schedule a 1-D distribution "
+            "(spmv/spmm/sddmm are grid-distributable)")
+    name = emitter.__name__.replace("_emit_", "") + "_rows"
+    runner = emitter(stmt, gp, plans, shards, jit=jit)
+    return name, runner
+
+
+def _color_axes(PQ: int, Q: int):
+    color = jnp.arange(PQ, dtype=jnp.int32)
+    return color // Q, color % Q
+
+
+def _emit_spmv_grid(stmt, gp, plans, shards, jit=True):
+    B = shards[stmt.rhs.accesses()[0].tensor.name]
+    c = shards[stmt.rhs.accesses()[1].tensor.name]
+    n = stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    P, Q, mr = int(B.meta["P"]), int(B.meta["Q"]), int(B.meta["max_rows"])
+    cw = c.arrays["vals"]                                # (Q, max_kw)
+
+    def fn(pos, crd, vals, cw, row_start, row_count):
+        _, q = _color_axes(pos.shape[0], Q)
+        blocks = jax.vmap(
+            lambda p_, c_, v_, q_: K.leaf_spmv_rows(p_, c_, v_, cw[q_]))(
+            pos, crd, vals, q)                           # (P*Q, mr)
+        partial = blocks.reshape(P, Q, mr).sum(axis=1)
+        return L._scatter_rows((n,), partial, row_start, row_count)
+
+    args = (a["pos1"], a["crd1"], a["vals"], cw,
+            a["row_start"], a["row_count"])
+    f = L._runner(jit, "spmv_grid_rows", (n, P, Q, mr), args, lambda: fn)
+    return lambda: np.asarray(f(*args))
+
+
+def _emit_spmm_grid(stmt, gp, plans, shards, jit=True):
+    Bacc, Cacc = stmt.rhs.accesses()
+    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    P, Q, mr = int(B.meta["P"]), int(B.meta["Q"]), int(B.meta["max_rows"])
+    Cw = C.arrays["vals"]                                # (Q, max_kw, J)
+
+    def fn(pos, crd, vals, Cw, row_start, row_count):
+        _, q = _color_axes(pos.shape[0], Q)
+        blocks = jax.vmap(
+            lambda p_, c_, v_, q_: K.leaf_spmm_rows(p_, c_, v_, Cw[q_]))(
+            pos, crd, vals, q)                           # (P*Q, mr, J)
+        partial = blocks.reshape(P, Q, mr, out_shape[1]).sum(axis=1)
+        return L._scatter_rows(out_shape, partial, row_start, row_count)
+
+    args = (a["pos1"], a["crd1"], a["vals"], Cw,
+            a["row_start"], a["row_count"])
+    f = L._runner(jit, "spmm_grid_rows", (P, Q, mr) + out_shape, args,
+                  lambda: fn)
+    return lambda: np.asarray(f(*args))
+
+
+def _emit_sddmm_grid(stmt, gp, plans, shards, jit=True):
+    """Grid SDDMM is pure owner-computes: tile (p, q) samples its B tile
+    against C's p-th row window and D's q-th column window; outputs stay
+    aligned with B's stored positions (scattered home by ``val_idx``) —
+    no reduction on either axis."""
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    Q = int(B.meta["Q"])
+    Cw = C.arrays["vals"]                                # (P, max_rw, K)
+    Dw = D.arrays["vals"]                                # (Q, K, max_mw)
+    total_nnz = Bt.nnz
+
+    def fn(pos, crd, vals, Cw, Dw, val_idx, nnz_count):
+        p, q = _color_axes(pos.shape[0], Q)
+        out = jax.vmap(
+            lambda pos_, crd_, v_, p_, q_:
+            K.leaf_sddmm_rows(pos_, crd_, v_, Cw[p_], Dw[q_]))(
+            pos, crd, vals, p, q)                        # (P*Q, max_tnnz)
+        mask = jnp.arange(out.shape[1])[None, :] < nnz_count[:, None]
+        idx = jnp.clip(val_idx, 0, max(total_nnz - 1, 0)).reshape(-1)
+        return jnp.zeros((total_nnz,), out.dtype).at[idx].add(
+            (out * mask).reshape(-1))
+
+    args = (a["pos1"], a["crd1"], a["vals"], Cw, Dw, a["val_idx"],
+            a["nnz_count"])
+    f = L._runner(jit, "sddmm_grid_rows", (total_nnz, Q), args, lambda: fn)
+
+    def run():
+        new_vals = np.asarray(f(*args))
+        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
+                      new_vals, Bt.dtype)
+
+    return run
+
+
+# -- per-window block packing for the blocked grid leaves -------------------
+# The grid column windows are block-aligned (the planner snaps them), so a
+# window's slice of the dense co-operand reshapes straight into (bc-sized)
+# blocks. These pack from the MATERIALIZED window shards — the cached
+# (Q, max_w, ...) arrays — so a warm re-lower never re-densifies the
+# operand; both the vmap emitters here and the shard_map builders in
+# distributed/executor.py share them.
+
+def pack_window_vec_blocks(vals: np.ndarray, max_gcw: int, bc: int,
+                           ) -> np.ndarray:
+    """Dense-vector window shards (Q, max_kw) → column blocks
+    (Q, max_gcw, bc); padding past each window is already zero."""
+    Q, kw = vals.shape
+    out = np.zeros((Q, max_gcw * bc), vals.dtype)
+    out[:, :kw] = vals
+    return out.reshape(Q, max_gcw, bc)
+
+
+def pack_window_mat_row_blocks(vals: np.ndarray, max_gcw: int, bc: int,
+                               ) -> np.ndarray:
+    """Dense-matrix row-window shards (Q, max_kw, J) → leading-dim blocks
+    (Q, max_gcw, bc, J)."""
+    Q, kw, J = vals.shape
+    out = np.zeros((Q, max_gcw * bc, J), vals.dtype)
+    out[:, :kw] = vals
+    return out.reshape(Q, max_gcw, bc, J)
+
+
+def pack_window_mat_inner_blocks(vals: np.ndarray, max_gcw: int, bc: int,
+                                 ) -> np.ndarray:
+    """Dense-matrix column-window shards (Q, K, max_mw) → trailing-dim
+    blocks (Q, max_gcw, K, bc) — the per-window analog of
+    ``layout.pack_mat_inner_blocks``."""
+    Q, K, mw = vals.shape
+    out = np.zeros((Q, K, max_gcw * bc), vals.dtype)
+    out[:, :, :mw] = vals
+    return np.ascontiguousarray(
+        out.reshape(Q, K, max_gcw, bc).transpose(0, 2, 1, 3))
+
+
+def _emit_bcsr_spmv_grid(stmt, gp, plans, shards, jit=True):
+    B = shards[stmt.rhs.accesses()[0].tensor.name]
+    c = shards[stmt.rhs.accesses()[1].tensor.name]
+    n = stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    P, Q = int(B.meta["P"]), int(B.meta["Q"])
+    max_gcw = int(a["bcol_count"].max())
+    cw = pack_window_vec_blocks(np.asarray(c.arrays["vals"]), max_gcw,
+                                int(B.meta["bc"]))
+
+    def fn(pos, crd, tiles, cw, row_start, row_count):
+        _, q = _color_axes(pos.shape[0], Q)
+        blocks = jax.vmap(
+            lambda p_, c_, t_, q_: K.leaf_bcsr_spmv_rows(p_, c_, t_, cw[q_]))(
+            pos, crd, tiles, q)                          # (P*Q, mbr*br)
+        partial = blocks.reshape(P, Q, blocks.shape[1]).sum(axis=1)
+        return L._scatter_rows((n,), partial, row_start, row_count)
+
+    args = (a["pos1"], a["crd1"], a["vals"], cw,
+            a["row_start"], a["row_count"])
+    f = L._runner(jit, "bcsr_spmv_grid_rows", (n, P, Q), args, lambda: fn)
+    return lambda: np.asarray(f(*args))
+
+
+def _emit_bcsr_spmm_grid(stmt, gp, plans, shards, jit=True):
+    Bacc, Cacc = stmt.rhs.accesses()
+    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    P, Q = int(B.meta["P"]), int(B.meta["Q"])
+    max_gcw = int(a["bcol_count"].max())
+    Cw = pack_window_mat_row_blocks(np.asarray(C.arrays["vals"]), max_gcw,
+                                    int(B.meta["bc"]))
+
+    def fn(pos, crd, tiles, Cw, row_start, row_count):
+        _, q = _color_axes(pos.shape[0], Q)
+        blocks = jax.vmap(
+            lambda p_, c_, t_, q_: K.leaf_bcsr_spmm_rows(p_, c_, t_, Cw[q_]))(
+            pos, crd, tiles, q)                          # (P*Q, mbr*br, J)
+        partial = blocks.reshape(P, Q, blocks.shape[1],
+                                 out_shape[1]).sum(axis=1)
+        return L._scatter_rows(out_shape, partial, row_start, row_count)
+
+    args = (a["pos1"], a["crd1"], a["vals"], Cw,
+            a["row_start"], a["row_count"])
+    f = L._runner(jit, "bcsr_spmm_grid_rows", (P, Q) + out_shape, args,
+                  lambda: fn)
+    return lambda: np.asarray(f(*args))
+
+
+def _emit_bcsr_sddmm_grid(stmt, gp, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    P, Q = int(B.meta["P"]), int(B.meta["Q"])
+    br, bc = int(B.meta["br"]), int(B.meta["bc"])
+    max_brows = int(B.meta["max_brows"])
+    max_gcw = int(a["bcol_count"].max())
+    C_blk = pack_rowwindow_blocks(C.arrays["vals"], max_brows, br)
+    Dw = pack_window_mat_inner_blocks(np.asarray(D.arrays["vals"]), max_gcw,
+                                      bc)
+    total_blocks = int(Bt.levels[1].nnz or 0)
+
+    def fn(pos, crd, tiles, Cw, Dw, val_idx, nnz_count):
+        p, q = _color_axes(pos.shape[0], Q)
+
+        def leaf(pos_, crd_, t_, p_, q_):
+            brow = K.rows_from_pos(pos_, crd_.shape[0])
+            return K.leaf_bcsr_sddmm(brow, crd_, t_, Cw[p_], Dw[q_])
+
+        out = jax.vmap(leaf)(pos, crd, tiles, p, q)  # (P*Q, mt, br, bc)
+        mask = (jnp.arange(out.shape[1])[None, :]
+                < nnz_count[:, None]).astype(out.dtype)
+        idx = jnp.clip(val_idx, 0, max(total_blocks - 1, 0)).reshape(-1)
+        flat = (out * mask[:, :, None, None]).reshape((-1,) + out.shape[2:])
+        return jnp.zeros((total_blocks, br, bc), out.dtype).at[idx].add(flat)
+
+    args = (a["pos1"], a["crd1"], a["vals"], C_blk, Dw, a["val_idx"],
+            a["nnz_count"])
+    f = L._runner(jit, "bcsr_sddmm_grid_rows", (total_blocks, P, Q, br, bc),
+                  args, lambda: fn)
+
+    def run():
+        new_tiles = np.asarray(f(*args))
+        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
+                      new_tiles, Bt.dtype)
+
+    return run

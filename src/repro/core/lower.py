@@ -35,8 +35,10 @@ import numpy as np
 
 from .cache import LRUCache, avals_key
 from . import formats as fmt
-from .partition import (SHARD_CACHE_STATS, ShardedTensor, TensorPartition,
-                        block_aligned_row_bounds, clear_shard_cache,
+from .partition import (CONVERT_CACHE_STATS, SHARD_CACHE_STATS,
+                        ShardedTensor, TensorPartition,
+                        block_aligned_row_bounds, clear_convert_cache,
+                        clear_shard_cache, convert_tensor_cached,
                         fingerprint_memo, materialize_add_stream,
                         materialize_bcsr_nnz, materialize_bcsr_rows,
                         materialize_coo_nnz, materialize_csr_rows,
@@ -56,6 +58,32 @@ from ..kernels.layout import (pack_mat_inner_blocks, pack_mat_row_blocks,
 
 
 @dataclasses.dataclass
+class AxisComm:
+    """Per-machine-axis communication ledger for grid-distributed kernels.
+
+    ``broadcast_bytes`` / ``reduce_bytes`` hold the TOTAL distinct payload
+    moved along this axis (summed over the orthogonal axis's groups); each
+    payload byte reaches / leaves ``size - 1`` peers, so the wire cost is
+    ``payload * (size - 1)``. Attributing movement to the axis that carries
+    it is what makes the SUMMA win visible: a 2-D SpMM broadcasts the dense
+    operand's k-windows along x only and reduces output partials along y
+    only, strictly less than 1-D's full replication at equal piece count."""
+
+    size: int = 1
+    broadcast_bytes: int = 0
+    reduce_bytes: int = 0
+
+    def network_bytes(self) -> int:
+        return (self.broadcast_bytes + self.reduce_bytes) * \
+            max(self.size - 1, 0)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"size": self.size, "broadcast_bytes": self.broadcast_bytes,
+                "reduce_bytes": self.reduce_bytes,
+                "network_bytes": self.network_bytes()}
+
+
+@dataclasses.dataclass
 class CommStats:
     """Communication model for the lowered kernel (drives §Roofline).
 
@@ -64,27 +92,35 @@ class CommStats:
     ``reduce_bytes``: overlapping-output payload reduced after the loop
     (non-zero strategies).
     ``redistribute_bytes``: data-vs-computation distribution mismatch cost
-    (paper §II-D final paragraph — legal but costed)."""
+    (paper §II-D final paragraph — legal but costed).
+    ``axes``: per-machine-axis breakdown for grid (multi-axis) schedules —
+    bytes live EITHER in the flat fields (1-D strategies) or in ``axes``
+    (grid strategies), never both, so totals never double count."""
 
     pieces: int = 1
     replicate_bytes: int = 0
     reduce_bytes: int = 0
     redistribute_bytes: int = 0
+    axes: Dict[str, AxisComm] = dataclasses.field(default_factory=dict)
 
     def total_network_bytes(self) -> int:
         # all-gather of b bytes to P nodes moves b*(P-1); reductions likewise
         p = max(self.pieces - 1, 0)
         return (self.replicate_bytes + self.reduce_bytes) * p + \
-            self.redistribute_bytes
+            self.redistribute_bytes + \
+            sum(a.network_bytes() for a in self.axes.values())
 
     def as_dict(self) -> Dict[str, int]:
-        return {
+        out = {
             "pieces": self.pieces,
             "replicate_bytes": self.replicate_bytes,
             "reduce_bytes": self.reduce_bytes,
             "redistribute_bytes": self.redistribute_bytes,
             "total_network_bytes": self.total_network_bytes(),
         }
+        if self.axes:
+            out["axes"] = {n: a.as_dict() for n, a in self.axes.items()}
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -129,6 +165,7 @@ def clear_lowering_caches() -> None:
     _PLAN_CACHE.clear()
     _RUNNER_CACHE.clear()
     clear_shard_cache()
+    clear_convert_cache()
     import sys
     executor = sys.modules.get("repro.distributed.executor")
     if executor is not None:     # deferred: executor imports this module
@@ -147,12 +184,14 @@ class CacheStats:
     shard_misses: int = 0
     runner_hits: int = 0
     runner_misses: int = 0
+    convert_hits: int = 0
+    convert_misses: int = 0
 
     @property
     def warm(self) -> bool:
         """True when the lower re-assembled nothing (full fast path)."""
         return (self.plan_misses == 0 and self.shard_misses == 0
-                and self.runner_misses == 0)
+                and self.runner_misses == 0 and self.convert_misses == 0)
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -161,14 +200,16 @@ class CacheStats:
 def _cache_snapshot() -> Tuple[int, ...]:
     return (PLAN_CACHE_STATS["hits"], PLAN_CACHE_STATS["misses"],
             SHARD_CACHE_STATS["hits"], SHARD_CACHE_STATS["misses"],
-            RUNNER_CACHE_STATS["hits"], RUNNER_CACHE_STATS["misses"])
+            RUNNER_CACHE_STATS["hits"], RUNNER_CACHE_STATS["misses"],
+            CONVERT_CACHE_STATS["hits"], CONVERT_CACHE_STATS["misses"])
 
 
 def _cache_delta(snap: Tuple[int, ...]) -> CacheStats:
     now = _cache_snapshot()
     d = [b - a for a, b in zip(snap, now)]
     return CacheStats(plan_hits=d[0], plan_misses=d[1], shard_hits=d[2],
-                      shard_misses=d[3], runner_hits=d[4], runner_misses=d[5])
+                      shard_misses=d[3], runner_hits=d[4], runner_misses=d[5],
+                      convert_hits=d[6], convert_misses=d[7])
 
 
 @dataclasses.dataclass
@@ -358,7 +399,7 @@ def _normalize_operands(
             "no direct %s/%s kernel for %s stored as %s; converting to %s "
             "(conformance cell falls back)",
             kernel_name, space, t.name, t.format, target)
-        mapping[t.name] = t.to_format(target)
+        mapping[t.name] = convert_tensor_cached(t, target)
     return stmt.with_tensors(mapping), fallbacks, declared
 
 
@@ -401,6 +442,20 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
 
     # Format dispatch: convert operands with no direct kernel (logged).
     stmt, fallbacks, declared_formats = _normalize_operands(stmt, strat.space)
+
+    # Multi-axis (grid) universe schedules route to the grid subsystem:
+    # cross-product tile plans, per-axis communication, SUMMA-style
+    # emitters. Grid NON-ZERO schedules fall through — a nested pos-split
+    # canonicalizes to the flat equal split of the fused position space
+    # (pieces = P*Q), so the 1-D nnz machinery lowers them bit-for-bit
+    # identically; only the communication attribution (below) and the SPMD
+    # mesh shape differ.
+    if strat.is_grid and strat.space == "universe":
+        from . import grid as grid_mod
+        return grid_mod.lower_grid(stmt, machine, strat, jit=jit,
+                                   fallbacks=fallbacks,
+                                   declared_formats=declared_formats,
+                                   snap=snap, distributions=distributions)
 
     out_t: Tensor = stmt.lhs.tensor
     shards: Dict[str, ShardedTensor] = {}
@@ -509,6 +564,28 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
                    - ov.root_coord_bounds[:, 0].min())
             ) * 4
 
+    # Grid nnz schedules: re-attribute the flat replicate/reduce payload to
+    # the machine axes under the hierarchical collective model (broadcast:
+    # along x once, then along y within each of the P grid rows; reduce in
+    # reverse) — totals are unchanged (b*(PQ-1)), the per-axis ledger is
+    # what the comm-volume benches and the SPMD psum scoping read.
+    if strat.is_grid:
+        if len(strat.machine_dims) != 2:
+            raise NotImplementedError(
+                f"grid distribution supports exactly 2 machine dimensions, "
+                f"got {len(strat.machine_dims)}")
+        dx, dy = strat.machine_dims[0], strat.machine_dims[1]
+        comm.axes = {
+            dx.name: AxisComm(size=dx.size,
+                              broadcast_bytes=comm.replicate_bytes,
+                              reduce_bytes=comm.reduce_bytes),
+            dy.name: AxisComm(size=dy.size,
+                              broadcast_bytes=dx.size * comm.replicate_bytes,
+                              reduce_bytes=dx.size * comm.reduce_bytes),
+        }
+        comm.replicate_bytes = 0
+        comm.reduce_bytes = 0
+
     # ---- emit: pick leaf + build runner ------------------------------------
     leaf_name, runner = _emit(stmt, strat, plans, shards, jit=jit)
     return LoweredKernel(
@@ -531,7 +608,9 @@ def _plan_cache_key(stmt: Assignment, strat: DistStrategy,
             return None
         ops.append((t.name, tensor_fingerprint(t),
                     tuple(v.name for v in acc.idx)))
-    return (stmt.signature(), strat.space, strat.var.name, strat.pieces,
+    return (stmt.signature(), strat.space,
+            tuple(v.name for v in strat.vars),
+            tuple(d.size for d in strat.machine_dims),
             weights_fingerprint(weights), tuple(ops))
 
 
@@ -669,6 +748,50 @@ def default_nnz_schedule(stmt: Assignment, machine: Machine) -> Schedule:
         f = nf
     fo, fi = IndexVar(f"{f.name}o"), IndexVar(f"{f.name}i")
     s.pos_split(f, fo, fi, machine.dims[0]).distribute(fo)
+    s.communicate(stmt.tensors(), fo)
+    return s
+
+
+def default_grid_schedule(stmt: Assignment, machine: Machine) -> Schedule:
+    """2-D universe schedule — the paper's ``distribute((i, k) → (x, y))``:
+    divide the sparse operand's two index variables over the machine's two
+    dimensions and distribute both, tiling the operand onto the processor
+    grid (SUMMA-style for SpMM/SpMV, owner-computes tiles for SDDMM)."""
+    spa = stmt.sparse_accesses()[0]
+    if len(spa.idx) < 2 or len(machine.dims) < 2:
+        raise ValueError("grid schedule needs a 2-D sparse operand and a "
+                         "2-D machine")
+    i, k2 = spa.idx[0], spa.idx[1]
+    io, ii = IndexVar(f"{i.name}o"), IndexVar(f"{i.name}i")
+    ko, ki = IndexVar(f"{k2.name}o"), IndexVar(f"{k2.name}i")
+    s = Schedule(stmt, machine)
+    s.divide(i, io, ii, machine.dims[0])
+    s.divide(k2, ko, ki, machine.dims[1])
+    s.distribute(io, ko)
+    s.communicate(stmt.tensors(), io)
+    return s
+
+
+def default_grid_nnz_schedule(stmt: Assignment, machine: Machine) -> Schedule:
+    """2-D non-zero schedule: fuse the sparse loops, then NEST the position
+    split over both machine dimensions — color (p, q) owns block p*Q+q of
+    the fused non-zero stream (canonically equal to the flat P*Q split, so
+    2-D nnz cells are bit-for-bit their Px1 counterparts)."""
+    if len(machine.dims) < 2:
+        raise ValueError("grid nnz schedule needs a 2-D machine")
+    spa = stmt.sparse_accesses()[0]
+    s = Schedule(stmt, machine)
+    vs = list(spa.idx)
+    f = vs[0]
+    for v in vs[1:]:
+        nf = IndexVar(f"{f.name}{v.name}")
+        s.fuse(f, v, nf)
+        f = nf
+    fo, fi = IndexVar(f"{f.name}o"), IndexVar(f"{f.name}i")
+    s.pos_split(f, fo, fi, machine.dims[0])
+    fio, fii = IndexVar(f"{fi.name}o"), IndexVar(f"{fi.name}i")
+    s.pos_split(fi, fio, fii, machine.dims[1])
+    s.distribute(fo, fio)
     s.communicate(stmt.tensors(), fo)
     return s
 
@@ -1358,3 +1481,29 @@ def _emit_generic_fallback(stmt, strat, plans, shards, jit=True):
         return interpret(stmt)
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Back-compat: `repro.core` used to re-export the `lower` FUNCTION under the
+# package attribute `lower`, shadowing this submodule (`import
+# repro.core.lower as L` returned the function). The package attribute is
+# the submodule again (the function is `repro.core.lower_stmt`); making the
+# module itself callable keeps old `rc.lower(stmt, ...)` call sites working
+# through a DeprecationWarning instead of a bare TypeError.
+# ---------------------------------------------------------------------------
+
+import sys
+import types
+
+
+class _CallableModule(types.ModuleType):
+    def __call__(self, *args, **kwargs):
+        import warnings
+        warnings.warn(
+            "calling repro.core.lower as a function is deprecated; use "
+            "repro.core.lower_stmt (or repro.core.lower.lower)",
+            DeprecationWarning, stacklevel=2)
+        return lower(*args, **kwargs)
+
+
+sys.modules[__name__].__class__ = _CallableModule

@@ -148,6 +148,10 @@ class TensorPartition:
     # Bounds over the *root coordinate space* (output-row ownership etc.).
     root_coord_bounds: Optional[Bounds] = None
     overlapping_root: bool = False  # preimage-derived roots may overlap
+    # (P, Q) when this is a 2-D grid tile partition: colors are row-major
+    # over the P×Q cross product of levels[0] row windows × levels[1]
+    # column windows (core/grid.py). None for all 1-D partitions.
+    grid: Optional[Tuple[int, int]] = None
 
     def max_counts(self) -> Dict[str, int]:
         out = {}
@@ -397,6 +401,48 @@ def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
     )
 
 
+def partition_tensor_grid(tensor: Tensor, row_bounds: Bounds,
+                          col_bounds: Bounds) -> TensorPartition:
+    """2-D cross-product tile partition: color ``(p, q)`` (row-major flat
+    color ``p*Q + q``) owns the row window ``row_bounds[p]`` × column
+    window ``col_bounds[q]`` of the tensor — the machine-grid tiling of
+    paper Fig. 4c lifted to sparse coordinate trees (core/grid.py plans
+    the per-axis communication these tiles imply).
+
+    Unlike the 1-D partitions, a tile is NOT a contiguous interval of the
+    value space, so ``vals_bounds`` stays None; the grid materializers
+    (``materialize_csr_grid`` / ``materialize_bcsr_grid``) carry per-tile
+    global position indices instead. Blocked tensors interpret the (row,
+    col) windows at block granularity — the caller must pass block-aligned
+    bounds (``block_aligned_row_bounds``) so windows realize as whole
+    blocks."""
+    P, Q = row_bounds.shape[0], col_bounds.shape[0]
+    levels = [LevelPartition(coord_bounds=row_bounds.copy()),
+              LevelPartition(coord_bounds=col_bounds.copy())]
+    return TensorPartition(
+        tensor=tensor, pieces=P * Q, levels=levels,
+        vals_bounds=None, root_coord_bounds=row_bounds.copy(),
+        overlapping_root=False, grid=(P, Q),
+    )
+
+
+def partition_tensor_cols(tensor: Tensor, col_bounds: Bounds,
+                          ) -> TensorPartition:
+    """Column partition of a DENSE tensor (dim 1 sliced into windows) —
+    the co-operand plan for grid-distributed computations whose second
+    loop variable indexes the operand's trailing dimension (e.g. D(k, j)
+    under an (i, j) grid)."""
+    if not tensor.format.is_all_dense:
+        raise ValueError("column partition is dense-only; sparse operands "
+                         "take grid tiles or replication")
+    levels = [LevelPartition(),
+              LevelPartition(coord_bounds=col_bounds.copy())]
+    return TensorPartition(
+        tensor=tensor, pieces=col_bounds.shape[0], levels=levels,
+        vals_bounds=None, root_coord_bounds=None,
+    )
+
+
 def replicate_tensor(tensor: Tensor, pieces: int) -> TensorPartition:
     """Every color sees the whole tensor (TDN replication, paper Fig. 1
     ``ReplDense``)."""
@@ -519,13 +565,15 @@ def _crc_arrays(h: int, *arrays: Optional[np.ndarray]) -> int:
 def partition_fingerprint(part: TensorPartition) -> Tuple:
     """Hashable summary of a partition's interval structure; together with
     ``Tensor.fingerprint()`` it keys a shard materialization — weighted
-    (straggler) re-plans change the bounds and therefore the key."""
+    (straggler) re-plans change the bounds and therefore the key. Grid
+    partitions fold in their (P, Q) shape so a 2×4 and a 4×2 tiling of the
+    same windows key distinct shard sets."""
     h = 0
     for lp in part.levels:
         h = zlib.crc32(b"R" if lp.replicated else b"L", h)
         h = _crc_arrays(h, lp.coord_bounds, lp.pos_bounds)
     h = _crc_arrays(h, part.vals_bounds, part.root_coord_bounds)
-    return (part.pieces, part.replicated, part.overlapping_root, h)
+    return (part.pieces, part.replicated, part.overlapping_root, part.grid, h)
 
 
 def _cached_shards(key: Tuple, build: Callable[[], ShardedTensor],
@@ -875,6 +923,217 @@ def _materialize_bcsr_nnz_impl(tensor: Tensor, part: TensorPartition,
                 max_bnnz=max_bnnz, root_dim=0)
     return ShardedTensor(kind="bcsr_nnz", pieces=pieces, arrays=arrays,
                          meta=meta, partition=part)
+
+
+# ---------------------------------------------------------------------------
+# 2-D grid materializers: cross-product row×col tiles for the grid
+# distribution subsystem (core/grid.py). Each tile is a CSR-convention
+# shard over its row window with COLUMN-LOCAL coordinates (rebased to the
+# tile's column window) plus the global value positions of its entries —
+# tiles are non-contiguous in the value space, so assembly scatters by
+# index instead of by interval.
+# ---------------------------------------------------------------------------
+
+def materialize_csr_grid(tensor: Tensor, part: TensorPartition,
+                         ) -> ShardedTensor:
+    key = ("csr_grid", tensor_fingerprint(tensor),
+           partition_fingerprint(part))
+    return _cached_shards(
+        key, lambda: _materialize_csr_grid_impl(tensor, part), partition=part)
+
+
+def _materialize_csr_grid_impl(tensor: Tensor, part: TensorPartition,
+                               ) -> ShardedTensor:
+    """Row×col tile shards of any row-major sparse matrix.
+
+    Built from the coordinate stream (storage order is (row, col)
+    lexicographic for every row-partitionable 2-D format, so the per-tile
+    entry order is CSR order for free). Per tile: ``pos1`` walks the tile's
+    row window, ``crd1`` holds column-LOCAL coordinates, ``val_idx`` the
+    global value positions (the scatter map for pattern-preserving
+    outputs). Colors are row-major: flat color = p*Q + q."""
+    P, Q = part.grid
+    rb = part.levels[0].coord_bounds            # (P, 2) row windows
+    cb = part.levels[1].coord_bounds            # (Q, 2) col windows
+    coords = tensor.coords().astype(np.int64)   # (nnz, 2), vals-aligned
+    r, c = coords[:, 0], coords[:, 1]
+    cmasks = [(c >= int(cb[q, 0])) & (c < int(cb[q, 1])) for q in range(Q)]
+    tiles = []
+    for p in range(P):
+        rlo, rhi = int(rb[p, 0]), int(rb[p, 1])
+        rmask = (r >= rlo) & (r < rhi)
+        for q in range(Q):
+            tiles.append(np.nonzero(rmask & cmasks[q])[0])
+    max_rows = int((rb[:, 1] - rb[:, 0]).max())
+    max_tnnz = max((int(t.shape[0]) for t in tiles), default=0)
+    pos_shards = np.zeros((P * Q, max_rows + 1), dtype=INT)
+    crd_shards = np.zeros((P * Q, max_tnnz), dtype=INT)
+    val_idx = np.zeros((P * Q, max_tnnz), dtype=INT)
+    vals_shards = np.zeros((P * Q, max_tnnz), dtype=tensor.vals.dtype)
+    nnz_count = np.zeros((P * Q,), dtype=INT)
+    for color, idx in enumerate(tiles):
+        p, q = divmod(color, Q)
+        rlo, rhi = int(rb[p, 0]), int(rb[p, 1])
+        clo = int(cb[q, 0])
+        k = idx.shape[0]
+        counts = np.zeros(max_rows, dtype=np.int64)
+        if k:
+            np.add.at(counts, r[idx] - rlo, 1)
+        pos = np.zeros(max_rows + 1, dtype=np.int64)
+        np.cumsum(counts, out=pos[1:])
+        pos[rhi - rlo + 1:] = pos[rhi - rlo]    # padded rows stay empty
+        pos_shards[color] = pos.astype(INT)
+        crd_shards[color, :k] = c[idx] - clo
+        val_idx[color, :k] = idx
+        vals_shards[color, :k] = tensor.vals[idx]
+        nnz_count[color] = k
+    arrays = {
+        "pos1": pos_shards, "crd1": crd_shards, "vals": vals_shards,
+        "val_idx": val_idx, "nnz_count": nnz_count,
+        "row_start": rb[:, 0].astype(INT),
+        "row_count": (rb[:, 1] - rb[:, 0]).astype(INT),
+        "col_start": cb[:, 0].astype(INT),
+        "col_count": (cb[:, 1] - cb[:, 0]).astype(INT),
+    }
+    meta = {"P": P, "Q": Q, "max_rows": max_rows, "max_tnnz": max_tnnz,
+            "n_rows": tensor.shape[0], "n_cols": tensor.shape[1]}
+    return ShardedTensor(kind="csr_grid", pieces=P * Q, arrays=arrays,
+                         meta=meta, partition=part)
+
+
+def materialize_bcsr_grid(tensor: Tensor, part: TensorPartition,
+                          ) -> ShardedTensor:
+    key = ("bcsr_grid", tensor_fingerprint(tensor),
+           partition_fingerprint(part))
+    return _cached_shards(
+        key, lambda: _materialize_bcsr_grid_impl(tensor, part),
+        partition=part)
+
+
+def _materialize_bcsr_grid_impl(tensor: Tensor, part: TensorPartition,
+                                ) -> ShardedTensor:
+    """Blocked row×col tile shards: the CSR grid convention lifted to the
+    block grid — windows are block-aligned (the planner guarantees it), so
+    each tile owns whole (br, bc) value tiles; ``crd1`` holds block-col
+    coordinates LOCAL to the tile's block-column window and ``val_idx``
+    the global stored-block positions."""
+    P, Q = part.grid
+    br, bc = tensor.format.block_shape
+    rb = part.levels[0].coord_bounds            # (P, 2) ROW windows
+    cb = part.levels[1].coord_bounds            # (Q, 2) COL windows
+    brb = np.stack([rb[:, 0] // br, -(-rb[:, 1] // br)], axis=1)
+    bcb = np.stack([cb[:, 0] // bc, -(-cb[:, 1] // bc)], axis=1)
+    bcoords = tensor.block_coords().astype(np.int64)   # (nb, 2), tile-aligned
+    rblk, cblk = bcoords[:, 0], bcoords[:, 1]
+    cmasks = [(cblk >= bcb[q, 0]) & (cblk < bcb[q, 1]) for q in range(Q)]
+    tiles = []
+    for p in range(P):
+        rmask = (rblk >= brb[p, 0]) & (rblk < brb[p, 1])
+        for q in range(Q):
+            tiles.append(np.nonzero(rmask & cmasks[q])[0])
+    max_brows = int((brb[:, 1] - brb[:, 0]).max())
+    max_tbnnz = max((int(t.shape[0]) for t in tiles), default=0)
+    pos_shards = np.zeros((P * Q, max_brows + 1), dtype=INT)
+    crd_shards = np.zeros((P * Q, max_tbnnz), dtype=INT)
+    val_idx = np.zeros((P * Q, max_tbnnz), dtype=INT)
+    vals_shards = np.zeros((P * Q, max_tbnnz, br, bc),
+                           dtype=tensor.vals.dtype)
+    nnz_count = np.zeros((P * Q,), dtype=INT)
+    for color, idx in enumerate(tiles):
+        p, q = divmod(color, Q)
+        blo, bhi = int(brb[p, 0]), int(brb[p, 1])
+        k = idx.shape[0]
+        counts = np.zeros(max_brows, dtype=np.int64)
+        if k:
+            np.add.at(counts, rblk[idx] - blo, 1)
+        pos = np.zeros(max_brows + 1, dtype=np.int64)
+        np.cumsum(counts, out=pos[1:])
+        pos[bhi - blo + 1:] = pos[bhi - blo]
+        pos_shards[color] = pos.astype(INT)
+        crd_shards[color, :k] = cblk[idx] - int(bcb[q, 0])
+        val_idx[color, :k] = idx
+        vals_shards[color, :k] = tensor.vals[idx]
+        nnz_count[color] = k
+    arrays = {
+        "pos1": pos_shards, "crd1": crd_shards, "vals": vals_shards,
+        "val_idx": val_idx, "nnz_count": nnz_count,
+        "row_start": rb[:, 0].astype(INT),
+        "row_count": (rb[:, 1] - rb[:, 0]).astype(INT),
+        "col_start": cb[:, 0].astype(INT),
+        "col_count": (cb[:, 1] - cb[:, 0]).astype(INT),
+        "brow_start": brb[:, 0].astype(INT),
+        "bcol_start": bcb[:, 0].astype(INT),
+        "bcol_count": (bcb[:, 1] - bcb[:, 0]).astype(INT),
+    }
+    meta = dict(_blocked_meta(tensor), P=P, Q=Q, max_brows=max_brows,
+                max_tbnnz=max_tbnnz,
+                max_rows=int((rb[:, 1] - rb[:, 0]).max()))
+    return ShardedTensor(kind="bcsr_grid", pieces=P * Q, arrays=arrays,
+                         meta=meta, partition=part)
+
+
+def materialize_dense_cols(tensor: Tensor, bounds: Bounds) -> ShardedTensor:
+    """Dense tensor sliced into column windows along dim 1 (the grid
+    co-operand whose indexing variable rides the second machine axis)."""
+    tp = partition_tensor_cols(tensor, bounds)
+    key = ("dense_cols", tensor_fingerprint(tensor), _crc_arrays(0, bounds))
+    return _cached_shards(
+        key, lambda: _materialize_dense_cols_impl(tensor, bounds, tp),
+        partition=tp)
+
+
+def _materialize_dense_cols_impl(tensor: Tensor, bounds: Bounds,
+                                 tp: TensorPartition) -> ShardedTensor:
+    dense = tensor.to_dense()
+    pieces = bounds.shape[0]
+    counts = bounds[:, 1] - bounds[:, 0]
+    max_cols = int(counts.max())
+    shards = np.zeros((pieces, dense.shape[0], max_cols) + dense.shape[2:],
+                      dtype=dense.dtype)
+    for p in range(pieces):
+        lo, hi = int(bounds[p, 0]), int(bounds[p, 1])
+        shards[p, :, : hi - lo] = dense[:, lo:hi]
+    return ShardedTensor(
+        kind="dense_cols", pieces=pieces,
+        arrays={"vals": shards,
+                "col_start": bounds[:, 0].astype(INT),
+                "col_count": counts.astype(INT)},
+        meta={"max_cols": max_cols, "n_cols": dense.shape[1]},
+        partition=tp,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Converted-tensor cache: `Tensor.to_format` results keyed by (content
+# fingerprint, target format key) in a bounded LRU alongside SHARD_CACHE.
+# Fallback conformance cells (csc/coo3 → CSR/CSF) pay the O(nnz) conversion
+# walk once; warm re-lowers reuse the converted tensor outright (the
+# converted tensor's own fingerprint then keys the shard/plan caches as
+# usual). Hits/misses surface per-lower in CacheStats.
+# ---------------------------------------------------------------------------
+
+CONVERT_CACHE = LRUCache(capacity=32)
+CONVERT_CACHE_STATS = CONVERT_CACHE.stats
+
+
+def set_convert_cache_capacity(capacity: int) -> None:
+    CONVERT_CACHE.set_capacity(capacity)
+
+
+def clear_convert_cache() -> None:
+    CONVERT_CACHE.clear()
+
+
+def convert_tensor_cached(tensor: Tensor, target: "fmt.Format") -> Tensor:
+    """``tensor.to_format(target)`` through the bounded conversion cache."""
+    key = ("convert", tensor_fingerprint(tensor), fmt.format_key(target),
+           getattr(target, "block_shape", None))
+    hit = CONVERT_CACHE.get(key)
+    if hit is not None:
+        return hit
+    out = tensor.to_format(target)
+    CONVERT_CACHE.put(key, out)
+    return out
 
 
 # ---------------------------------------------------------------------------

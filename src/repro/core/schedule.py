@@ -50,11 +50,15 @@ class DistStrategy:
 
     ``space`` is 'universe' (coordinate-value distributed loop → universe
     partitions) or 'nnz' (coordinate-position loop → non-zero partitions),
-    paper §IV-C. ``var`` is the pre-divide loop variable being distributed
-    (the fused variable for nnz strategies)."""
+    paper §IV-C. ``vars`` are the pre-divide loop variables being
+    distributed, one per machine dimension — a single entry is the classic
+    1-D distribution; two entries map onto a 2-D processor grid (paper
+    `distribute((i, k) → (x, y))`, the SUMMA-style tilings of §VI). For
+    nnz strategies the first entry is the fused variable and later entries
+    are the successive inner split variables of the nested pos-split."""
 
     space: str                      # 'universe' | 'nnz'
-    var: IndexVar                   # distributed index variable (outer)
+    vars: Tuple[IndexVar, ...]      # distributed index variables (outer)
     machine_dims: Tuple[MachineDim, ...]
     fused_vars: Optional[Tuple[IndexVar, ...]] = None   # for nnz via fusion
     communicate_at: Dict[str, str] = dataclasses.field(default_factory=dict)
@@ -64,11 +68,31 @@ class DistStrategy:
     # redistribution collective and charges its bytes).
 
     @property
+    def var(self) -> IndexVar:
+        """First (row-axis) distributed variable — the whole strategy for
+        1-D schedules; kept for the single-axis call sites."""
+        return self.vars[0]
+
+    @property
     def pieces(self) -> int:
         p = 1
         for d in self.machine_dims:
             p *= d.size
         return p
+
+    @property
+    def is_grid(self) -> bool:
+        """True when the schedule distributes over a multi-dim machine
+        grid (len(vars) > 1) — lowering routes to the grid subsystem."""
+        return len(self.vars) > 1
+
+    @property
+    def grid_shape(self) -> Tuple[int, int]:
+        """(P, Q) of the processor grid (Q = 1 for 1-D strategies)."""
+        sizes = [d.size for d in self.machine_dims]
+        while len(sizes) < 2:
+            sizes.append(1)
+        return tuple(sizes[:2])
 
     @property
     def space_label(self) -> str:
@@ -181,7 +205,7 @@ class Schedule:
             fused = (var,)
         return DistStrategy(
             space=space,
-            var=var,
+            vars=tuple(outer_vars),
             machine_dims=tuple(mdims),
             fused_vars=fused,
             communicate_at=dict(self._communicate),

@@ -516,6 +516,196 @@ def bcsr_sddmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     return call
 
 
+# ---------------------------------------------------------------------------
+# 2-D grid builders — the SUMMA-style executors over a genuine
+# Mesh((P, Q), ("x", "y")). The flat-color shard arrays reshape to
+# (P, Q, ...) and shard over both axes; the dense co-operand windows shard
+# over ONE axis (broadcast along the other falls out of the spec), and the
+# contraction reduction is a psum scoped to the y axis only.
+# ---------------------------------------------------------------------------
+
+def _grid_axes(mesh: Mesh) -> tuple:
+    if len(mesh.axis_names) != 2:
+        raise ValueError(f"grid executor needs a 2-D mesh, got "
+                         f"{mesh.axis_names}")
+    return mesh.axis_names[0], mesh.axis_names[1]
+
+
+def _grid_reshape(a: np.ndarray, P: int, Q: int) -> np.ndarray:
+    return np.asarray(a).reshape((P, Q) + a.shape[1:])
+
+
+def spmm_grid_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """2-D SpMM: tile (p, q) multiplies its B tile against C's q-th
+    k-window (broadcast along x by the in_spec) and the grid row psums its
+    partials along y ONLY — the SUMMA reduction."""
+    ax, ay = _grid_axes(mesh)
+    Bacc, Cacc = kernel.stmt.rhs.accesses()
+    B = kernel.shards[Bacc.tensor.name]
+    C = kernel.shards[Cacc.tensor.name]
+    n, J = kernel.stmt.lhs.tensor.shape
+    a = B.arrays
+    P_, Q_ = int(B.meta["P"]), int(B.meta["Q"])
+    pos = _grid_reshape(a["pos1"], P_, Q_)
+    crd = _grid_reshape(a["crd1"], P_, Q_)
+    vals = _grid_reshape(a["vals"], P_, Q_)
+    Cw = C.arrays["vals"]                       # (Q, max_kw, J)
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(ax, ay), P(ax, ay), P(ax, ay), P(ay)),
+            out_specs=P(ax))
+        def run(pos, crd, vals, Cw):
+            y = K.leaf_spmm_rows(pos[0, 0], crd[0, 0], vals[0, 0], Cw[0])
+            return jax.lax.psum(y, axis_name=ay)[None]
+        return run
+
+    run = _spmd_runner("spmm_grid_rows", mesh, (ax, ay), (),
+                       (pos, crd, vals, Cw), build)
+
+    def call():
+        yb = np.asarray(run(jnp.asarray(pos), jnp.asarray(crd),
+                            jnp.asarray(vals), jnp.asarray(Cw)))
+        out = np.zeros((n, J), np.float32)
+        rs, cnt = np.asarray(a["row_start"]), np.asarray(a["row_count"])
+        for p in range(yb.shape[0]):
+            out[rs[p]: rs[p] + cnt[p]] = yb[p, : cnt[p]]
+        return out
+
+    return call
+
+
+def spmv_grid_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    ax, ay = _grid_axes(mesh)
+    B = kernel.shards[kernel.stmt.rhs.accesses()[0].tensor.name]
+    c = kernel.shards[kernel.stmt.rhs.accesses()[1].tensor.name]
+    n = kernel.stmt.lhs.tensor.shape[0]
+    a = B.arrays
+    P_, Q_ = int(B.meta["P"]), int(B.meta["Q"])
+    pos = _grid_reshape(a["pos1"], P_, Q_)
+    crd = _grid_reshape(a["crd1"], P_, Q_)
+    vals = _grid_reshape(a["vals"], P_, Q_)
+    cw = c.arrays["vals"]                       # (Q, max_kw)
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(ax, ay), P(ax, ay), P(ax, ay), P(ay)),
+            out_specs=P(ax))
+        def run(pos, crd, vals, cw):
+            y = K.leaf_spmv_rows(pos[0, 0], crd[0, 0], vals[0, 0], cw[0])
+            return jax.lax.psum(y, axis_name=ay)[None]
+        return run
+
+    run = _spmd_runner("spmv_grid_rows", mesh, (ax, ay), (),
+                       (pos, crd, vals, cw), build)
+
+    def call():
+        yb = np.asarray(run(jnp.asarray(pos), jnp.asarray(crd),
+                            jnp.asarray(vals), jnp.asarray(cw)))
+        out = np.zeros(n, np.float32)
+        rs, cnt = np.asarray(a["row_start"]), np.asarray(a["row_count"])
+        for p in range(yb.shape[0]):
+            out[rs[p]: rs[p] + cnt[p]] = yb[p, : cnt[p]]
+        return out
+
+    return call
+
+
+def sddmm_grid_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """2-D SDDMM: owner-computes tiles — C row windows shard along x, D
+    column windows along y, outputs stay tile-aligned (NO psum on either
+    axis); host assembly scatters by the tiles' global value positions."""
+    ax, ay = _grid_axes(mesh)
+    accs = kernel.stmt.rhs.accesses()
+    B = kernel.shards[accs[0].tensor.name]
+    C = kernel.shards[accs[1].tensor.name]
+    D = kernel.shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    P_, Q_ = int(B.meta["P"]), int(B.meta["Q"])
+    pos = _grid_reshape(a["pos1"], P_, Q_)
+    crd = _grid_reshape(a["crd1"], P_, Q_)
+    vals = _grid_reshape(a["vals"], P_, Q_)
+    Cw = C.arrays["vals"]                       # (P, max_rw, K)
+    Dw = D.arrays["vals"]                       # (Q, K, max_mw)
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(ax, ay), P(ax, ay), P(ax, ay), P(ax), P(ay)),
+            out_specs=P(ax, ay))
+        def run(pos, crd, vals, Cw, Dw):
+            out = K.leaf_sddmm_rows(pos[0, 0], crd[0, 0], vals[0, 0],
+                                    Cw[0], Dw[0])
+            return out[None, None]
+        return run
+
+    run = _spmd_runner("sddmm_grid_rows", mesh, (ax, ay), (),
+                       (pos, crd, vals, Cw, Dw), build)
+
+    def call():
+        out_vals = np.asarray(run(
+            jnp.asarray(pos), jnp.asarray(crd), jnp.asarray(vals),
+            jnp.asarray(Cw), jnp.asarray(Dw)))    # (P, Q, max_tnnz)
+        flat = np.zeros(Bt.nnz, np.float32)
+        vi = np.asarray(a["val_idx"]).reshape(P_, Q_, -1)
+        cnt = np.asarray(a["nnz_count"]).reshape(P_, Q_)
+        for p in range(P_):
+            for q in range(Q_):
+                k = int(cnt[p, q])
+                flat[vi[p, q, :k]] = out_vals[p, q, :k]
+        return flat
+
+    return call
+
+
+def bcsr_spmm_grid_rows_spmd(kernel: LoweredKernel, mesh: Mesh,
+                             axis: str = "x"):
+    """Blocked 2-D SpMM: (br, bc) tile matmuls against the q-th window of
+    the block-packed dense operand, psum along y."""
+    ax, ay = _grid_axes(mesh)
+    Bacc, Cacc = kernel.stmt.rhs.accesses()
+    B = kernel.shards[Bacc.tensor.name]
+    C = kernel.shards[Cacc.tensor.name]
+    n, J = kernel.stmt.lhs.tensor.shape
+    a = B.arrays
+    P_, Q_ = int(B.meta["P"]), int(B.meta["Q"])
+    pos = _grid_reshape(a["pos1"], P_, Q_)
+    crd = _grid_reshape(a["crd1"], P_, Q_)
+    vals = _grid_reshape(a["vals"], P_, Q_)
+    from ..core.grid import pack_window_mat_row_blocks
+    Cw = pack_window_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                    int(a["bcol_count"].max()),
+                                    int(B.meta["bc"]))
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(ax, ay), P(ax, ay), P(ax, ay), P(ay)),
+            out_specs=P(ax))
+        def run(pos, crd, tiles, Cw):
+            y = K.leaf_bcsr_spmm_rows(pos[0, 0], crd[0, 0], tiles[0, 0],
+                                      Cw[0])
+            return jax.lax.psum(y, axis_name=ay)[None]
+        return run
+
+    run = _spmd_runner("bcsr_spmm_grid_rows", mesh, (ax, ay), (),
+                       (pos, crd, vals, Cw), build)
+
+    def call():
+        yb = np.asarray(run(jnp.asarray(pos), jnp.asarray(crd),
+                            jnp.asarray(vals), jnp.asarray(Cw)))
+        out = np.zeros((n, J), np.float32)
+        rs, cnt = np.asarray(a["row_start"]), np.asarray(a["row_count"])
+        for p in range(yb.shape[0]):
+            out[rs[p]: rs[p] + cnt[p]] = yb[p, : cnt[p]]
+        return out
+
+    return call
+
+
 SPMD_BUILDERS: Dict[str, Callable] = {
     "spmv_rows": spmv_rows_spmd,
     "spmv_nnz": spmv_nnz_spmd,
@@ -529,13 +719,25 @@ SPMD_BUILDERS: Dict[str, Callable] = {
     "bcsr_spmm_nnz": bcsr_spmm_nnz_spmd,
     "bcsr_sddmm_rows": bcsr_sddmm_rows_spmd,
     "bcsr_sddmm_nnz": bcsr_sddmm_nnz_spmd,
+    "spmv_grid_rows": spmv_grid_rows_spmd,
+    "spmm_grid_rows": spmm_grid_rows_spmd,
+    "sddmm_grid_rows": sddmm_grid_rows_spmd,
+    "bcsr_spmm_grid_rows": bcsr_spmm_grid_rows_spmd,
 }
 
 
 def to_spmd(kernel: LoweredKernel, mesh: Mesh = None, axis: str = "x"):
-    """SPMD executor for a lowered kernel, when a builder exists."""
+    """SPMD executor for a lowered kernel, when a builder exists.
+
+    Grid (multi-axis) NON-ZERO kernels reuse their 1-D builders with the
+    flat color axis sharded over BOTH mesh axes and the reduction psum
+    scoped to both — the nested pos-split is the flat P*Q split."""
     if mesh is None:
         mesh = machine_to_mesh(kernel.machine)
+    strat = kernel.strategy
+    if getattr(strat, "is_grid", False) and strat.space == "nnz" \
+            and len(mesh.axis_names) == 2:
+        axis = tuple(mesh.axis_names)
     builder = SPMD_BUILDERS.get(kernel.leaf_name)
     if builder is None:
         raise NotImplementedError(

@@ -41,7 +41,9 @@ import pytest
 import repro.core as rc
 from repro.core import formats as F
 from repro.core.interp import interpret
-from repro.core.lower import default_nnz_schedule, default_row_schedule, lower
+from repro.core.lower import (default_grid_nnz_schedule,
+                              default_grid_schedule, default_nnz_schedule,
+                              default_row_schedule, lower)
 from repro.core.tensor import Tensor
 
 # cell_id -> {"status": "direct"|"fallback", "fallbacks": [...]}
@@ -63,6 +65,15 @@ EXPRESSIONS_2D = ["spmv", "spmm", "sddmm", "spadd3"]
 EXPRESSIONS_3D = ["spmttkrp"]
 STRATEGIES = ["rows", "nnz"]
 PIECES = [2, 4]
+
+# 2-D machine-grid cells (the multi-axis distribution subsystem,
+# core/grid.py): rows = SUMMA-style row×col tiles with per-axis
+# communication, nnz = nested pos-split (flat P*Q chunks). Only the
+# grid-distributable expressions and the formats with direct grid
+# materializers join this column.
+GRID_EXPRESSIONS = ["spmv", "spmm", "sddmm"]
+GRID_FORMATS = [("csr", F.CSR), ("bcsr", lambda: F.BCSR((2, 2)))]
+GRID_MESHES = [(2, 2), (4, 2)]
 
 
 def _sparse_2d(rng, n, m, density=0.25):
@@ -127,14 +138,21 @@ def _build_stmt(expr, fm, rng, empty=False):
 
 
 def _check_cell(expr, fmt_name, fmt_ctor, strategy, pieces, empty=False,
-                caplog=None):
-    # deterministic per-cell seed (str hash is process-randomized)
-    cell_tag = f"{expr}/{fmt_name}/{strategy}/{pieces}/{empty}"
+                caplog=None, mesh=None):
+    # deterministic per-cell seed (str hash is process-randomized);
+    # ``mesh=(P, Q)`` selects a 2-D machine grid + the grid schedules
+    mesh_tag = pieces if mesh is None else f"{mesh[0]}x{mesh[1]}"
+    cell_tag = f"{expr}/{fmt_name}/{strategy}/{mesh_tag}/{empty}"
     rng = np.random.default_rng(zlib.crc32(cell_tag.encode()))
     stmt = _build_stmt(expr, fmt_ctor(), rng, empty=empty)
-    machine = rc.Machine(("x", pieces))
-    sched = (default_row_schedule(stmt, machine) if strategy == "rows"
-             else default_nnz_schedule(stmt, machine))
+    if mesh is not None:
+        machine = rc.Machine(("x", mesh[0]), ("y", mesh[1]))
+        sched = (default_grid_schedule(stmt, machine) if strategy == "rows"
+                 else default_grid_nnz_schedule(stmt, machine))
+    else:
+        machine = rc.Machine(("x", pieces))
+        sched = (default_row_schedule(stmt, machine) if strategy == "rows"
+                 else default_nnz_schedule(stmt, machine))
     with caplog.at_level(logging.WARNING, logger="repro.lower"):
         kernel = lower(stmt, machine, schedule=sched)
     result = kernel.run()
@@ -171,6 +189,29 @@ def test_matrix_2d(expr, fmt_name, fmt_ctor, strategy, pieces, caplog):
 @pytest.mark.parametrize("expr", EXPRESSIONS_3D)
 def test_matrix_3d(expr, fmt_name, fmt_ctor, strategy, pieces, caplog):
     _check_cell(expr, fmt_name, fmt_ctor, strategy, pieces, caplog=caplog)
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("mesh", GRID_MESHES,
+                         ids=[f"{p}x{q}" for p, q in GRID_MESHES])
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("fmt_name,fmt_ctor", GRID_FORMATS,
+                         ids=[f[0] for f in GRID_FORMATS])
+@pytest.mark.parametrize("expr", GRID_EXPRESSIONS)
+def test_matrix_grid(expr, fmt_name, fmt_ctor, strategy, mesh, caplog):
+    """Multi-axis cells: every {spmv, spmm, sddmm} × {csr, bcsr} ×
+    {rows, nnz} cell on a genuine 2-D machine grid must lower DIRECT (no
+    logged conversion) and match the interpreter oracle."""
+    k = _check_cell(expr, fmt_name, fmt_ctor, strategy, mesh[0] * mesh[1],
+                    caplog=caplog, mesh=mesh)
+    assert k.fallbacks == [], f"grid cell {k.cell_id()} fell back"
+    assert k.strategy.is_grid and k.strategy.grid_shape == mesh
+    if strategy == "rows":
+        # per-axis communication attribution is the point of the grid
+        # subsystem: payload must live in the axes ledger, not the flat
+        # replicate/reduce fields
+        assert set(k.comm.axes) == {"x", "y"}
+        assert k.comm.replicate_bytes == 0 and k.comm.reduce_bytes == 0
 
 
 @pytest.mark.conformance
@@ -239,9 +280,10 @@ def test_census_matches_contract():
 
 # Full-matrix totals, pinned so the cached lowering path (plan memo + shard
 # cache + runner reuse, ISSUE 3) cannot silently flip a cell's status: when
-# the whole matrix ran, the census must be exactly this.
-FULL_CENSUS_TOTALS = {"direct": 91, "fallback": 11}
-_FULL_CELL_COUNT = 102
+# the whole matrix ran, the census must be exactly this. ISSUE 4 added the
+# 24 multi-axis (2x2 / 4x2 grid) cells, all direct.
+FULL_CENSUS_TOTALS = {"direct": 115, "fallback": 11}
+_FULL_CELL_COUNT = 126
 
 
 def test_census_totals_with_caching():

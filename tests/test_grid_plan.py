@@ -1,0 +1,217 @@
+"""Grid factorization invariants (ISSUE 4 property tests, hypothesis
+stub–compatible): any P×Q GridPlan tiling covers the universe exactly
+once, per-tile pos/crd rebasing round-trips, and 2-D cells agree with
+their pieces-equal Px1 counterparts bit-for-bit on deterministic
+(integer-valued, hence fp32-exact) inputs."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core.grid import GridPlan, compute_grid_plan
+from repro.core.lower import (default_grid_nnz_schedule,
+                              default_grid_schedule, default_nnz_schedule,
+                              default_row_schedule, lower)
+from repro.core.partition import (materialize_bcsr_grid,
+                                  materialize_csr_grid,
+                                  partition_by_bounds,
+                                  partition_tensor_grid)
+from repro.core.tensor import Tensor
+
+
+def _int_sparse(rng, n, m, density=0.3):
+    """Integer-valued sparse matrix: all partial sums are exact in fp32,
+    so differently-ordered reductions must agree BIT FOR BIT."""
+    return (rng.integers(-3, 4, (n, m)) *
+            (rng.random((n, m)) < density)).astype(np.float32)
+
+
+def _grid_plan_for(n, m, P, Q):
+    return GridPlan(axis_x="x", axis_y="y",
+                    row_bounds=partition_by_bounds(n, P),
+                    col_bounds=partition_by_bounds(m, Q))
+
+
+# ---------------------------------------------------------------------------
+# Invariant 1: the P×Q tiles cover [0, n) × [0, m) exactly once
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 50), m=st.integers(1, 50),
+       P=st.integers(1, 5), Q=st.integers(1, 5))
+def test_tiling_covers_universe_exactly_once(n, m, P, Q):
+    gp = _grid_plan_for(n, m, P, Q)
+    gp.validate(n, m)                       # windows sorted/disjoint/gapless
+    hits = np.zeros((n, m), dtype=np.int64)
+    for _, _, (rlo, rhi), (clo, chi) in gp.tile_windows():
+        hits[rlo:rhi, clo:chi] += 1
+    assert (hits == 1).all(), "grid tiles must partition the universe"
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 40), m=st.integers(2, 40),
+       P=st.integers(1, 4), Q=st.integers(1, 4), seed=st.integers(0, 999))
+def test_blocked_grid_plan_covers_universe(n, m, P, Q, seed):
+    """Block-aligned grid plans (computed through the real planner) still
+    tile the universe exactly once, block snapping included."""
+    rng = np.random.default_rng(seed)
+    B = Tensor.from_dense("B", _int_sparse(rng, n, m), F.BCSR((2, 2)))
+    c = Tensor.from_dense("c", rng.standard_normal(m).astype(np.float32))
+    stmt = rc.parse_tin("a(i) = B(i,j) * c(j)",
+                        a=Tensor.zeros_dense("a", (n,)), B=B, c=c)
+    machine = rc.Machine(("x", P), ("y", Q))
+    strat = default_grid_schedule(stmt, machine).strategy()
+    gp = compute_grid_plan(stmt, strat)
+    gp.validate(n, m)
+    hits = np.zeros((n, m), dtype=np.int64)
+    for _, _, (rlo, rhi), (clo, chi) in gp.tile_windows():
+        hits[rlo:rhi, clo:chi] += 1
+    assert (hits == 1).all()
+
+
+# ---------------------------------------------------------------------------
+# Invariant 2: per-tile pos/crd rebasing round-trips
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(P=st.integers(1, 4), Q=st.integers(1, 4), seed=st.integers(0, 999))
+def test_csr_grid_rebase_roundtrip(P, Q, seed):
+    rng = np.random.default_rng(seed)
+    n, m = 23, 17
+    dB = _int_sparse(rng, n, m)
+    B = Tensor.from_dense("B", dB, F.CSR())
+    part = partition_tensor_grid(B, partition_by_bounds(n, P),
+                                 partition_by_bounds(m, Q))
+    sh = materialize_csr_grid(B, part)
+    a = sh.arrays
+    got = np.zeros((n, m), np.float32)
+    for color in range(P * Q):
+        p, q = divmod(color, Q)
+        rlo = int(a["row_start"][p])
+        clo = int(a["col_start"][q])
+        pos = a["pos1"][color].astype(np.int64)
+        k = int(a["nnz_count"][color])
+        rows = np.repeat(np.arange(pos.shape[0] - 1), np.diff(pos))[:k]
+        got[rows + rlo, a["crd1"][color, :k] + clo] += a["vals"][color, :k]
+        # val_idx maps tile entries back to their global value positions
+        np.testing.assert_array_equal(
+            a["vals"][color, :k], B.vals[a["val_idx"][color, :k]])
+    np.testing.assert_array_equal(got, dB)
+
+
+@settings(max_examples=10, deadline=None)
+@given(P=st.integers(1, 3), Q=st.integers(1, 3), seed=st.integers(0, 999))
+def test_bcsr_grid_rebase_roundtrip(P, Q, seed):
+    rng = np.random.default_rng(seed)
+    n, m = 22, 18
+    dB = _int_sparse(rng, n, m)
+    B = Tensor.from_dense("B", dB, F.BCSR((2, 2)))
+    from repro.core.partition import block_aligned_row_bounds
+    part = partition_tensor_grid(B, block_aligned_row_bounds(n, P, 2),
+                                 block_aligned_row_bounds(m, Q, 2))
+    sh = materialize_bcsr_grid(B, part)
+    a = sh.arrays
+    got = np.zeros((-(-n // 2) * 2, -(-m // 2) * 2), np.float32)
+    for color in range(P * Q):
+        p, q = divmod(color, Q)
+        blo = int(a["brow_start"][p])
+        cblo = int(a["bcol_start"][q])
+        pos = a["pos1"][color].astype(np.int64)
+        k = int(a["nnz_count"][color])
+        brows = np.repeat(np.arange(pos.shape[0] - 1), np.diff(pos))[:k]
+        for e in range(k):
+            r0 = (brows[e] + blo) * 2
+            c0 = (int(a["crd1"][color, e]) + cblo) * 2
+            got[r0: r0 + 2, c0: c0 + 2] += a["vals"][color, e]
+    np.testing.assert_array_equal(got[:n, :m], dB)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 3: 2-D cells == pieces-equal Px1 counterparts, bit for bit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(fmt=st.sampled_from(["csr", "bcsr"]),
+       strategy=st.sampled_from(["rows", "nnz"]),
+       seed=st.integers(0, 99))
+def test_grid_matches_flat_counterpart_bitwise(fmt, strategy, seed):
+    """A 2x2 SpMM cell and its pieces-equal 4x1 counterpart accumulate in
+    different orders; on integer-valued inputs every fp32 sum is exact, so
+    the results must be IDENTICAL, not just close."""
+    rng = np.random.default_rng(seed)
+    n, m, J = 19, 13, 7
+    fm = F.CSR() if fmt == "csr" else F.BCSR((2, 2))
+    B = Tensor.from_dense("B", _int_sparse(rng, n, m), fm)
+    C = Tensor.from_dense("C", rng.integers(-3, 4, (m, J)).astype(np.float32))
+    stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (n, J)), B=B, C=C)
+    M22 = rc.Machine(("x", 2), ("y", 2))
+    M4 = rc.Machine(("x", 4))
+    if strategy == "rows":
+        kg = lower(stmt, M22, schedule=default_grid_schedule(stmt, M22))
+        k1 = lower(stmt, M4, schedule=default_row_schedule(stmt, M4))
+    else:
+        kg = lower(stmt, M22, schedule=default_grid_nnz_schedule(stmt, M22))
+        k1 = lower(stmt, M4, schedule=default_nnz_schedule(stmt, M4))
+    np.testing.assert_array_equal(kg.run(), k1.run())
+
+
+def test_grid_q1_equals_1d_path():
+    """A (P, 1) grid degenerates to the 1-D row distribution exactly —
+    same windows, same leaves modulo the q axis."""
+    rng = np.random.default_rng(3)
+    n, m = 19, 13
+    B = Tensor.from_dense("B", _int_sparse(rng, n, m), F.CSR())
+    c = Tensor.from_dense("c", rng.integers(-3, 4, m).astype(np.float32))
+    stmt = rc.parse_tin("a(i) = B(i,j) * c(j)",
+                        a=Tensor.zeros_dense("a", (n,)), B=B, c=c)
+    M21 = rc.Machine(("x", 2), ("y", 1))
+    M2 = rc.Machine(("x", 2))
+    kg = lower(stmt, M21, schedule=default_grid_schedule(stmt, M21))
+    k1 = lower(stmt, M2, schedule=default_row_schedule(stmt, M2))
+    np.testing.assert_array_equal(kg.run(), k1.run())
+
+
+# ---------------------------------------------------------------------------
+# Per-axis communication: the SUMMA win
+# ---------------------------------------------------------------------------
+
+def test_2d_spmm_moves_fewer_bytes_than_1d():
+    """At equal piece count, 2-D SpMM moves |C|(P-1) + |A|(Q-1) bytes vs
+    1-D's |C|(PQ-1) — strictly fewer, attributed per axis."""
+    rng = np.random.default_rng(5)
+    n, m, J = 48, 40, 16
+    B = Tensor.from_dense("B", _int_sparse(rng, n, m), F.CSR())
+    C = Tensor.from_dense("C", rng.standard_normal((m, J)).astype(np.float32))
+    stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (n, J)), B=B, C=C)
+    M22 = rc.Machine(("x", 2), ("y", 2))
+    M4 = rc.Machine(("x", 4))
+    kg = lower(stmt, M22, schedule=default_grid_schedule(stmt, M22))
+    k1 = lower(stmt, M4, schedule=default_row_schedule(stmt, M4))
+    assert kg.comm.pieces == k1.comm.pieces == 4
+    assert kg.comm.total_network_bytes() < k1.comm.total_network_bytes()
+    # C's k-windows broadcast along x; output partials reduce along y only
+    assert kg.comm.axes["x"].broadcast_bytes > 0
+    assert kg.comm.axes["x"].reduce_bytes == 0
+    assert kg.comm.axes["y"].reduce_bytes > 0
+    cm = kg.comm.as_dict()
+    assert cm["axes"]["x"]["network_bytes"] + \
+        cm["axes"]["y"]["network_bytes"] == cm["total_network_bytes"]
+
+
+def test_grid_nnz_comm_attribution_totals_match_flat():
+    """Grid nnz re-attributes the hierarchical broadcast/reduce to the
+    axes without changing the total (b*(PQ-1))."""
+    rng = np.random.default_rng(6)
+    n, m = 19, 13
+    B = Tensor.from_dense("B", _int_sparse(rng, n, m), F.CSR())
+    c = Tensor.from_dense("c", rng.standard_normal(m).astype(np.float32))
+    stmt = rc.parse_tin("a(i) = B(i,j) * c(j)",
+                        a=Tensor.zeros_dense("a", (n,)), B=B, c=c)
+    M22 = rc.Machine(("x", 2), ("y", 2))
+    M4 = rc.Machine(("x", 4))
+    kg = lower(stmt, M22, schedule=default_grid_nnz_schedule(stmt, M22))
+    k1 = lower(stmt, M4, schedule=default_nnz_schedule(stmt, M4))
+    assert kg.comm.replicate_bytes == 0 and kg.comm.reduce_bytes == 0
+    assert kg.comm.total_network_bytes() == k1.comm.total_network_bytes()

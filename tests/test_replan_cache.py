@@ -8,7 +8,6 @@ import pytest
 
 import repro.core as rc
 from repro.core import formats as F
-import sys
 
 from repro.core import partition as P
 from repro.core.interp import interpret
@@ -17,9 +16,10 @@ from repro.core.lower import (clear_lowering_caches, default_nnz_schedule,
 from repro.core.tensor import Tensor
 from repro.runtime.fault import StragglerMitigator
 
-# `repro.core.__init__` rebinds the name `lower` to the function, so the
-# module object must come from sys.modules.
-L = sys.modules["repro.core.lower"]
+# `repro.core.lower` is the MODULE again (the package used to rebind the
+# name to the function; the function is re-exported as rc.lower_stmt).
+import repro.core.lower as L
+assert L is not lower, "package attr 'lower' should be the submodule"
 
 N, M_COLS = 19, 13
 M4 = rc.Machine(("x", 4))
@@ -312,3 +312,42 @@ def test_spmd_runner_cache_reuse():
     np.testing.assert_allclose(y1, y2, atol=1e-6)
     cv = np.asarray(stmt.rhs.accesses()[1].tensor.to_dense())
     np.testing.assert_allclose(y1, dB @ cv, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Converted-tensor cache (ISSUE 4 satellite): fallback cells stop paying
+# to_format on every warm lower
+# ---------------------------------------------------------------------------
+
+def test_convert_cache_warm_fallback_lower():
+    """A csc cell converts B -> csr once; the warm re-lower reuses the
+    converted tensor (convert_hits on CacheStats) and stays fully warm."""
+    rng = np.random.default_rng(17)
+    stmt = _spmv_stmt(_sparse(rng), F.CSC())
+    sched = default_row_schedule(stmt, M4)    # csc/rows: conversion fallback
+    clear_lowering_caches()
+    k1 = lower(stmt, M4, schedule=sched)
+    assert k1.fallbacks and k1.cache.convert_misses == 1
+    assert k1.cache.convert_hits == 0 and not k1.cache.warm
+    k2 = lower(stmt, M4, schedule=sched)
+    assert k2.fallbacks == k1.fallbacks       # census unchanged by caching
+    assert k2.cache.convert_hits == 1 and k2.cache.convert_misses == 0
+    assert k2.cache.warm                      # plan/shard/runner/convert hit
+    d = k2.cache.as_dict()
+    assert d["convert_hits"] == 1
+    np.testing.assert_allclose(k2.run(), k1.run(), atol=1e-6)
+
+
+def test_convert_cache_invalidation_on_mutation():
+    """In-place mutation of the declared-format operand changes its CRC,
+    so the conversion re-runs instead of serving a stale csr image."""
+    rng = np.random.default_rng(18)
+    stmt = _spmv_stmt(_sparse(rng), F.CSC())
+    sched = default_row_schedule(stmt, M4)
+    clear_lowering_caches()
+    k1 = lower(stmt, M4, schedule=sched)
+    B = stmt.rhs.accesses()[0].tensor
+    B.vals[:] = B.vals * 2.0
+    k2 = lower(stmt, M4, schedule=sched)
+    assert k2.cache.convert_misses == 1
+    np.testing.assert_allclose(k2.run(), k1.run() * 2.0, atol=1e-5)

@@ -251,3 +251,67 @@ def test_shard_map_format_general_executors():
         print("FG_SPMD_OK")
     """)
     assert "FG_SPMD_OK" in out
+
+
+def test_shard_map_grid_2d_executors():
+    """Multi-axis distribution on a GENUINE Mesh((4, 2), ("x", "y")):
+    grid rows cells psum along y only (SUMMA), grid nnz cells shard the
+    flat color axis over both mesh axes and psum over both. All agree
+    with the vmap simulation backend and the dense oracle."""
+    out = run_sub("""
+        import numpy as np
+        import repro.core as rc
+        from repro.core import formats as F
+        from repro.core.lower import (default_grid_nnz_schedule,
+                                      default_grid_schedule, lower)
+        from repro.core.tensor import Tensor
+        from repro.distributed.executor import to_spmd
+        from repro.distributed.mesh import machine_to_mesh
+
+        rng = np.random.default_rng(0)
+        n, m, J, K = 60, 44, 9, 5
+        dB = ((rng.random((n, m)) < 0.25) *
+              rng.standard_normal((n, m))).astype(np.float32)
+        M = rc.Machine(("x", 4), ("y", 2))
+        mesh = machine_to_mesh(M)
+        assert mesh.devices.shape == (4, 2)
+
+        # SpMM, rows grid (csr + bcsr): reduction scoped to y
+        for fm in (F.CSR(), F.BCSR((2, 2))):
+            B = Tensor.from_dense("B", dB, fm)
+            C = Tensor.from_dense(
+                "C", rng.standard_normal((m, J)).astype(np.float32))
+            stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                                A=Tensor.zeros_dense("A", (n, J)), B=B, C=C)
+            k = lower(stmt, M, schedule=default_grid_schedule(stmt, M))
+            y = to_spmd(k, mesh)()
+            assert np.allclose(y, dB @ C.to_dense(), atol=1e-3), k.leaf_name
+            assert np.allclose(y, k.run(), atol=1e-5), k.leaf_name
+
+        # SpMV + SDDMM rows grid, SpMV nnz grid (flat colors over x AND y)
+        B = Tensor.from_dense("B", dB, F.CSR())
+        c = Tensor.from_dense(
+            "c", rng.standard_normal(m).astype(np.float32))
+        stmt = rc.parse_tin("a(i) = B(i,j) * c(j)",
+                            a=Tensor.zeros_dense("a", (n,)), B=B, c=c)
+        for sched in (default_grid_schedule(stmt, M),
+                      default_grid_nnz_schedule(stmt, M)):
+            k = lower(stmt, M, schedule=sched)
+            y = to_spmd(k, mesh)()
+            assert np.allclose(y, dB @ np.asarray(c.to_dense()),
+                               atol=1e-3), k.leaf_name
+            assert np.allclose(y, k.run(), atol=1e-5), k.leaf_name
+
+        Cs = Tensor.from_dense(
+            "C", rng.standard_normal((n, K)).astype(np.float32))
+        D = Tensor.from_dense(
+            "D", rng.standard_normal((K, m)).astype(np.float32))
+        A = Tensor.from_dense("A", (dB != 0) * 1.0, F.CSR())
+        stmt = rc.parse_tin("A(i,j) = B(i,j) * C(i,k) * D(k,j)",
+                            A=A, B=B, C=Cs, D=D)
+        k = lower(stmt, M, schedule=default_grid_schedule(stmt, M))
+        y = to_spmd(k, mesh)()
+        assert np.allclose(y, np.asarray(k.run().vals), atol=1e-4)
+        print("GRID_SPMD_OK")
+    """)
+    assert "GRID_SPMD_OK" in out

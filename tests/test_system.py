@@ -77,7 +77,7 @@ def test_paper_figure1_api_surface():
          .distribute(io)
          .communicate([a, B, c], io)
          .parallelize(ii, CPUThread))
-    k = rc.lower(stmt, M, schedule=s, distributions=dists)
+    k = rc.lower_stmt(stmt, M, schedule=s, distributions=dists)
     assert np.allclose(k.run(), dense @ np.asarray(c.to_dense()), atol=1e-4)
     assert k.leaf_name == "spmv_rows"
     # matched data distribution: no redistribution charged
