@@ -1,0 +1,110 @@
+"""Level-iterator walks vs the conversion fallback they replaced.
+
+Before the level-iterator refactor, every ``*/csc/rows`` cell converted
+csc→csr at plan time and every ``spmttkrp/coo3/rows`` cell converted
+coo3→csf — a logged O(nnz) re-assembly plus the row-major execution. The
+transpose walk and the trailing-singleton walk lower those cells DIRECTLY:
+this suite times both executions on the SAME inputs.
+
+  ``csc_spmm_direct``     — transpose-walk lowering (this PR's path)
+  ``csc_spmm_fallback``   — converted-CSR execution the fallback ran
+  ``csc_convert``         — the csc→csr conversion the fallback also paid
+  ``coo3_mttkrp_direct``  — trailing-singleton-walk lowering
+  ``coo3_mttkrp_fallback``— converted-CSF execution
+  ``coo3_convert``        — the coo3→csf conversion
+
+Plan-time cost matters here too, so ``*_lower`` rows time a COLD lower
+(caches cleared) for the direct path vs convert+lower for the fallback.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core.lower import clear_lowering_caches, default_row_schedule, lower
+from repro.core.tensor import Tensor
+
+from .common import csv_row, time_fn
+
+M = rc.Machine(("x", 4))
+
+
+def _sparse(rng, shape, density):
+    return ((rng.random(shape) < density) *
+            rng.standard_normal(shape)).astype(np.float32)
+
+
+def run(n: int = 4096, m: int = 4096, density: float = 0.002, j: int = 64,
+        dims3=(256, 128, 96), density3: float = 0.01, l3: int = 16) -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # ---- csc / rows: transpose walk vs csc→csr conversion -----------------
+    dB = _sparse(rng, (n, m), density)
+    B_csc = Tensor.from_dense("B", dB, F.CSC())
+    t_conv = time_fn(lambda: B_csc.to_format(F.CSR()), warmup=1, iters=3)
+    rows.append(csv_row("csc_convert", t_conv * 1e6, f"nnz={B_csc.nnz}"))
+    B_csr = B_csc.to_format(F.CSR())
+    Cd = rng.standard_normal((m, j)).astype(np.float32)
+
+    def spmm_stmt(Bt):
+        C = Tensor.from_dense("C", Cd)
+        return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (n, j)), B=Bt, C=C)
+
+    k_direct = lower(spmm_stmt(B_csc), M)
+    assert k_direct.fallbacks == [], k_direct.fallbacks
+    k_fb = lower(spmm_stmt(B_csr), M)
+    np.testing.assert_allclose(k_direct.run(), k_fb.run(), atol=1e-2)
+    t_direct = time_fn(k_direct.run, iters=5)
+    t_fb = time_fn(k_fb.run, iters=5)
+    rows.append(csv_row("csc_spmm_direct", t_direct * 1e6,
+                        f"leaf={k_direct.leaf_name}"))
+    rows.append(csv_row("csc_spmm_fallback", t_fb * 1e6,
+                        f"exec_ratio={t_fb / t_direct:.2f}x"))
+
+    def cold_direct():
+        clear_lowering_caches()
+        lower(spmm_stmt(B_csc), M)
+
+    def cold_fallback():
+        clear_lowering_caches()
+        lower(spmm_stmt(B_csc.to_format(F.CSR())), M)
+
+    tl_d = time_fn(cold_direct, warmup=1, iters=3)
+    tl_f = time_fn(cold_fallback, warmup=1, iters=3)
+    rows.append(csv_row("csc_spmm_direct_lower", tl_d * 1e6, "cold plan"))
+    rows.append(csv_row("csc_spmm_fallback_lower", tl_f * 1e6,
+                        f"plan_ratio={tl_f / tl_d:.2f}x"))
+
+    # ---- coo3 / rows: trailing-singleton walk vs coo3→csf -----------------
+    dB3 = _sparse(rng, dims3, density3)
+    B_coo3 = Tensor.from_dense("B", dB3, F.COO(3))
+    t_conv3 = time_fn(lambda: B_coo3.to_format(F.CSF(3)), warmup=1, iters=3)
+    rows.append(csv_row("coo3_convert", t_conv3 * 1e6, f"nnz={B_coo3.nnz}"))
+    B_csf = B_coo3.to_format(F.CSF(3))
+    Cf = rng.standard_normal((dims3[1], l3)).astype(np.float32)
+    Df = rng.standard_normal((dims3[2], l3)).astype(np.float32)
+
+    def mttkrp_stmt(Bt):
+        return rc.parse_tin(
+            "A(i,l) = B(i,j,k) * C(j,l) * D(k,l)",
+            A=Tensor.zeros_dense("A", (dims3[0], l3)), B=Bt,
+            C=Tensor.from_dense("C", Cf), D=Tensor.from_dense("D", Df))
+
+    k3_direct = lower(mttkrp_stmt(B_coo3), M)
+    assert k3_direct.fallbacks == [], k3_direct.fallbacks
+    k3_fb = lower(mttkrp_stmt(B_csf), M)
+    np.testing.assert_allclose(k3_direct.run(), k3_fb.run(), atol=1e-2)
+    t3_d = time_fn(k3_direct.run, iters=5)
+    t3_f = time_fn(k3_fb.run, iters=5)
+    rows.append(csv_row("coo3_mttkrp_direct", t3_d * 1e6,
+                        f"leaf={k3_direct.leaf_name}"))
+    rows.append(csv_row("coo3_mttkrp_fallback", t3_f * 1e6,
+                        f"exec_ratio={t3_f / t3_d:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

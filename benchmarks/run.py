@@ -13,6 +13,9 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
                         (plan/shard/runner caches) vs execute-only
   bench_mesh2d        — 1-D vs 2-D machine grid at fixed piece count:
                         SpMM comm volume (per-axis) + wall time
+  bench_levels        — level-iterator walks: direct csc (transpose walk)
+                        & coo3 (trailing-singleton walk) vs the
+                        conversion-fallback execution they replaced
 
 Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
 writes a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
@@ -38,9 +41,10 @@ def main() -> None:
                     help="directory for the BENCH_*.json files")
     args = ap.parse_args()
 
-    from . import (bench_bcsr, bench_load_balance, bench_mesh2d,
-                   bench_mismatch, bench_pallas_kernels, bench_replan,
-                   bench_spadd3, bench_vs_interp, bench_weak_scaling)
+    from . import (bench_bcsr, bench_levels, bench_load_balance,
+                   bench_mesh2d, bench_mismatch, bench_pallas_kernels,
+                   bench_replan, bench_spadd3, bench_vs_interp,
+                   bench_weak_scaling)
     from .common import drain_results
 
     print("name,us_per_call,derived")
@@ -65,6 +69,10 @@ def main() -> None:
         "mesh2d": lambda: bench_mesh2d.run(
             *((1024, 1024) if args.quick else (4096, 4096)),
             j=32 if args.quick else 64),
+        "levels": lambda: bench_levels.run(
+            *((1024, 1024) if args.quick else (4096, 4096)),
+            j=32 if args.quick else 64,
+            dims3=(96, 64, 48) if args.quick else (256, 128, 96)),
     }
     only = {s for s in args.only.split(",") if s} if args.only else None
     if only:

@@ -12,10 +12,13 @@ plus the compilation machinery:
   - :mod:`repro.core.interp`    — CTF-analog interpretation baseline
 """
 from . import formats
-from .formats import (BCSR, COO, CSC, CSF, CSR, DCSF, DCSR, DDC, Compressed,
-                      Dense, DenseMat, DenseND, DenseVec, Format, Singleton,
-                      SparseVec, capabilities, conversion_target, format_key)
+from .formats import (BCSC, BCSR, COO, CSC, CSF, CSR, DCSF, DCSR, DDC,
+                      Compressed, Dense, DenseMat, DenseND, DenseVec, Format,
+                      Singleton, SparseVec, capabilities, conversion_target,
+                      format_key)
 from .interp import interpret
+from . import levels
+from .levels import LevelTree, Walk, tree_of
 # NOTE: the lowering entry point is re-exported as ``lower_stmt`` — the
 # package attribute ``repro.core.lower`` stays bound to the SUBMODULE, so
 # ``import repro.core.lower as L`` returns the module (the name-shadowing
@@ -38,7 +41,8 @@ from .tensor import Tensor, TensorVar
 from .tin import Access, Assignment, IndexVar, index_vars, parse_tin
 
 __all__ = [
-    "formats", "grid", "BCSR", "COO", "CSC", "CSF", "CSR", "DCSF", "DCSR",
+    "formats", "grid", "levels", "LevelTree", "Walk", "tree_of", "BCSC",
+    "BCSR", "COO", "CSC", "CSF", "CSR", "DCSF", "DCSR",
     "DDC", "Compressed", "Dense", "DenseMat", "DenseND", "DenseVec",
     "Format", "Singleton", "capabilities", "conversion_target",
     "format_key", "SparseVec", "interpret", "AxisComm", "CacheStats",

@@ -192,6 +192,15 @@ def BCSR(block: Tuple[int, int] = (2, 2)) -> Format:
     return Format((Dense, Compressed), block_shape=tuple(block))
 
 
+def BCSC(block: Tuple[int, int] = (2, 2)) -> Format:
+    """Blocked CSC: the column-major block grid — a CSC coordinate tree
+    over the block grid with a dense value tile per stored block. Lowers
+    directly through the blocked transpose walk (core/levels.py); no
+    dedicated emitters exist for it."""
+    return Format((Dense, Compressed), mode_ordering=(1, 0),
+                  block_shape=tuple(block))
+
+
 def DCSF(order: int = 3) -> Format:
     """Doubly-compressed sparse fiber — every level compressed (hyper-sparse
     FROSTT tensors with empty slices)."""
@@ -228,13 +237,13 @@ def format_key(f: Format) -> str:
     base = _KEY_TABLE.get(names)
     if base is None:
         base = "".join(n[0].lower() for n in names)
-    if f.is_blocked:
-        base = f"b{base}" if base == "csr" else f"b[{base}]"
     if f.mode_ordering != tuple(range(len(f.levels))):
         if base == "csr" and f.mode_ordering == (1, 0):
             base = "csc"
         else:
             base += "@" + "".join(str(d) for d in f.mode_ordering)
+    if f.is_blocked:
+        base = f"b{base}" if base in ("csr", "csc") else f"b[{base}]"
     return base
 
 
@@ -257,12 +266,18 @@ class FormatCaps:
     local output slice; false (e.g. CSC) means nnz leaves must reduce over
     the full output extent instead.
 
+    ``transpose_walkable``: dimension 0 is NOT at the storage root (CSC,
+    BCSC) but the level tree's transpose walk (core/levels.py — an argsort
+    of the stored coordinates into dimension-lexicographic order) realizes
+    universe row windows directly, with a ``val_idx`` permutation back to
+    storage positions for pattern-preserving outputs.
+
     ``block_row_partitionable`` / ``block_nnz_partitionable``: the blocked
     analogs — a universe partition of dimension 0 can be realized as a
-    contiguous *block-row* interval, and the stored-block position space
-    can be split evenly. True for row-major dense-root block grids (BCSR),
-    which is what the direct blocked leaves consume; blocked formats with a
-    compressed or column-major root still go through a conversion.
+    contiguous (or transpose-walked) *block-row* interval, and the stored
+    block position space can be split evenly. True for every dense-root
+    block grid (BCSR directly, BCSC via the blocked transpose walk);
+    compressed-root block grids still go through a conversion.
     """
 
     key: str
@@ -273,6 +288,7 @@ class FormatCaps:
     row_partitionable: bool
     nnz_partitionable: bool
     root_tracks_dim0: bool
+    transpose_walkable: bool = False
     block_row_partitionable: bool = False
     block_nnz_partitionable: bool = False
 
@@ -281,8 +297,7 @@ def capabilities(f: Format) -> FormatCaps:
     row_major = f.mode_ordering == tuple(range(len(f.levels)))
     root_compressed = f.levels[0].compressed
     dim0_at_root = f.dim_of_level(0) == 0
-    blocked_direct = (f.is_blocked and dim0_at_root and not root_compressed
-                      and f.is_sparse)
+    blocked_direct = f.is_blocked and not root_compressed and f.is_sparse
     return FormatCaps(
         key=format_key(f),
         order=len(f.levels),
@@ -292,6 +307,7 @@ def capabilities(f: Format) -> FormatCaps:
         row_partitionable=dim0_at_root and not f.is_blocked,
         nnz_partitionable=f.is_sparse and not f.is_blocked,
         root_tracks_dim0=dim0_at_root,
+        transpose_walkable=f.is_sparse and not dim0_at_root,
         block_row_partitionable=blocked_direct,
         block_nnz_partitionable=blocked_direct,
     )
@@ -299,14 +315,15 @@ def capabilities(f: Format) -> FormatCaps:
 
 def supports_2d_default(f: Format, space: str) -> bool:
     """Default capability contract shared by the 2-D kernel families
-    (spmv/spmm/sddmm/spadd3): universe needs a row-partitionable operand
-    (CSR directly; DCSR/COO via the densified row-window view), nnz needs
-    an nnz-splittable position space (any unblocked sparse format). Blocked
-    formats (BCSR) lower directly under BOTH strategies at block
-    granularity — block-row windows for universe, equal stored-block splits
-    for nnz — through the bcsr leaves. Kernel modules wrap this in their
-    own ``supports()`` so a family that grows a format-specific leaf (the
-    spmttkrp override pattern) can diverge."""
+    (spmv/spmm/sddmm/spadd3): universe needs a row walk of the operand —
+    CSR directly, DCSR/COO via the densified row-window view, CSC via the
+    transpose walk — and nnz needs an nnz-splittable position space (any
+    unblocked sparse format). Blocked dense-root grids (BCSR, BCSC) lower
+    directly under BOTH strategies at block granularity — block-row
+    windows (transpose-walked for BCSC) for universe, equal stored-block
+    splits for nnz — through the blocked leaves. Kernel modules wrap this
+    in their own ``supports()`` so a family that needs a different walk
+    (the spmttkrp override pattern) can diverge."""
     caps = capabilities(f)
     if caps.order != 2:
         return False
@@ -314,7 +331,7 @@ def supports_2d_default(f: Format, space: str) -> bool:
         return (caps.block_row_partitionable if space == "universe"
                 else caps.block_nnz_partitionable)
     if space == "universe":
-        return caps.row_partitionable
+        return caps.row_partitionable or caps.transpose_walkable
     return caps.nnz_partitionable
 
 

@@ -291,36 +291,33 @@ def lower_grid(stmt: Assignment, machine: Machine, strat: DistStrategy,
 
 
 # ---------------------------------------------------------------------------
-# Grid emitters — vmap simulation backend. Tiles reuse the 1-D leaf
-# kernels: a (p, q) tile is a CSR-convention shard whose column-local crd
-# indexes the q-th window slice of the dense co-operand; SUMMA reduction is
-# the sum over the q axis of each grid row's partials.
+# Grid emitters — vmap simulation backend, ONE format-generic emitter per
+# expression (the level tree selects scalar vs blocked tile leaves). Tiles
+# reuse the 1-D leaf kernels: a (p, q) tile is a CSR-convention shard whose
+# column-local crd indexes the q-th window slice of the dense co-operand;
+# SUMMA reduction is the sum over the q axis of each grid row's partials.
 # ---------------------------------------------------------------------------
 
 def _emit_grid(stmt, strat, gp, plans, shards, jit=True):
     sig = stmt.signature()
-    primary = None
-    for acc in stmt.rhs.accesses():
-        if acc.tensor.format.is_sparse:
-            primary = acc.tensor
-            break
-    blocked = primary is not None and primary.format.is_blocked
     table = {
-        "d1(i)=s2(i,j)*d1(j)":
-            _emit_bcsr_spmv_grid if blocked else _emit_spmv_grid,
-        "d2(i,j)=s2(i,k)*d2(k,j)":
-            _emit_bcsr_spmm_grid if blocked else _emit_spmm_grid,
-        "s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)":
-            _emit_bcsr_sddmm_grid if blocked else _emit_sddmm_grid,
+        "d1(i)=s2(i,j)*d1(j)": _emit_spmv_grid,
+        "d2(i,j)=s2(i,k)*d2(k,j)": _emit_spmm_grid,
+        "s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)": _emit_sddmm_grid,
     }
     emitter = table.get(sig)
     if emitter is None:
         raise NotImplementedError(
             f"no 2-D grid emitter for {sig}; schedule a 1-D distribution "
             "(spmv/spmm/sddmm are grid-distributable)")
-    name = emitter.__name__.replace("_emit_", "") + "_rows"
-    runner = emitter(stmt, gp, plans, shards, jit=jit)
-    return name, runner
+    return emitter(stmt, gp, plans, shards, jit=jit)
+
+
+def _grid_blocked(stmt) -> bool:
+    for acc in stmt.rhs.accesses():
+        if acc.tensor.format.is_sparse:
+            return acc.tensor.level_tree().blocked
+    return False
 
 
 def _color_axes(PQ: int, Q: int):
@@ -333,7 +330,28 @@ def _emit_spmv_grid(stmt, gp, plans, shards, jit=True):
     c = shards[stmt.rhs.accesses()[1].tensor.name]
     n = stmt.lhs.tensor.shape[0]
     a = B.arrays
-    P, Q, mr = int(B.meta["P"]), int(B.meta["Q"]), int(B.meta["max_rows"])
+    P, Q = int(B.meta["P"]), int(B.meta["Q"])
+    if _grid_blocked(stmt):
+        max_gcw = int(a["bcol_count"].max())
+        cw = pack_window_vec_blocks(np.asarray(c.arrays["vals"]), max_gcw,
+                                    int(B.meta["bc"]))
+
+        def fn(pos, crd, tiles, cw, row_start, row_count):
+            _, q = _color_axes(pos.shape[0], Q)
+            blocks = jax.vmap(
+                lambda p_, c_, t_, q_:
+                K.leaf_bcsr_spmv_rows(p_, c_, t_, cw[q_]))(
+                pos, crd, tiles, q)                      # (P*Q, mbr*br)
+            partial = blocks.reshape(P, Q, blocks.shape[1]).sum(axis=1)
+            return L._scatter_rows((n,), partial, row_start, row_count)
+
+        args = (a["pos1"], a["crd1"], a["vals"], cw,
+                a["row_start"], a["row_count"])
+        f = L._runner(jit, "bcsr_spmv_grid_rows", (n, P, Q), args,
+                      lambda: fn)
+        return "bcsr_spmv_grid_rows", lambda: np.asarray(f(*args))
+
+    mr = int(B.meta["max_rows"])
     cw = c.arrays["vals"]                                # (Q, max_kw)
 
     def fn(pos, crd, vals, cw, row_start, row_count):
@@ -347,7 +365,7 @@ def _emit_spmv_grid(stmt, gp, plans, shards, jit=True):
     args = (a["pos1"], a["crd1"], a["vals"], cw,
             a["row_start"], a["row_count"])
     f = L._runner(jit, "spmv_grid_rows", (n, P, Q, mr), args, lambda: fn)
-    return lambda: np.asarray(f(*args))
+    return "spmv_grid_rows", lambda: np.asarray(f(*args))
 
 
 def _emit_spmm_grid(stmt, gp, plans, shards, jit=True):
@@ -355,7 +373,29 @@ def _emit_spmm_grid(stmt, gp, plans, shards, jit=True):
     B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
     out_shape = stmt.lhs.tensor.shape
     a = B.arrays
-    P, Q, mr = int(B.meta["P"]), int(B.meta["Q"]), int(B.meta["max_rows"])
+    P, Q = int(B.meta["P"]), int(B.meta["Q"])
+    if _grid_blocked(stmt):
+        max_gcw = int(a["bcol_count"].max())
+        Cw = pack_window_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                        max_gcw, int(B.meta["bc"]))
+
+        def fn(pos, crd, tiles, Cw, row_start, row_count):
+            _, q = _color_axes(pos.shape[0], Q)
+            blocks = jax.vmap(
+                lambda p_, c_, t_, q_:
+                K.leaf_bcsr_spmm_rows(p_, c_, t_, Cw[q_]))(
+                pos, crd, tiles, q)                      # (P*Q, mbr*br, J)
+            partial = blocks.reshape(P, Q, blocks.shape[1],
+                                     out_shape[1]).sum(axis=1)
+            return L._scatter_rows(out_shape, partial, row_start, row_count)
+
+        args = (a["pos1"], a["crd1"], a["vals"], Cw,
+                a["row_start"], a["row_count"])
+        f = L._runner(jit, "bcsr_spmm_grid_rows", (P, Q) + out_shape, args,
+                      lambda: fn)
+        return "bcsr_spmm_grid_rows", lambda: np.asarray(f(*args))
+
+    mr = int(B.meta["max_rows"])
     Cw = C.arrays["vals"]                                # (Q, max_kw, J)
 
     def fn(pos, crd, vals, Cw, row_start, row_count):
@@ -370,14 +410,15 @@ def _emit_spmm_grid(stmt, gp, plans, shards, jit=True):
             a["row_start"], a["row_count"])
     f = L._runner(jit, "spmm_grid_rows", (P, Q, mr) + out_shape, args,
                   lambda: fn)
-    return lambda: np.asarray(f(*args))
+    return "spmm_grid_rows", lambda: np.asarray(f(*args))
 
 
 def _emit_sddmm_grid(stmt, gp, plans, shards, jit=True):
     """Grid SDDMM is pure owner-computes: tile (p, q) samples its B tile
     against C's p-th row window and D's q-th column window; outputs stay
     aligned with B's stored positions (scattered home by ``val_idx``) —
-    no reduction on either axis."""
+    no reduction on either axis. Blocked trees sample whole (br, bc)
+    tiles; the walk and scatter logic is identical."""
     accs = stmt.rhs.accesses()
     B = shards[accs[0].tensor.name]
     C = shards[accs[1].tensor.name]
@@ -385,6 +426,39 @@ def _emit_sddmm_grid(stmt, gp, plans, shards, jit=True):
     Bt = accs[0].tensor
     a = B.arrays
     Q = int(B.meta["Q"])
+    if _grid_blocked(stmt):
+        P = int(B.meta["P"])
+        br, bc = int(B.meta["br"]), int(B.meta["bc"])
+        max_brows = int(B.meta["max_brows"])
+        max_gcw = int(a["bcol_count"].max())
+        C_blk = pack_rowwindow_blocks(C.arrays["vals"], max_brows, br)
+        Dw = pack_window_mat_inner_blocks(np.asarray(D.arrays["vals"]),
+                                          max_gcw, bc)
+        total_blocks = int(Bt.levels[1].nnz or 0)
+
+        def fn(pos, crd, tiles, Cw, Dw, val_idx, nnz_count):
+            p, q = _color_axes(pos.shape[0], Q)
+
+            def leaf(pos_, crd_, t_, p_, q_):
+                brow = K.rows_from_pos(pos_, crd_.shape[0])
+                return K.leaf_bcsr_sddmm(brow, crd_, t_, Cw[p_], Dw[q_])
+
+            out = jax.vmap(leaf)(pos, crd, tiles, p, q)  # (PQ, mt, br, bc)
+            return L._scatter_by_val_idx(total_blocks, out, val_idx,
+                                         nnz_count)
+
+        args = (a["pos1"], a["crd1"], a["vals"], C_blk, Dw, a["val_idx"],
+                a["nnz_count"])
+        f = L._runner(jit, "bcsr_sddmm_grid_rows",
+                      (total_blocks, P, Q, br, bc), args, lambda: fn)
+
+        def run():
+            new_tiles = np.asarray(f(*args))
+            return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format,
+                          Bt.levels, new_tiles, Bt.dtype)
+
+        return "bcsr_sddmm_grid_rows", run
+
     Cw = C.arrays["vals"]                                # (P, max_rw, K)
     Dw = D.arrays["vals"]                                # (Q, K, max_mw)
     total_nnz = Bt.nnz
@@ -395,10 +469,7 @@ def _emit_sddmm_grid(stmt, gp, plans, shards, jit=True):
             lambda pos_, crd_, v_, p_, q_:
             K.leaf_sddmm_rows(pos_, crd_, v_, Cw[p_], Dw[q_]))(
             pos, crd, vals, p, q)                        # (P*Q, max_tnnz)
-        mask = jnp.arange(out.shape[1])[None, :] < nnz_count[:, None]
-        idx = jnp.clip(val_idx, 0, max(total_nnz - 1, 0)).reshape(-1)
-        return jnp.zeros((total_nnz,), out.dtype).at[idx].add(
-            (out * mask).reshape(-1))
+        return L._scatter_by_val_idx(total_nnz, out, val_idx, nnz_count)
 
     args = (a["pos1"], a["crd1"], a["vals"], Cw, Dw, a["val_idx"],
             a["nnz_count"])
@@ -409,7 +480,7 @@ def _emit_sddmm_grid(stmt, gp, plans, shards, jit=True):
         return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
                       new_vals, Bt.dtype)
 
-    return run
+    return "sddmm_grid_rows", run
 
 
 # -- per-window block packing for the blocked grid leaves -------------------
@@ -451,95 +522,3 @@ def pack_window_mat_inner_blocks(vals: np.ndarray, max_gcw: int, bc: int,
     return np.ascontiguousarray(
         out.reshape(Q, K, max_gcw, bc).transpose(0, 2, 1, 3))
 
-
-def _emit_bcsr_spmv_grid(stmt, gp, plans, shards, jit=True):
-    B = shards[stmt.rhs.accesses()[0].tensor.name]
-    c = shards[stmt.rhs.accesses()[1].tensor.name]
-    n = stmt.lhs.tensor.shape[0]
-    a = B.arrays
-    P, Q = int(B.meta["P"]), int(B.meta["Q"])
-    max_gcw = int(a["bcol_count"].max())
-    cw = pack_window_vec_blocks(np.asarray(c.arrays["vals"]), max_gcw,
-                                int(B.meta["bc"]))
-
-    def fn(pos, crd, tiles, cw, row_start, row_count):
-        _, q = _color_axes(pos.shape[0], Q)
-        blocks = jax.vmap(
-            lambda p_, c_, t_, q_: K.leaf_bcsr_spmv_rows(p_, c_, t_, cw[q_]))(
-            pos, crd, tiles, q)                          # (P*Q, mbr*br)
-        partial = blocks.reshape(P, Q, blocks.shape[1]).sum(axis=1)
-        return L._scatter_rows((n,), partial, row_start, row_count)
-
-    args = (a["pos1"], a["crd1"], a["vals"], cw,
-            a["row_start"], a["row_count"])
-    f = L._runner(jit, "bcsr_spmv_grid_rows", (n, P, Q), args, lambda: fn)
-    return lambda: np.asarray(f(*args))
-
-
-def _emit_bcsr_spmm_grid(stmt, gp, plans, shards, jit=True):
-    Bacc, Cacc = stmt.rhs.accesses()
-    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
-    out_shape = stmt.lhs.tensor.shape
-    a = B.arrays
-    P, Q = int(B.meta["P"]), int(B.meta["Q"])
-    max_gcw = int(a["bcol_count"].max())
-    Cw = pack_window_mat_row_blocks(np.asarray(C.arrays["vals"]), max_gcw,
-                                    int(B.meta["bc"]))
-
-    def fn(pos, crd, tiles, Cw, row_start, row_count):
-        _, q = _color_axes(pos.shape[0], Q)
-        blocks = jax.vmap(
-            lambda p_, c_, t_, q_: K.leaf_bcsr_spmm_rows(p_, c_, t_, Cw[q_]))(
-            pos, crd, tiles, q)                          # (P*Q, mbr*br, J)
-        partial = blocks.reshape(P, Q, blocks.shape[1],
-                                 out_shape[1]).sum(axis=1)
-        return L._scatter_rows(out_shape, partial, row_start, row_count)
-
-    args = (a["pos1"], a["crd1"], a["vals"], Cw,
-            a["row_start"], a["row_count"])
-    f = L._runner(jit, "bcsr_spmm_grid_rows", (P, Q) + out_shape, args,
-                  lambda: fn)
-    return lambda: np.asarray(f(*args))
-
-
-def _emit_bcsr_sddmm_grid(stmt, gp, plans, shards, jit=True):
-    accs = stmt.rhs.accesses()
-    B = shards[accs[0].tensor.name]
-    C = shards[accs[1].tensor.name]
-    D = shards[accs[2].tensor.name]
-    Bt = accs[0].tensor
-    a = B.arrays
-    P, Q = int(B.meta["P"]), int(B.meta["Q"])
-    br, bc = int(B.meta["br"]), int(B.meta["bc"])
-    max_brows = int(B.meta["max_brows"])
-    max_gcw = int(a["bcol_count"].max())
-    C_blk = pack_rowwindow_blocks(C.arrays["vals"], max_brows, br)
-    Dw = pack_window_mat_inner_blocks(np.asarray(D.arrays["vals"]), max_gcw,
-                                      bc)
-    total_blocks = int(Bt.levels[1].nnz or 0)
-
-    def fn(pos, crd, tiles, Cw, Dw, val_idx, nnz_count):
-        p, q = _color_axes(pos.shape[0], Q)
-
-        def leaf(pos_, crd_, t_, p_, q_):
-            brow = K.rows_from_pos(pos_, crd_.shape[0])
-            return K.leaf_bcsr_sddmm(brow, crd_, t_, Cw[p_], Dw[q_])
-
-        out = jax.vmap(leaf)(pos, crd, tiles, p, q)  # (P*Q, mt, br, bc)
-        mask = (jnp.arange(out.shape[1])[None, :]
-                < nnz_count[:, None]).astype(out.dtype)
-        idx = jnp.clip(val_idx, 0, max(total_blocks - 1, 0)).reshape(-1)
-        flat = (out * mask[:, :, None, None]).reshape((-1,) + out.shape[2:])
-        return jnp.zeros((total_blocks, br, bc), out.dtype).at[idx].add(flat)
-
-    args = (a["pos1"], a["crd1"], a["vals"], C_blk, Dw, a["val_idx"],
-            a["nnz_count"])
-    f = L._runner(jit, "bcsr_sddmm_grid_rows", (total_blocks, P, Q, br, bc),
-                  args, lambda: fn)
-
-    def run():
-        new_tiles = np.asarray(f(*args))
-        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
-                      new_tiles, Bt.dtype)
-
-    return run

@@ -35,6 +35,7 @@ import numpy as np
 
 from .cache import LRUCache, avals_key
 from . import formats as fmt
+from . import levels
 from .partition import (CONVERT_CACHE_STATS, SHARD_CACHE_STATS,
                         ShardedTensor, TensorPartition,
                         block_aligned_row_bounds, clear_convert_cache,
@@ -322,6 +323,20 @@ def _scatter_block_vals(total_blocks, tile_blocks, nnz_start, nnz_count):
                          nnz_start, nnz_count)[:total_blocks]
 
 
+def _scatter_by_val_idx(total, out, val_idx, nnz_count):
+    """Permuted value-region assembly: scatter per-color leaf outputs
+    (scalar slots or (br, bc) tiles) home by their ``val_idx`` map —
+    global storage positions recorded by a permuted (transpose) walk or a
+    non-contiguous grid tiling. Padding slots are masked by ``nnz_count``.
+    The trace-side twin of executor._assemble_vals."""
+    mask = (jnp.arange(out.shape[1])[None, :]
+            < nnz_count[:, None]).astype(out.dtype)
+    idx = jnp.clip(val_idx, 0, max(total - 1, 0)).reshape(-1)
+    m = mask.reshape(mask.shape + (1,) * (out.ndim - 2))
+    flat = (out * m).reshape((-1,) + out.shape[2:])
+    return jnp.zeros((total,) + out.shape[2:], out.dtype).at[idx].add(flat)
+
+
 # ---------------------------------------------------------------------------
 # Format dispatch: which kernel family handles a signature, and whether it
 # supports a sparse operand's format directly (queried from the kernel
@@ -522,6 +537,12 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
             shards[name] = (materialize_bcsr_nnz(t, plan)
                             if t.format.is_blocked
                             else materialize_coo_nnz(t, plan))
+        elif (t.format.is_sparse and not t.format.is_blocked
+                and t.order >= 3 and t.format.levels[1].singleton):
+            # trailing-singleton trees (COO3) have no grouped middle level:
+            # the universe row plan materializes the FLAT walk (coordinate
+            # columns bucketed by row window) and the flat leaves consume it
+            shards[name] = materialize_coo_nnz(t, plan)
         elif t.format.is_all_dense:
             shards[name] = materialize_dense_rows(t, plan.root_coord_bounds)
         elif t.format.is_blocked:
@@ -541,7 +562,14 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
 
     if strat.space == "nnz" and (sig, strat.space) not in _SELF_MATERIALIZING:
         ov = plans[next(iter(plans))]  # position tensor plan
-        if ov.tensor.format.is_blocked:
+        if ov.tensor.format.dim_of_level(0) != 0:
+            # storage root doesn't track output rows (CSC, BCSC): every
+            # color reduces a FULL-extent output partial (see
+            # _nnz_row_windows / _bcsr_nnz_windows). reduce_bytes is the
+            # per-reduction payload; total_network_bytes multiplies by
+            # (pieces-1).
+            comm.reduce_bytes += _nbytes(out_t)
+        elif ov.tensor.format.is_blocked:
             # overlapping BLOCK-rows reduce across colors; the payload per
             # overlapped block-row is its br-row output stripe
             bb = ov.levels[0].coord_bounds
@@ -550,12 +578,6 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
                 (bb[:, 1] - bb[:, 0]).sum()
                 - (bb[:, 1].max() - bb[:, 0].min())
             ) * br * 4
-        elif ov.tensor.format.dim_of_level(0) != 0:
-            # storage root doesn't track output rows (CSC): every color
-            # reduces a FULL-extent output partial (see _nnz_row_windows).
-            # reduce_bytes is the per-reduction payload; total_network_bytes
-            # multiplies by (pieces-1).
-            comm.reduce_bytes += _nbytes(out_t)
         else:
             # overlapping output rows reduced across colors
             comm.reduce_bytes += int(
@@ -626,14 +648,15 @@ def _compute_plans(stmt: Assignment, strat: DistStrategy, out_t: Tensor,
         # coordinate-value loop -> createInitialUniversePartitions
         n = stmt.var_extent(dist_var)
         bounds = partition_by_bounds(n, pieces)
-        # A blocked root-partitioned operand snaps the universe split to
-        # block-row boundaries so EVERY co-partitioned tensor (dense row
-        # operands, the output) shares the same per-color row windows.
+        # A blocked operand distributed on its row dimension snaps the
+        # universe split to block-row boundaries so EVERY co-partitioned
+        # tensor (dense row operands, the output) shares the same per-color
+        # row windows — whichever level stores the rows (BCSR and BCSC).
         for acc in stmt.rhs.accesses():
             t = acc.tensor
             if (t.format.is_sparse and t.format.is_blocked
                     and dist_var in acc.idx
-                    and t.format.level_of_dim(acc.idx.index(dist_var)) == 0):
+                    and acc.idx.index(dist_var) == 0):
                 bounds = block_aligned_row_bounds(
                     n, pieces, t.format.block_shape[0])
                 break
@@ -644,6 +667,12 @@ def _compute_plans(stmt: Assignment, strat: DistStrategy, out_t: Tensor,
             if dist_var in acc.idx:
                 lvl_dim = acc.idx.index(dist_var)
                 if t.format.level_of_dim(lvl_dim) == 0:
+                    # distributed dim at the storage root: the image chain
+                    plans[t.name] = partition_tensor_rows(t, bounds)
+                    continue
+                if lvl_dim == 0 and t.format.is_sparse:
+                    # column-major root (CSC/BCSC): the transpose walk
+                    # realizes the same row windows (partition routes it)
                     plans[t.name] = partition_tensor_rows(t, bounds)
                     continue
             # not indexed by the distributed var at the root -> communicate
@@ -796,58 +825,27 @@ def default_grid_nnz_schedule(stmt: Assignment, machine: Machine) -> Schedule:
     return s
 
 
+
+
 # ---------------------------------------------------------------------------
-# Leaf emission — the specialization table (expression × strategy × format)
+# Leaf emission — ONE format-generic emitter per expression × strategy,
+# parameterized by the operands' LEVEL TREES (core/levels.py). An emitter
+# never asks "which format?"; it asks the tree which walk the shards were
+# materialized from — blocked (tile leaves), grouped (pos/crd leaves), flat
+# trailing-singleton (coordinate-column leaves) — and whether the walk was
+# permuted (``val_idx`` scatter maps from the transpose walk). Every
+# emitter returns ``(leaf_name, runner)``; the leaf name records the
+# selected leaf family and is the SPMD builder dispatch key
+# (distributed/executor.py SPMD_BUILDERS).
 # ---------------------------------------------------------------------------
 
 def _emit(stmt, strat, plans, shards, jit=True) -> Tuple[str, Callable]:
     sig = stmt.signature()
-    space = strat.space
-    key = (sig, space)
-    table = {
-        ("d1(i)=s2(i,j)*d1(j)", "universe"): _emit_spmv_rows,
-        ("d1(i)=s2(i,j)*d1(j)", "nnz"): _emit_spmv_nnz,
-        ("d2(i,j)=s2(i,k)*d2(k,j)", "universe"): _emit_spmm_rows,
-        ("d2(i,j)=s2(i,k)*d2(k,j)", "nnz"): _emit_spmm_nnz,
-        ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "universe"): _emit_spadd3_rows,
-        ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "nnz"): _emit_spadd3_nnz,
-        ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "universe"): _emit_sddmm_rows,
-        ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "nnz"): _emit_sddmm_nnz,
-        ("s2(i,j)=s3(i,j,k)*d1(k)", "universe"): _emit_spttv_rows,
-        ("s2(i,j)=s3(i,j,k)*d1(k)", "nnz"): _emit_spttv_nnz,
-        ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "universe"): _emit_spmttkrp_rows,
-        ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "nnz"): _emit_spmttkrp_nnz,
-    }
-    # Blocked sparse operands route to the direct blocked (BCSR) leaves —
-    # the format-specialized column of the table (paper: one leaf per
-    # expression × strategy × format point).
-    primary = None
-    for acc in stmt.rhs.accesses():
-        if acc.tensor.format.is_sparse:
-            primary = acc.tensor
-            break
-    if primary is not None and primary.format.is_blocked:
-        table = {
-            ("d1(i)=s2(i,j)*d1(j)", "universe"): _emit_bcsr_spmv_rows,
-            ("d1(i)=s2(i,j)*d1(j)", "nnz"): _emit_bcsr_spmv_nnz,
-            ("d2(i,j)=s2(i,k)*d2(k,j)", "universe"): _emit_bcsr_spmm_rows,
-            ("d2(i,j)=s2(i,k)*d2(k,j)", "nnz"): _emit_bcsr_spmm_nnz,
-            ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "universe"):
-                _emit_bcsr_spadd3_rows,
-            ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "nnz"):
-                _emit_bcsr_spadd3_nnz,
-            ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "universe"):
-                _emit_bcsr_sddmm_rows,
-            ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "nnz"): _emit_bcsr_sddmm_nnz,
-        }
-    emitter = table.get(key)
+    emitter = _EMITTERS.get((sig, strat.space))
     if emitter is None:
-        emitter = _emit_generic_fallback
-        name = f"generic[{sig}|{space}]"
-    else:
-        name = emitter.__name__.replace("_emit_", "")
-    runner = emitter(stmt, strat, plans, shards, jit=jit)
-    return name, runner
+        return (f"generic[{sig}|{strat.space}]",
+                _emit_generic_fallback(stmt, strat, plans, shards, jit=jit))
+    return emitter(stmt, strat, plans, shards, jit=jit)
 
 
 def _runner(jit, name, static, arrays, build):
@@ -865,11 +863,61 @@ def _runner(jit, name, static, arrays, build):
     return _RUNNER_CACHE.get_or_build(key, lambda: jax.jit(build()))
 
 
+def _nnz_row_windows(B: ShardedTensor, n: int):
+    """Row-window parameters for a flat (coordinate-column) shard set.
+    When the storage root tracks output rows — row-major nnz splits AND
+    universe flat walks, whose windows are then disjoint — leaves compute
+    into the shard's root window; otherwise (CSC) every shard computes a
+    full-extent partial and the scatter reduces the overlap."""
+    a = B.arrays
+    if B.meta.get("root_dim", 0) == 0 and B.meta["max_rows"] > 0:
+        return a["row_start"], a["row_count"], int(B.meta["max_rows"])
+    pieces = B.pieces
+    row_start = jnp.zeros((pieces,), dtype=jnp.int32)
+    row_count = jnp.full((pieces,), n, dtype=jnp.int32)
+    return row_start, row_count, int(n)
+
+
+def _bcsr_nnz_windows(B: ShardedTensor):
+    """Block-row window parameters for a blocked nnz shard set. Column-
+    major roots (BCSC — the root tracks block-columns) and empty shard
+    sets fall back to full-grid windows, so leaves reduce over the whole
+    block grid and clip bounds / segment counts stay positive."""
+    a = B.arrays
+    max_brows = int(B.meta["max_brows"])
+    if B.meta.get("root_dim", 0) == 0 and max_brows > 0:
+        return a["brow_start"], a["row_start"], a["row_count"], max_brows
+    pieces = B.pieces
+    n = int(B.meta["n_rows"])
+    brow_start = jnp.zeros((pieces,), dtype=jnp.int32)
+    row_start = jnp.zeros((pieces,), dtype=jnp.int32)
+    row_count = jnp.full((pieces,), n, dtype=jnp.int32)
+    return brow_start, row_start, row_count, max(int(B.meta["grid_rows"]), 1)
+
+
+# -- SpMV -------------------------------------------------------------------
+
 def _emit_spmv_rows(stmt, strat, plans, shards, jit=True):
-    B = shards[stmt.rhs.accesses()[0].tensor.name]
+    Bt = stmt.rhs.accesses()[0].tensor
+    B = shards[Bt.name]
     c = shards[stmt.rhs.accesses()[1].tensor.name]
     n = stmt.lhs.tensor.shape[0]
     a = B.arrays
+    if levels.tree_of(Bt).blocked:
+        c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
+                                int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+        def fn(pos, crd, tiles, cb, row_start, row_count):
+            blocks = jax.vmap(K.leaf_bcsr_spmv_rows,
+                              in_axes=(0, 0, 0, None))(
+                pos, crd, tiles, cb)                 # (P, max_brows * br)
+            return _scatter_rows((n,), blocks, row_start, row_count)
+
+        args = (a["pos1"], a["crd1"], a["vals"], c_blk,
+                a["row_start"], a["row_count"])
+        f = _runner(jit, "bcsr_spmv_rows", (n,), args, lambda: fn)
+        return "bcsr_spmv_rows", lambda: np.asarray(f(*args))
+
     cv = c.arrays["vals"]
 
     def fn(pos, crd, vals, cvec, row_start, row_count):
@@ -880,28 +928,32 @@ def _emit_spmv_rows(stmt, strat, plans, shards, jit=True):
     args = (a["pos1"], a["crd1"], a["vals"], cv,
             a["row_start"], a["row_count"])
     f = _runner(jit, "spmv_rows", (n,), args, lambda: fn)
-    return lambda: np.asarray(f(*args))
-
-
-def _nnz_row_windows(B: ShardedTensor, n: int):
-    """Row-window parameters for a coo_nnz shard set. When the storage root
-    tracks output rows (row-major trees) leaves compute into the shard's
-    root window; otherwise (CSC) every shard computes a full-extent partial
-    and the scatter reduces the overlap."""
-    a = B.arrays
-    if B.meta.get("root_dim", 0) == 0 and B.meta["max_rows"] > 0:
-        return a["row_start"], a["row_count"], int(B.meta["max_rows"])
-    pieces = B.pieces
-    row_start = jnp.zeros((pieces,), dtype=jnp.int32)
-    row_count = jnp.full((pieces,), n, dtype=jnp.int32)
-    return row_start, row_count, int(n)
+    return "spmv_rows", lambda: np.asarray(f(*args))
 
 
 def _emit_spmv_nnz(stmt, strat, plans, shards, jit=True):
-    B = shards[stmt.rhs.accesses()[0].tensor.name]
+    Bt = stmt.rhs.accesses()[0].tensor
+    B = shards[Bt.name]
     c = shards[stmt.rhs.accesses()[1].tensor.name]
     n = stmt.lhs.tensor.shape[0]
     a = B.arrays
+    if levels.tree_of(Bt).blocked:
+        brow_start, row_start, row_count, max_brows = _bcsr_nnz_windows(B)
+        c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
+                                int(B.meta["grid_cols"]), int(B.meta["bc"]))
+
+        def fn(bd0, bd1, tiles, cb, brow_start, row_start, row_count):
+            rl = jnp.clip(bd0 - brow_start[:, None], 0, max_brows - 1)
+            blocks = jax.vmap(
+                K.leaf_bcsr_spmv_nnz, in_axes=(0, 0, 0, None, None))(
+                rl, bd1, tiles, cb, max_brows)       # (P, max_brows * br)
+            return _scatter_rows((n,), blocks, row_start, row_count)
+
+        args = (a["bdim0"], a["bdim1"], a["vals"], c_blk,
+                brow_start, row_start, row_count)
+        f = _runner(jit, "bcsr_spmv_nnz", (n, max_brows), args, lambda: fn)
+        return "bcsr_spmv_nnz", lambda: np.asarray(f(*args))
+
     row_start, row_count, max_rows = _nnz_row_windows(B, n)
     cv = c.arrays["vals"]
 
@@ -913,14 +965,32 @@ def _emit_spmv_nnz(stmt, strat, plans, shards, jit=True):
 
     args = (a["dim0"], a["dim1"], a["vals"], cv, row_start, row_count)
     f = _runner(jit, "spmv_nnz", (n, max_rows), args, lambda: fn)
-    return lambda: np.asarray(f(*args))
+    return "spmv_nnz", lambda: np.asarray(f(*args))
 
+
+# -- SpMM -------------------------------------------------------------------
 
 def _emit_spmm_rows(stmt, strat, plans, shards, jit=True):
     Bacc, Cacc = stmt.rhs.accesses()
     B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
     out_shape = stmt.lhs.tensor.shape
     a = B.arrays
+    if levels.tree_of(Bacc.tensor).blocked:
+        C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                    int(B.meta["grid_cols"]),
+                                    int(B.meta["bc"]))
+
+        def fn(pos, crd, tiles, Cb, row_start, row_count):
+            blocks = jax.vmap(K.leaf_bcsr_spmm_rows,
+                              in_axes=(0, 0, 0, None))(
+                pos, crd, tiles, Cb)                 # (P, max_brows*br, J)
+            return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+        args = (a["pos1"], a["crd1"], a["vals"], C_blk,
+                a["row_start"], a["row_count"])
+        f = _runner(jit, "bcsr_spmm_rows", out_shape, args, lambda: fn)
+        return "bcsr_spmm_rows", lambda: np.asarray(f(*args))
+
     Cv = C.arrays["vals"]
 
     def fn(pos, crd, vals, Cmat, row_start, row_count):
@@ -931,7 +1001,7 @@ def _emit_spmm_rows(stmt, strat, plans, shards, jit=True):
     args = (a["pos1"], a["crd1"], a["vals"], Cv,
             a["row_start"], a["row_count"])
     f = _runner(jit, "spmm_rows", out_shape, args, lambda: fn)
-    return lambda: np.asarray(f(*args))
+    return "spmm_rows", lambda: np.asarray(f(*args))
 
 
 def _emit_spmm_nnz(stmt, strat, plans, shards, jit=True):
@@ -939,6 +1009,25 @@ def _emit_spmm_nnz(stmt, strat, plans, shards, jit=True):
     B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
     out_shape = stmt.lhs.tensor.shape
     a = B.arrays
+    if levels.tree_of(Bacc.tensor).blocked:
+        brow_start, row_start, row_count, max_brows = _bcsr_nnz_windows(B)
+        C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                    int(B.meta["grid_cols"]),
+                                    int(B.meta["bc"]))
+
+        def fn(bd0, bd1, tiles, Cb, brow_start, row_start, row_count):
+            rl = jnp.clip(bd0 - brow_start[:, None], 0, max_brows - 1)
+            blocks = jax.vmap(
+                K.leaf_bcsr_spmm_nnz, in_axes=(0, 0, 0, None, None))(
+                rl, bd1, tiles, Cb, max_brows)
+            return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+        args = (a["bdim0"], a["bdim1"], a["vals"], C_blk,
+                brow_start, row_start, row_count)
+        f = _runner(jit, "bcsr_spmm_nnz", out_shape + (max_brows,), args,
+                    lambda: fn)
+        return "bcsr_spmm_nnz", lambda: np.asarray(f(*args))
+
     row_start, row_count, max_rows = _nnz_row_windows(B, out_shape[0])
     Cv = C.arrays["vals"]
 
@@ -950,13 +1039,51 @@ def _emit_spmm_nnz(stmt, strat, plans, shards, jit=True):
 
     args = (a["dim0"], a["dim1"], a["vals"], Cv, row_start, row_count)
     f = _runner(jit, "spmm_nnz", out_shape + (max_rows,), args, lambda: fn)
-    return lambda: np.asarray(f(*args))
+    return "spmm_nnz", lambda: np.asarray(f(*args))
 
+
+# -- SpAdd3 -----------------------------------------------------------------
 
 def _emit_spadd3_rows(stmt, strat, plans, shards, jit=True):
+    """Fused three-way add over shared row windows. Scalar trees: two-phase
+    coordinate union per shard, host assembly into CSR. Blocked trees:
+    tile union at block granularity (duplicate blocks merge by summing
+    (br, bc) tiles), host assembly with Tensor.from_blocks — the output
+    format follows the inputs' blocked format. Transpose-walked shards
+    (CSC/BCSC) feed the SAME leaves: the walk already delivered row-window
+    locality."""
     accs = stmt.rhs.accesses()
     Bs = [shards[acc.tensor.name] for acc in accs]
+    Bt = accs[0].tensor
     n_rows, n_cols = stmt.lhs.tensor.shape
+    if levels.tree_of(Bt).blocked:
+        br, bc = int(Bs[0].meta["br"]), int(Bs[0].meta["bc"])
+
+        def fn(args):
+            (p1, c1, t1), (p2, c2, t2), (p3, c3, t3) = args
+            return jax.vmap(K.leaf_bcsr_spadd3_rows)(
+                p1, c1, t1, p2, c2, t2, p3, c3, t3)
+
+        args = tuple((S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"])
+                     for S in Bs)
+        flat = tuple(x for trip in args for x in trip)
+        f = _runner(jit, "bcsr_spadd3_rows", (n_rows, n_cols, br, bc), flat,
+                    lambda: fn)
+
+        def run():
+            rows, cols, tiles, counts = (np.asarray(x) for x in f(args))
+            brs = np.asarray(Bs[0].arrays["brow_start"])
+            out_coords, out_tiles = [], []
+            for p in range(rows.shape[0]):
+                k = int(counts[p])
+                out_coords.append(
+                    np.stack([rows[p, :k] + brs[p], cols[p, :k]], axis=1))
+                out_tiles.append(tiles[p, :k])
+            return Tensor.from_blocks(
+                stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
+                np.concatenate(out_coords), np.concatenate(out_tiles),
+                dedupe=False)    # block-row windows are disjoint
+        return "bcsr_spadd3_rows", run
 
     def fn(args):
         (p1, c1, v1), (p2, c2, v2), (p3, c3, v3) = args
@@ -978,12 +1105,13 @@ def _emit_spadd3_rows(stmt, strat, plans, shards, jit=True):
             out_rows.append(rows[p, :k] + rs[p])
             out_cols.append(cols[p, :k])
             out_vals.append(vals[p, :k])
-        coords = np.stack([np.concatenate(out_rows), np.concatenate(out_cols)], 1)
+        coords = np.stack([np.concatenate(out_rows),
+                           np.concatenate(out_cols)], 1)
         return Tensor.from_coo(stmt.lhs.tensor.name, (n_rows, n_cols),
                                coords, np.concatenate(out_vals),
                                fmt.CSR(), dedupe=True)
 
-    return run
+    return "spadd3_rows", run
 
 
 def _emit_spadd3_nnz(stmt, strat, plans, shards, jit=True):
@@ -993,14 +1121,47 @@ def _emit_spadd3_nnz(stmt, strat, plans, shards, jit=True):
     union position space is the natural fused space). The packed chunks
     come from the materialization layer (``materialize_add_stream``, keyed
     ``_addstream`` in the shard set) so a straggler re-plan re-slices a
-    cached stream instead of re-walking the operands. Each color's leaf
-    performs the two-phase union on its chunk; host assembly merges
-    boundary-straddling duplicates in from_coo(dedupe=True)."""
+    cached stream instead of re-walking the operands. Scalar trees union
+    coordinates, blocked trees union whole tiles; boundary-straddling
+    duplicates merge in the host assembly's dedupe."""
+    Bt = stmt.rhs.accesses()[0].tensor
     n_rows, n_cols = stmt.lhs.tensor.shape
     pieces = strat.pieces
     S = shards["_addstream"]
     a = S.arrays
     max_c = int(S.meta["max_nnz"])
+    if levels.tree_of(Bt).blocked:
+        gr = int(S.meta["grid_rows"])
+        br, bc = int(S.meta["br"]), int(S.meta["bc"])
+
+        def fn(bd0, bd1, tiles, cnt):
+            leaf = partial(K.leaf_bcsr_spadd_union_chunk, n_brows=gr)
+            return jax.vmap(leaf)(bd0, bd1, tiles, cnt)
+
+        f = _runner(jit, "bcsr_spadd3_nnz", (gr, br, bc),
+                    (a["dim0"], a["dim1"], a["vals"], a["nnz_count"]),
+                    lambda: fn)
+
+        def run():
+            if max_c == 0:
+                return Tensor.from_blocks(
+                    stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
+                    np.zeros((0, 2), np.int64),
+                    np.zeros((0, br, bc), np.float32))
+            rows, cols, tiles, counts = (np.asarray(x) for x in
+                                         f(a["dim0"], a["dim1"], a["vals"],
+                                           jnp.asarray(a["nnz_count"])))
+            out_coords, out_tiles = [], []
+            for p in range(rows.shape[0]):
+                k = int(counts[p])
+                out_coords.append(
+                    np.stack([rows[p, :k], cols[p, :k]], axis=1))
+                out_tiles.append(tiles[p, :k])
+            return Tensor.from_blocks(
+                stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
+                np.concatenate(out_coords), np.concatenate(out_tiles),
+                dedupe=True)
+        return "bcsr_spadd3_nnz", run
 
     def fn(rows, cols, v, cnt):
         leaf = partial(K.leaf_spadd_union_chunk, n_rows=n_rows)
@@ -1030,40 +1191,100 @@ def _emit_spadd3_nnz(stmt, strat, plans, shards, jit=True):
                                coords_out, np.concatenate(out_v),
                                fmt.CSR(), dedupe=True)
 
-    return run
+    return "spadd3_nnz", run
 
+
+# -- SDDMM ------------------------------------------------------------------
 
 def _emit_sddmm_rows(stmt, strat, plans, shards, jit=True):
     """Row-based SDDMM: B and C's matching row block local per color, D
-    replicated; output vals stay aligned with B's positions and scatter
-    back by the value-space bounds (pattern-preserving universe strategy)."""
+    replicated; output vals stay aligned with B's stored positions
+    (pattern-preserving universe strategy). Ordered walks scatter back by
+    value-space intervals; transpose-walked shards (CSC/BCSC) scatter home
+    through their ``val_idx`` permutation instead."""
     accs = stmt.rhs.accesses()
     B = shards[accs[0].tensor.name]
     C = shards[accs[1].tensor.name]
     D = shards[accs[2].tensor.name]
     Bt = accs[0].tensor
     a = B.arrays
+    if levels.tree_of(Bt).blocked:
+        br, bc = int(B.meta["br"]), int(B.meta["bc"])
+        max_brows = int(B.meta["max_brows"])
+        # local C row blocks: pad the per-color row windows to the block grid
+        C_blk = pack_rowwindow_blocks(C.arrays["vals"], max_brows, br)
+        D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
+                                      int(B.meta["grid_cols"]), bc)
+        total_blocks = int(Bt.levels[1].nnz or 0)
+        if "val_idx" in a:
+            def fn(pos, crd, tiles, Cl, Db, val_idx, nnz_count):
+                def leaf(pos_, crd_, tiles_, Cl_):
+                    brow = K.rows_from_pos(pos_, crd_.shape[0])
+                    return K.leaf_bcsr_sddmm(brow, crd_, tiles_, Cl_, Db)
+                out = jax.vmap(leaf)(pos, crd, tiles, Cl)
+                return _scatter_by_val_idx(total_blocks, out, val_idx,
+                                           nnz_count)
+
+            args = (a["pos1"], a["crd1"], a["vals"], C_blk, D_blk,
+                    a["val_idx"], a["nnz_count"])
+            f = _runner(jit, "bcsr_sddmm_rows", (total_blocks, br, bc),
+                        args, lambda: fn)
+        else:
+            vb = plans[Bt.name].vals_bounds
+            nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
+            nnz_count = jnp.asarray((vb[:, 1] - vb[:, 0]).astype(np.int32))
+
+            def fn(pos, crd, tiles, Cl, Db, nnz_start, nnz_count):
+                def leaf(pos_, crd_, tiles_, Cl_):
+                    brow = K.rows_from_pos(pos_, crd_.shape[0])
+                    return K.leaf_bcsr_sddmm(brow, crd_, tiles_, Cl_, Db)
+                out = jax.vmap(leaf)(pos, crd, tiles, Cl)
+                return _scatter_block_vals(total_blocks, out, nnz_start,
+                                           nnz_count)
+
+            args = (a["pos1"], a["crd1"], a["vals"], C_blk, D_blk,
+                    nnz_start, nnz_count)
+            f = _runner(jit, "bcsr_sddmm_rows", (total_blocks,), args,
+                        lambda: fn)
+
+        def run():
+            new_tiles = np.asarray(f(*args))
+            return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format,
+                          Bt.levels, new_tiles, Bt.dtype)
+        return "bcsr_sddmm_rows", run
+
     Cv = C.arrays["vals"]                   # (P, max_rows, K) row blocks
     Dv = D.arrays["vals"]                   # (K, m) replicated
-    vb = plans[Bt.name].vals_bounds
     total_nnz = Bt.nnz
-    nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
-    nnz_count = jnp.asarray((vb[:, 1] - vb[:, 0]).astype(np.int32))
+    if "val_idx" in a:
+        def fn(pos, crd, vals, Cl, Dm, val_idx, nnz_count):
+            out = jax.vmap(K.leaf_sddmm_rows, in_axes=(0, 0, 0, 0, None))(
+                pos, crd, vals, Cl, Dm)
+            return _scatter_by_val_idx(total_nnz, out, val_idx, nnz_count)
 
-    def fn(pos, crd, vals, Cl, Dm, nnz_start, nnz_count):
-        out = jax.vmap(K.leaf_sddmm_rows, in_axes=(0, 0, 0, 0, None))(
-            pos, crd, vals, Cl, Dm)
-        return _scatter_vals(total_nnz, out, nnz_start, nnz_count)
+        args = (a["pos1"], a["crd1"], a["vals"], Cv, Dv, a["val_idx"],
+                a["nnz_count"])
+        f = _runner(jit, "sddmm_rows", (total_nnz,), args, lambda: fn)
+    else:
+        vb = plans[Bt.name].vals_bounds
+        nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
+        nnz_count = jnp.asarray((vb[:, 1] - vb[:, 0]).astype(np.int32))
 
-    args = (a["pos1"], a["crd1"], a["vals"], Cv, Dv, nnz_start, nnz_count)
-    f = _runner(jit, "sddmm_rows", (total_nnz,), args, lambda: fn)
+        def fn(pos, crd, vals, Cl, Dm, nnz_start, nnz_count):
+            out = jax.vmap(K.leaf_sddmm_rows, in_axes=(0, 0, 0, 0, None))(
+                pos, crd, vals, Cl, Dm)
+            return _scatter_vals(total_nnz, out, nnz_start, nnz_count)
+
+        args = (a["pos1"], a["crd1"], a["vals"], Cv, Dv, nnz_start,
+                nnz_count)
+        f = _runner(jit, "sddmm_rows", (total_nnz,), args, lambda: fn)
 
     def run():
         new_vals = np.asarray(f(*args))
         return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
                       new_vals, Bt.dtype)
 
-    return run
+    return "sddmm_rows", run
 
 
 def _emit_sddmm_nnz(stmt, strat, plans, shards, jit=True):
@@ -1071,12 +1292,37 @@ def _emit_sddmm_nnz(stmt, strat, plans, shards, jit=True):
     B = shards[accs[0].tensor.name]
     C = shards[accs[1].tensor.name]
     D = shards[accs[2].tensor.name]
-    a = B.arrays
     Bt = accs[0].tensor
-    Cv, Dv = C.arrays["vals"], D.arrays["vals"]
+    a = B.arrays
     vb = plans[Bt.name].vals_bounds
-    total_nnz = Bt.nnz
     nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
+    if levels.tree_of(Bt).blocked:
+        br, bc = int(B.meta["br"]), int(B.meta["bc"])
+        C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
+                                    int(B.meta["grid_rows"]), br)
+        D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
+                                      int(B.meta["grid_cols"]), bc)
+        total_blocks = int(Bt.levels[1].nnz or 0)
+
+        def fn(bd0, bd1, tiles, Cb, Db, counts, nnz_start):
+            out = jax.vmap(K.leaf_bcsr_sddmm,
+                           in_axes=(0, 0, 0, None, None))(
+                bd0, bd1, tiles, Cb, Db)
+            return _scatter_block_vals(total_blocks, out, nnz_start, counts)
+
+        args = (a["bdim0"], a["bdim1"], a["vals"], C_blk, D_blk,
+                a["nnz_count"], nnz_start)
+        f = _runner(jit, "bcsr_sddmm_nnz", (total_blocks,), args,
+                    lambda: fn)
+
+        def run():
+            new_tiles = np.asarray(f(*args))
+            return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format,
+                          Bt.levels, new_tiles, Bt.dtype)
+        return "bcsr_sddmm_nnz", run
+
+    Cv, Dv = C.arrays["vals"], D.arrays["vals"]
+    total_nnz = Bt.nnz
 
     def fn(rows, cols, vals, Cm, Dm, counts, nnz_start):
         out = jax.vmap(K.leaf_sddmm_nnz, in_axes=(0, 0, 0, None, None))(
@@ -1093,280 +1339,66 @@ def _emit_sddmm_nnz(stmt, strat, plans, shards, jit=True):
         return Tensor(out.name, Bt.shape, Bt.format, Bt.levels, new_vals,
                       Bt.dtype)
 
-    return run
+    return "sddmm_nnz", run
 
 
-# ---------------------------------------------------------------------------
-# Direct blocked (BCSR) emitters — no conversion, no scalarization: the
-# shards carry (br, bc) value tiles and the leaves contract them as dense
-# tile matmuls (kernels/ref.py leaf_bcsr_*, kernels/bcsr.py on TPU).
-# ---------------------------------------------------------------------------
+# -- SpTTV ------------------------------------------------------------------
 
-def _bcsr_nnz_windows(B: ShardedTensor):
-    """Block-row window parameters for a bcsr_nnz shard set; empty shard
-    sets (all-zero operand) fall back to full-grid windows so clip bounds
-    and segment counts stay positive."""
-    a = B.arrays
-    max_brows = int(B.meta["max_brows"])
-    if max_brows > 0:
-        return a["brow_start"], a["row_start"], a["row_count"], max_brows
-    pieces = B.pieces
-    n = int(B.meta["n_rows"])
-    brow_start = jnp.zeros((pieces,), dtype=jnp.int32)
-    row_start = jnp.zeros((pieces,), dtype=jnp.int32)
-    row_count = jnp.full((pieces,), n, dtype=jnp.int32)
-    return brow_start, row_start, row_count, max(int(B.meta["grid_rows"]), 1)
-
-
-def _emit_bcsr_spmv_rows(stmt, strat, plans, shards, jit=True):
-    B = shards[stmt.rhs.accesses()[0].tensor.name]
-    c = shards[stmt.rhs.accesses()[1].tensor.name]
-    n = stmt.lhs.tensor.shape[0]
-    a = B.arrays
-    c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
-                            int(B.meta["grid_cols"]), int(B.meta["bc"]))
-
-    def fn(pos, crd, tiles, cb, row_start, row_count):
-        blocks = jax.vmap(K.leaf_bcsr_spmv_rows, in_axes=(0, 0, 0, None))(
-            pos, crd, tiles, cb)                 # (P, max_brows * br)
-        return _scatter_rows((n,), blocks, row_start, row_count)
-
-    args = (a["pos1"], a["crd1"], a["vals"], c_blk,
-            a["row_start"], a["row_count"])
-    f = _runner(jit, "bcsr_spmv_rows", (n,), args, lambda: fn)
-    return lambda: np.asarray(f(*args))
-
-
-def _emit_bcsr_spmv_nnz(stmt, strat, plans, shards, jit=True):
-    B = shards[stmt.rhs.accesses()[0].tensor.name]
-    c = shards[stmt.rhs.accesses()[1].tensor.name]
-    n = stmt.lhs.tensor.shape[0]
-    a = B.arrays
-    brow_start, row_start, row_count, max_brows = _bcsr_nnz_windows(B)
-    c_blk = pack_vec_blocks(np.asarray(c.arrays["vals"]),
-                            int(B.meta["grid_cols"]), int(B.meta["bc"]))
-
-    def fn(bd0, bd1, tiles, cb, brow_start, row_start, row_count):
-        rl = jnp.clip(bd0 - brow_start[:, None], 0, max_brows - 1)
-        blocks = jax.vmap(
-            K.leaf_bcsr_spmv_nnz, in_axes=(0, 0, 0, None, None))(
-            rl, bd1, tiles, cb, max_brows)       # (P, max_brows * br)
-        return _scatter_rows((n,), blocks, row_start, row_count)
-
-    args = (a["bdim0"], a["bdim1"], a["vals"], c_blk,
-            brow_start, row_start, row_count)
-    f = _runner(jit, "bcsr_spmv_nnz", (n, max_brows), args, lambda: fn)
-    return lambda: np.asarray(f(*args))
-
-
-def _emit_bcsr_spmm_rows(stmt, strat, plans, shards, jit=True):
-    Bacc, Cacc = stmt.rhs.accesses()
-    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
-    out_shape = stmt.lhs.tensor.shape
-    a = B.arrays
-    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
-                                int(B.meta["grid_cols"]), int(B.meta["bc"]))
-
-    def fn(pos, crd, tiles, Cb, row_start, row_count):
-        blocks = jax.vmap(K.leaf_bcsr_spmm_rows, in_axes=(0, 0, 0, None))(
-            pos, crd, tiles, Cb)                 # (P, max_brows * br, J)
-        return _scatter_rows(out_shape, blocks, row_start, row_count)
-
-    args = (a["pos1"], a["crd1"], a["vals"], C_blk,
-            a["row_start"], a["row_count"])
-    f = _runner(jit, "bcsr_spmm_rows", out_shape, args, lambda: fn)
-    return lambda: np.asarray(f(*args))
-
-
-def _emit_bcsr_spmm_nnz(stmt, strat, plans, shards, jit=True):
-    Bacc, Cacc = stmt.rhs.accesses()
-    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
-    out_shape = stmt.lhs.tensor.shape
-    a = B.arrays
-    brow_start, row_start, row_count, max_brows = _bcsr_nnz_windows(B)
-    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
-                                int(B.meta["grid_cols"]), int(B.meta["bc"]))
-
-    def fn(bd0, bd1, tiles, Cb, brow_start, row_start, row_count):
-        rl = jnp.clip(bd0 - brow_start[:, None], 0, max_brows - 1)
-        blocks = jax.vmap(
-            K.leaf_bcsr_spmm_nnz, in_axes=(0, 0, 0, None, None))(
-            rl, bd1, tiles, Cb, max_brows)
-        return _scatter_rows(out_shape, blocks, row_start, row_count)
-
-    args = (a["bdim0"], a["bdim1"], a["vals"], C_blk,
-            brow_start, row_start, row_count)
-    f = _runner(jit, "bcsr_spmm_nnz", out_shape + (max_brows,), args,
-                lambda: fn)
-    return lambda: np.asarray(f(*args))
-
-
-def _emit_bcsr_sddmm_rows(stmt, strat, plans, shards, jit=True):
-    """Blocked row-based SDDMM: B's shard tiles sampled against the local C
-    row blocks and replicated D column blocks; output tiles stay aligned
-    with B's stored block positions (pattern-preserving at block
-    granularity)."""
-    accs = stmt.rhs.accesses()
-    B = shards[accs[0].tensor.name]
-    C = shards[accs[1].tensor.name]
-    D = shards[accs[2].tensor.name]
-    Bt = accs[0].tensor
-    a = B.arrays
-    br, bc = int(B.meta["br"]), int(B.meta["bc"])
-    max_brows = int(B.meta["max_brows"])
-    # local C row blocks: pad the per-color row windows to the block grid
-    C_blk = pack_rowwindow_blocks(C.arrays["vals"], max_brows, br)
-    D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
-                                  int(B.meta["grid_cols"]), bc)
-    vb = plans[Bt.name].vals_bounds
-    total_blocks = int(Bt.levels[1].nnz or 0)
-    nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
-    nnz_count = jnp.asarray((vb[:, 1] - vb[:, 0]).astype(np.int32))
-
-    def fn(pos, crd, tiles, Cl, Db, nnz_start, nnz_count):
-        def leaf(pos, crd, tiles, Cl):
-            brow = K.rows_from_pos(pos, crd.shape[0])
-            return K.leaf_bcsr_sddmm(brow, crd, tiles, Cl, Db)
-        out = jax.vmap(leaf)(pos, crd, tiles, Cl)   # (P, max_bnnz, br, bc)
-        return _scatter_block_vals(total_blocks, out, nnz_start, nnz_count)
-
-    args = (a["pos1"], a["crd1"], a["vals"], C_blk, D_blk,
-            nnz_start, nnz_count)
-    f = _runner(jit, "bcsr_sddmm_rows", (total_blocks,), args, lambda: fn)
-
-    def run():
-        new_tiles = np.asarray(f(*args))
-        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
-                      new_tiles, Bt.dtype)
-
-    return run
-
-
-def _emit_bcsr_sddmm_nnz(stmt, strat, plans, shards, jit=True):
-    accs = stmt.rhs.accesses()
-    B = shards[accs[0].tensor.name]
-    C = shards[accs[1].tensor.name]
-    D = shards[accs[2].tensor.name]
-    Bt = accs[0].tensor
-    a = B.arrays
-    br, bc = int(B.meta["br"]), int(B.meta["bc"])
-    C_blk = pack_mat_row_blocks(np.asarray(C.arrays["vals"]),
-                                int(B.meta["grid_rows"]), br)
-    D_blk = pack_mat_inner_blocks(np.asarray(D.arrays["vals"]),
-                                  int(B.meta["grid_cols"]), bc)
-    vb = plans[Bt.name].vals_bounds
-    total_blocks = int(Bt.levels[1].nnz or 0)
-    nnz_start = jnp.asarray(vb[:, 0].astype(np.int32))
-
-    def fn(bd0, bd1, tiles, Cb, Db, counts, nnz_start):
-        out = jax.vmap(K.leaf_bcsr_sddmm, in_axes=(0, 0, 0, None, None))(
-            bd0, bd1, tiles, Cb, Db)
-        return _scatter_block_vals(total_blocks, out, nnz_start, counts)
-
-    args = (a["bdim0"], a["bdim1"], a["vals"], C_blk, D_blk,
-            a["nnz_count"], nnz_start)
-    f = _runner(jit, "bcsr_sddmm_nnz", (total_blocks,), args, lambda: fn)
-
-    def run():
-        new_tiles = np.asarray(f(*args))
-        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
-                      new_tiles, Bt.dtype)
-
-    return run
-
-
-def _emit_bcsr_spadd3_rows(stmt, strat, plans, shards, jit=True):
-    """Fused blocked three-way add over shared block-row windows: per-shard
-    tile union (duplicate blocks merge by summing tiles), host assembly
-    rebuilds the blocked output DIRECTLY with Tensor.from_blocks — the
-    output format follows the inputs' blocked format."""
-    accs = stmt.rhs.accesses()
-    Bs = [shards[acc.tensor.name] for acc in accs]
-    Bt = accs[0].tensor
-    n_rows, n_cols = stmt.lhs.tensor.shape
-    br, bc = int(Bs[0].meta["br"]), int(Bs[0].meta["bc"])
-
-    def fn(args):
-        (p1, c1, t1), (p2, c2, t2), (p3, c3, t3) = args
-        return jax.vmap(K.leaf_bcsr_spadd3_rows)(
-            p1, c1, t1, p2, c2, t2, p3, c3, t3)
-
-    args = tuple(
-        (S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"]) for S in Bs)
-    flat = tuple(x for trip in args for x in trip)
-    f = _runner(jit, "bcsr_spadd3_rows", (n_rows, n_cols, br, bc), flat,
-                lambda: fn)
-
-    def run():
-        rows, cols, tiles, counts = (np.asarray(x) for x in f(args))
-        brs = np.asarray(Bs[0].arrays["brow_start"])
-        out_coords, out_tiles = [], []
-        for p in range(rows.shape[0]):
-            k = int(counts[p])
-            out_coords.append(
-                np.stack([rows[p, :k] + brs[p], cols[p, :k]], axis=1))
-            out_tiles.append(tiles[p, :k])
-        return Tensor.from_blocks(
-            stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
-            np.concatenate(out_coords), np.concatenate(out_tiles),
-            dedupe=False)    # block-row windows are disjoint
-
-    return run
-
-
-def _emit_bcsr_spadd3_nnz(stmt, strat, plans, shards, jit=True):
-    """Blocked non-zero SpAdd: equal chunks of the concatenated BLOCK
-    stream (materialize_add_stream), per-chunk tile union, host merge of
-    chunk-boundary duplicate blocks in Tensor.from_blocks(dedupe=True)."""
-    S = shards["_addstream"]
-    a = S.arrays
-    Bt = stmt.rhs.accesses()[0].tensor
-    n_rows, n_cols = stmt.lhs.tensor.shape
-    gr = int(S.meta["grid_rows"])
-    br, bc = int(S.meta["br"]), int(S.meta["bc"])
-    max_c = int(S.meta["max_nnz"])
-
-    def fn(bd0, bd1, tiles, cnt):
-        leaf = partial(K.leaf_bcsr_spadd_union_chunk, n_brows=gr)
-        return jax.vmap(leaf)(bd0, bd1, tiles, cnt)
-
-    f = _runner(jit, "bcsr_spadd3_nnz", (gr, br, bc),
-                (a["dim0"], a["dim1"], a["vals"], a["nnz_count"]),
-                lambda: fn)
-
-    def run():
-        if max_c == 0:
-            return Tensor.from_blocks(
-                stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
-                np.zeros((0, 2), np.int64), np.zeros((0, br, bc), np.float32))
-        rows, cols, tiles, counts = (np.asarray(x) for x in
-                                     f(a["dim0"], a["dim1"], a["vals"],
-                                       jnp.asarray(a["nnz_count"])))
-        out_coords, out_tiles = [], []
-        for p in range(rows.shape[0]):
-            k = int(counts[p])
-            out_coords.append(np.stack([rows[p, :k], cols[p, :k]], axis=1))
-            out_tiles.append(tiles[p, :k])
-        return Tensor.from_blocks(
-            stmt.lhs.tensor.name, (n_rows, n_cols), Bt.format,
-            np.concatenate(out_coords), np.concatenate(out_tiles),
-            dedupe=True)
-
-    return run
-
-
-def _emit_spttv_rows(stmt, strat, plans, shards, jit=True):
+def _spttv_flat_runner(stmt, shards, jit, name):
+    """Flat-walk SpTTV: per-position products; (i, j) assembly happens on
+    host (the result pattern is the walk's ij columns; duplicates merge in
+    from_coo). Consumed by BOTH the nnz strategy and the universe strategy
+    over trailing-singleton trees (COO3), whose shard sets are the same
+    coordinate-column convention; ``name`` keeps the runner-cache label
+    truthful about which strategy compiled it."""
     accs = stmt.rhs.accesses()
     B = shards[accs[0].tensor.name]
     c = shards[accs[1].tensor.name]
     Bt = accs[0].tensor
     a = B.arrays
     cv = c.arrays["vals"]
+
+    def fn(dk, vals, cvec):
+        return vals * jnp.take(cvec, dk, axis=0)
+
+    f = _runner(jit, name, (), (a["dim2"], a["vals"], cv), lambda: fn)
+
+    def run():
+        prod = np.asarray(f(a["dim2"], a["vals"], cv)).ravel()
+        di = np.asarray(a["dim0"]).ravel().astype(np.int64)
+        dj = np.asarray(a["dim1"]).ravel().astype(np.int64)
+        counts = np.asarray(a["nnz_count"])
+        mask = np.zeros(prod.shape[0], bool)
+        mn = a["dim0"].shape[1]
+        for p in range(counts.shape[0]):
+            mask[p * mn: p * mn + counts[p]] = True
+        coords = np.stack([di[mask], dj[mask]], 1)
+        # the assembled output format follows the input's (i, j) levels
+        out_fmt = fmt.Format(Bt.format.levels[:2])
+        return Tensor.from_coo(stmt.lhs.tensor.name, Bt.shape[:2], coords,
+                               prod[mask], out_fmt, dedupe=True)
+
+    return run
+
+
+def _emit_spttv_rows(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    Bt = accs[0].tensor
+    if levels.tree_of(Bt).trailing_singletons:
+        # no grouped middle level: the universe plan materialized the flat
+        # walk bucketed by row window — consume it with the flat leaf
+        return "spttv_flat_rows", _spttv_flat_runner(stmt, shards, jit,
+                                                     "spttv_flat_rows")
+    B = shards[Bt.name]
+    c = shards[accs[1].tensor.name]
+    a = B.arrays
+    cv = c.arrays["vals"]
     # output pattern = B's (i,j) level; vals live at level-1 positions
     ij_bounds = plans[Bt.name].levels[1].pos_bounds
     total_ij = Bt.levels[1].nnz
     ij_start = jnp.asarray(ij_bounds[:, 0].astype(np.int32))
-    ij_count = jnp.asarray((ij_bounds[:, 1] - ij_bounds[:, 0]).astype(np.int32))
+    ij_count = jnp.asarray(
+        (ij_bounds[:, 1] - ij_bounds[:, 0]).astype(np.int32))
 
     def fn(pos1, crd1, pos2, crd2, vals, cvec, ij_start, ij_count):
         out = jax.vmap(K.leaf_spttv_rows, in_axes=(0, 0, 0, 0, 0, None))(
@@ -1388,64 +1420,20 @@ def _emit_spttv_rows(stmt, strat, plans, shards, jit=True):
         return Tensor(stmt.lhs.tensor.name, Bt.shape[:2], out_fmt, lv,
                       new_vals, Bt.dtype)
 
-    return run
+    return "spttv_rows", run
 
 
 def _emit_spttv_nnz(stmt, strat, plans, shards, jit=True):
-    accs = stmt.rhs.accesses()
-    B = shards[accs[0].tensor.name]
-    c = shards[accs[1].tensor.name]
-    Bt = accs[0].tensor
-    a = B.arrays
-    cv = c.arrays["vals"]
-    # leaf computes per-nnz products; (i,j) assembly happens on host (the
-    # result pattern is B's ij level; duplicates merge in from_coo)
-    def fn(dk, vals, cvec):
-        return vals * jnp.take(cvec, dk, axis=0)
-
-    f = _runner(jit, "spttv_nnz", (), (a["dim2"], a["vals"], cv),
-                lambda: fn)
-
-    def run():
-        prod = np.asarray(f(a["dim2"], a["vals"], cv)).ravel()
-        di = np.asarray(a["dim0"]).ravel().astype(np.int64)
-        dj = np.asarray(a["dim1"]).ravel().astype(np.int64)
-        counts = np.asarray(a["nnz_count"])
-        mask = np.zeros(prod.shape[0], bool)
-        mn = a["dim0"].shape[1]
-        for p in range(counts.shape[0]):
-            mask[p * mn: p * mn + counts[p]] = True
-        coords = np.stack([di[mask], dj[mask]], 1)
-        # the assembled output format follows the input's (i, j) levels
-        out_fmt = fmt.Format(Bt.format.levels[:2])
-        return Tensor.from_coo(stmt.lhs.tensor.name, Bt.shape[:2], coords,
-                               prod[mask], out_fmt, dedupe=True)
-
-    return run
+    return "spttv_nnz", _spttv_flat_runner(stmt, shards, jit, "spttv_nnz")
 
 
-def _emit_spmttkrp_rows(stmt, strat, plans, shards, jit=True):
-    accs = stmt.rhs.accesses()
-    B = shards[accs[0].tensor.name]
-    C = shards[accs[1].tensor.name]
-    D = shards[accs[2].tensor.name]
-    out_shape = stmt.lhs.tensor.shape
-    a = B.arrays
-    Cv, Dv = C.arrays["vals"], D.arrays["vals"]
+# -- SpMTTKRP ---------------------------------------------------------------
 
-    def fn(pos1, crd1, pos2, crd2, vals, Cm, Dm, row_start, row_count):
-        blocks = jax.vmap(
-            K.leaf_spmttkrp_rows, in_axes=(0, 0, 0, 0, 0, None, None))(
-            pos1, crd1, pos2, crd2, vals, Cm, Dm)
-        return _scatter_rows(out_shape, blocks, row_start, row_count)
-
-    args = (a["pos1"], a["crd1"], a["pos2"], a["crd2"], a["vals"], Cv, Dv,
-            a["row_start"], a["row_count"])
-    f = _runner(jit, "spmttkrp_rows", out_shape, args, lambda: fn)
-    return lambda: np.asarray(f(*args))
-
-
-def _emit_spmttkrp_nnz(stmt, strat, plans, shards, jit=True):
+def _spmttkrp_flat_runner(stmt, shards, jit, name):
+    """Flat-walk MTTKRP: per-position (i, j, k) contributions segment-summed
+    into the shard's row window. Consumed by the nnz strategy (overlapping
+    windows, reduced by the scatter) AND the universe strategy over
+    trailing-singleton trees (COO3 — disjoint windows, same leaf)."""
     accs = stmt.rhs.accesses()
     B = shards[accs[0].tensor.name]
     C = shards[accs[1].tensor.name]
@@ -1464,9 +1452,38 @@ def _emit_spmttkrp_nnz(stmt, strat, plans, shards, jit=True):
 
     args = (a["dim0"], a["dim1"], a["dim2"], a["vals"], Cv, Dv,
             row_start, row_count)
-    f = _runner(jit, "spmttkrp_nnz", out_shape + (max_rows,), args,
-                lambda: fn)
+    f = _runner(jit, name, out_shape + (max_rows,), args, lambda: fn)
     return lambda: np.asarray(f(*args))
+
+
+def _emit_spmttkrp_rows(stmt, strat, plans, shards, jit=True):
+    accs = stmt.rhs.accesses()
+    Bt = accs[0].tensor
+    if levels.tree_of(Bt).trailing_singletons:
+        return "spmttkrp_flat_rows", _spmttkrp_flat_runner(
+            stmt, shards, jit, "spmttkrp_flat_rows")
+    B = shards[Bt.name]
+    C = shards[accs[1].tensor.name]
+    D = shards[accs[2].tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    Cv, Dv = C.arrays["vals"], D.arrays["vals"]
+
+    def fn(pos1, crd1, pos2, crd2, vals, Cm, Dm, row_start, row_count):
+        blocks = jax.vmap(
+            K.leaf_spmttkrp_rows, in_axes=(0, 0, 0, 0, 0, None, None))(
+            pos1, crd1, pos2, crd2, vals, Cm, Dm)
+        return _scatter_rows(out_shape, blocks, row_start, row_count)
+
+    args = (a["pos1"], a["crd1"], a["pos2"], a["crd2"], a["vals"], Cv, Dv,
+            a["row_start"], a["row_count"])
+    f = _runner(jit, "spmttkrp_rows", out_shape, args, lambda: fn)
+    return "spmttkrp_rows", lambda: np.asarray(f(*args))
+
+
+def _emit_spmttkrp_nnz(stmt, strat, plans, shards, jit=True):
+    return "spmttkrp_nnz", _spmttkrp_flat_runner(stmt, shards, jit,
+                                                 "spmttkrp_nnz")
 
 
 def _emit_generic_fallback(stmt, strat, plans, shards, jit=True):
@@ -1483,27 +1500,20 @@ def _emit_generic_fallback(stmt, strat, plans, shards, jit=True):
     return run
 
 
-# ---------------------------------------------------------------------------
-# Back-compat: `repro.core` used to re-export the `lower` FUNCTION under the
-# package attribute `lower`, shadowing this submodule (`import
-# repro.core.lower as L` returned the function). The package attribute is
-# the submodule again (the function is `repro.core.lower_stmt`); making the
-# module itself callable keeps old `rc.lower(stmt, ...)` call sites working
-# through a DeprecationWarning instead of a bare TypeError.
-# ---------------------------------------------------------------------------
-
-import sys
-import types
-
-
-class _CallableModule(types.ModuleType):
-    def __call__(self, *args, **kwargs):
-        import warnings
-        warnings.warn(
-            "calling repro.core.lower as a function is deprecated; use "
-            "repro.core.lower_stmt (or repro.core.lower.lower)",
-            DeprecationWarning, stacklevel=2)
-        return lower(*args, **kwargs)
-
-
-sys.modules[__name__].__class__ = _CallableModule
+# One generic emitter per expression × strategy — the whole specialization
+# table. Format variation lives in the level trees the emitters query, not
+# in this table.
+_EMITTERS = {
+    ("d1(i)=s2(i,j)*d1(j)", "universe"): _emit_spmv_rows,
+    ("d1(i)=s2(i,j)*d1(j)", "nnz"): _emit_spmv_nnz,
+    ("d2(i,j)=s2(i,k)*d2(k,j)", "universe"): _emit_spmm_rows,
+    ("d2(i,j)=s2(i,k)*d2(k,j)", "nnz"): _emit_spmm_nnz,
+    ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "universe"): _emit_spadd3_rows,
+    ("s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)", "nnz"): _emit_spadd3_nnz,
+    ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "universe"): _emit_sddmm_rows,
+    ("s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)", "nnz"): _emit_sddmm_nnz,
+    ("s2(i,j)=s3(i,j,k)*d1(k)", "universe"): _emit_spttv_rows,
+    ("s2(i,j)=s3(i,j,k)*d1(k)", "nnz"): _emit_spttv_nnz,
+    ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "universe"): _emit_spmttkrp_rows,
+    ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "nnz"): _emit_spmttkrp_nnz,
+}

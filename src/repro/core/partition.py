@@ -152,6 +152,13 @@ class TensorPartition:
     # over the P×Q cross product of levels[0] row windows × levels[1]
     # column windows (core/grid.py). None for all 1-D partitions.
     grid: Optional[Tuple[int, int]] = None
+    # Transpose-walked universe partitions (column-major roots — CSC,
+    # BCSC): the row walk's permutation, walk position → storage position.
+    # ``vals_bounds`` then index the WALK space; materializers permute the
+    # value region through this and carry ``val_idx`` scatter maps so
+    # pattern-preserving outputs land back in storage order. None for
+    # ordered (storage-order) walks.
+    walk_perm: Optional[np.ndarray] = None
 
     def max_counts(self) -> Dict[str, int]:
         out = {}
@@ -200,10 +207,18 @@ def partition_tensor_rows(tensor: Tensor, row_bounds: Bounds) -> TensorPartition
     sorted ``crd`` first — paper Table I's Compressed/universe entry — and
     the image chain continues from the resulting position interval. Blocked
     tensors partition at block-row granularity (see
-    ``partition_tensor_block_rows``).
+    ``partition_tensor_block_rows``). Column-major roots (CSC, BCSC) —
+    where dimension 0 is NOT stored at the root — bucket the level tree's
+    TRANSPOSE walk instead (core/levels.py): per-color contiguous
+    intervals of the row-sorted enumeration, carried with the permutation
+    back to storage positions.
     """
     if tensor.format.is_blocked:
+        if tensor.format.dim_of_level(0) != 0:
+            return _partition_tensor_block_rows_walk(tensor, row_bounds)
         return partition_tensor_block_rows(tensor, row_bounds)
+    if tensor.format.dim_of_level(0) != 0:
+        return _partition_tensor_rows_walk(tensor, row_bounds)
     pieces = row_bounds.shape[0]
     levels: List[LevelPartition] = []
     order = tensor.order
@@ -292,25 +307,89 @@ def partition_tensor_block_rows(tensor: Tensor, row_bounds: Bounds,
     )
 
 
-def partition_tensor_block_nonzeros(tensor: Tensor, pieces: int,
-                                    weights: Optional[np.ndarray] = None,
-                                    ) -> TensorPartition:
-    """Non-zero partition of a blocked tensor: equal (or weighted) split of
-    the STORED-BLOCK position space, root block-row ownership derived with
-    preimage. The per-color payload is block-granular — each position moves
-    a whole (br, bc) tile."""
+def _partition_tensor_rows_walk(tensor: Tensor, row_bounds: Bounds,
+                                ) -> TensorPartition:
+    """Universe row partition of a COLUMN-MAJOR root (CSC) via the level
+    tree's transpose walk: the stored entries are enumerated in
+    dimension-lexicographic order (an argsort), so each row window maps to
+    a contiguous interval of the WALK — bucketed with searchsorted exactly
+    like a compressed root's sorted ``crd``. The walk permutation rides on
+    the partition; materialization permutes values through it and keeps a
+    ``val_idx`` map for pattern-preserving outputs."""
+    pieces = row_bounds.shape[0]
+    w = tensor.level_tree().row_walk()
+    rows = w.coords[:, 0] if w.n else np.zeros((0,), np.int64)
+    lo = np.searchsorted(rows, row_bounds[:, 0], side="left")
+    hi = np.searchsorted(rows, row_bounds[:, 1], side="left")
+    wb = np.stack([lo, hi], axis=1).astype(np.int64)
+    levels = [LevelPartition(coord_bounds=row_bounds.astype(np.int64).copy(),
+                             pos_bounds=wb.copy()),
+              LevelPartition(pos_bounds=wb.copy())]
+    return TensorPartition(
+        tensor=tensor, pieces=pieces, levels=levels,
+        vals_bounds=wb, root_coord_bounds=row_bounds.astype(np.int64).copy(),
+        overlapping_root=False, walk_perm=w.perm,
+    )
+
+
+def _partition_tensor_block_rows_walk(tensor: Tensor, row_bounds: Bounds,
+                                      ) -> TensorPartition:
+    """Blocked transpose-walk universe partition (BCSC): the block-grid
+    transpose walk sorted by (block-row, block-col) is bucketed into
+    block-row windows; ``root_coord_bounds`` stay in ROW space (clipped to
+    the tensor edge) so output scatters are format-agnostic, exactly as in
+    ``partition_tensor_block_rows``."""
     assert tensor.format.is_blocked and tensor.order == 2
     if _dense_prefix(tensor) != 1:
         raise ValueError(
             f"direct block partition needs a dense root: {tensor.format}")
     br = tensor.format.block_shape[0]
     n = tensor.shape[0]
+    pieces = row_bounds.shape[0]
+    blo = row_bounds[:, 0].astype(np.int64) // br
+    bhi = -(-row_bounds[:, 1].astype(np.int64) // br)
+    for p in range(1, pieces):          # disjoint block windows
+        blo[p] = max(blo[p], bhi[p - 1])
+        bhi[p] = max(bhi[p], blo[p])
+    bb = np.stack([blo, bhi], axis=1)
+    w = tensor.level_tree().row_walk()
+    brows = w.coords[:, 0] if w.n else np.zeros((0,), np.int64)
+    lo = np.searchsorted(brows, bb[:, 0], side="left")
+    hi = np.searchsorted(brows, bb[:, 1], side="left")
+    wb = np.stack([lo, hi], axis=1).astype(np.int64)
+    levels = [LevelPartition(coord_bounds=bb.copy(), pos_bounds=wb.copy()),
+              LevelPartition(pos_bounds=wb.copy())]
+    rows = np.minimum(bb * br, n)
+    return TensorPartition(
+        tensor=tensor, pieces=pieces, levels=levels,
+        vals_bounds=wb, root_coord_bounds=rows,
+        overlapping_root=False, walk_perm=w.perm,
+    )
+
+
+def partition_tensor_block_nonzeros(tensor: Tensor, pieces: int,
+                                    weights: Optional[np.ndarray] = None,
+                                    ) -> TensorPartition:
+    """Non-zero partition of a blocked tensor: equal (or weighted) split of
+    the STORED-BLOCK position space, root block-row ownership derived with
+    preimage. The per-color payload is block-granular — each position moves
+    a whole (br, bc) tile. Column-major grids (BCSC) derive the root
+    windows in the root's OWN dimension (block-columns); leaves then
+    reduce over the full output extent, the CSC story at block
+    granularity."""
+    assert tensor.format.is_blocked and tensor.order == 2
+    if _dense_prefix(tensor) != 1:
+        raise ValueError(
+            f"direct block partition needs a dense root: {tensor.format}")
+    root_dim = tensor.format.dim_of_level(0)
+    b_root = tensor.format.block_shape[root_dim]
+    n = tensor.shape[root_dim]
     n_blocks = tensor.levels[1].nnz or 0
     init = partition_nonzeros(n_blocks, pieces, weights)
-    up = preimage(tensor.levels[1].pos, init)       # block-row entry bounds
+    up = preimage(tensor.levels[1].pos, init)       # root-level entry bounds
     levels = [LevelPartition(coord_bounds=up.copy()),
               LevelPartition(pos_bounds=init.copy())]
-    rows = np.minimum(up * br, n)
+    rows = np.minimum(up * b_root, n)
     return TensorPartition(
         tensor=tensor, pieces=pieces, levels=levels,
         vals_bounds=init.astype(np.int64),
@@ -626,10 +705,73 @@ def _materialize_dense_rows_impl(tensor: Tensor, bounds: Bounds,
 
 
 def materialize_csr_rows(tensor: Tensor, part: TensorPartition) -> ShardedTensor:
+    if part.walk_perm is not None:
+        key = ("csr_rows_walk", tensor_fingerprint(tensor),
+               partition_fingerprint(part))
+        return _cached_shards(
+            key, lambda: _materialize_csr_rows_walk_impl(tensor, part),
+            partition=part)
     key = ("csr_rows", tensor_fingerprint(tensor),
            partition_fingerprint(part))
     return _cached_shards(
         key, lambda: _materialize_csr_rows_impl(tensor, part), partition=part)
+
+
+def _materialize_csr_rows_walk_impl(tensor: Tensor, part: TensorPartition,
+                                    ) -> ShardedTensor:
+    """CSR-convention shard per color from a TRANSPOSE-WALKED row partition
+    (column-major roots — CSC). Each color owns a contiguous interval of
+    the row-sorted walk; the shard-local ``pos1`` is densified over the row
+    window exactly like a compressed root's, ``crd1`` holds the column
+    coordinates, ``vals`` is the value region PERMUTED into walk order and
+    ``val_idx`` maps each slot back to its storage position (the scatter
+    map pattern-preserving outputs use). Leaves written against the CSR
+    calling convention consume these shards unchanged — the walk differs,
+    the kernel contract does not."""
+    pieces = part.pieces
+    rb = part.root_coord_bounds
+    row_counts = rb[:, 1] - rb[:, 0]
+    max_rows = int(row_counts.max()) if pieces else 0
+    perm = part.walk_perm
+    coords = tensor.coords().astype(np.int64)      # storage order
+    wrows = coords[perm, 0] if perm.size else np.zeros((0,), np.int64)
+    wcols = coords[perm, 1] if perm.size else np.zeros((0,), np.int64)
+    vb = part.vals_bounds                          # walk-space intervals
+    counts = vb[:, 1] - vb[:, 0]
+    max_nnz = int(counts.max()) if pieces else 0
+    pos_shards = np.zeros((pieces, max_rows + 1), dtype=INT)
+    crd_shards = np.zeros((pieces, max_nnz), dtype=INT)
+    val_idx = np.zeros((pieces, max_nnz), dtype=INT)
+    vals_shards = np.zeros((pieces, max_nnz), dtype=tensor.vals.dtype)
+    for p in range(pieces):
+        lo, hi = int(vb[p, 0]), int(vb[p, 1])
+        rlo = int(rb[p, 0])
+        wrows_win = max(int(rb[p, 1]) - rlo, 0)
+        cnts = np.zeros(max_rows, dtype=np.int64)
+        if hi > lo:
+            np.add.at(cnts, wrows[lo:hi] - rlo, 1)
+        pos = np.zeros(max_rows + 1, dtype=np.int64)
+        np.cumsum(cnts, out=pos[1:])
+        pos[wrows_win + 1:] = pos[wrows_win]       # padded rows stay empty
+        pos_shards[p] = pos.astype(INT)
+        crd_shards[p, : hi - lo] = wcols[lo:hi]
+        val_idx[p, : hi - lo] = perm[lo:hi]
+        vals_shards[p, : hi - lo] = tensor.vals[perm[lo:hi]]
+    arrays = {
+        "pos1": pos_shards,
+        "crd1": crd_shards,
+        "vals": vals_shards,
+        "val_idx": val_idx,
+        "nnz_count": counts.astype(INT),
+        "row_start": rb[:, 0].astype(INT),
+        "row_count": row_counts.astype(INT),
+    }
+    return ShardedTensor(
+        kind="csr_rows", pieces=pieces, arrays=arrays,
+        meta={"max_rows": max_rows, "max_nnz": max_nnz,
+              "n_rows": tensor.shape[0], "permuted": 1},
+        partition=part,
+    )
 
 
 def _materialize_csr_rows_impl(tensor: Tensor, part: TensorPartition,
@@ -811,22 +953,87 @@ def _materialize_coo_nnz_impl(tensor: Tensor, part: TensorPartition,
 
 
 def _blocked_meta(tensor: Tensor) -> Dict[str, int]:
+    # grid extents are per DIMENSION (row grid / col grid) regardless of
+    # which level stores which dimension — BCSC stores columns at the root
     br, bc = tensor.format.block_shape
     return {
         "br": br, "bc": bc,
         "n_rows": tensor.shape[0], "n_cols": tensor.shape[1],
-        "grid_rows": tensor.levels[0].size,
-        "grid_cols": tensor.levels[1].size,
+        "grid_rows": tensor.levels[tensor.format.level_of_dim(0)].size,
+        "grid_cols": tensor.levels[tensor.format.level_of_dim(1)].size,
     }
 
 
 def materialize_bcsr_rows(tensor: Tensor, part: TensorPartition,
                           ) -> ShardedTensor:
+    if part.walk_perm is not None:
+        key = ("bcsr_rows_walk", tensor_fingerprint(tensor),
+               partition_fingerprint(part))
+        return _cached_shards(
+            key, lambda: _materialize_bcsr_rows_walk_impl(tensor, part),
+            partition=part)
     key = ("bcsr_rows", tensor_fingerprint(tensor),
            partition_fingerprint(part))
     return _cached_shards(
         key, lambda: _materialize_bcsr_rows_impl(tensor, part),
         partition=part)
+
+
+def _materialize_bcsr_rows_walk_impl(tensor: Tensor, part: TensorPartition,
+                                     ) -> ShardedTensor:
+    """Blocked-CSR-convention shards from a TRANSPOSE-WALKED block-row
+    partition (BCSC): the block-grid transpose walk gives each color a
+    contiguous (block-row-sorted) interval; ``pos1``/``crd1`` walk the
+    block-row window / global block-columns, ``vals`` carries the (br, bc)
+    tiles permuted into walk order and ``val_idx`` the stored-block
+    positions — the blocked analog of the scalar transpose-walk shards."""
+    pieces = part.pieces
+    br, bc = tensor.format.block_shape
+    bb = part.levels[0].coord_bounds               # block-row windows
+    vb = part.vals_bounds                          # walk-space intervals
+    perm = part.walk_perm
+    bcoords = tensor.block_coords().astype(np.int64)
+    wbrow = bcoords[perm, 0] if perm.size else np.zeros((0,), np.int64)
+    wbcol = bcoords[perm, 1] if perm.size else np.zeros((0,), np.int64)
+    brow_counts = bb[:, 1] - bb[:, 0]
+    max_brows = int(brow_counts.max()) if pieces else 0
+    counts = vb[:, 1] - vb[:, 0]
+    max_bnnz = int(counts.max()) if pieces else 0
+    pos_shards = np.zeros((pieces, max_brows + 1), dtype=INT)
+    crd_shards = np.zeros((pieces, max_bnnz), dtype=INT)
+    val_idx = np.zeros((pieces, max_bnnz), dtype=INT)
+    vals_shards = np.zeros((pieces, max_bnnz, br, bc),
+                           dtype=tensor.vals.dtype)
+    for p in range(pieces):
+        lo, hi = int(vb[p, 0]), int(vb[p, 1])
+        blo = int(bb[p, 0])
+        wb_win = max(int(bb[p, 1]) - blo, 0)
+        cnts = np.zeros(max_brows, dtype=np.int64)
+        if hi > lo:
+            np.add.at(cnts, wbrow[lo:hi] - blo, 1)
+        pos = np.zeros(max_brows + 1, dtype=np.int64)
+        np.cumsum(cnts, out=pos[1:])
+        pos[wb_win + 1:] = pos[wb_win]
+        pos_shards[p] = pos.astype(INT)
+        crd_shards[p, : hi - lo] = wbcol[lo:hi]
+        val_idx[p, : hi - lo] = perm[lo:hi]
+        vals_shards[p, : hi - lo] = tensor.vals[perm[lo:hi]]
+    rb = part.root_coord_bounds
+    arrays = {
+        "pos1": pos_shards,
+        "crd1": crd_shards,
+        "vals": vals_shards,
+        "val_idx": val_idx,
+        "row_start": rb[:, 0].astype(INT),
+        "row_count": (rb[:, 1] - rb[:, 0]).astype(INT),
+        "brow_start": bb[:, 0].astype(INT),
+        "brow_count": brow_counts.astype(INT),
+        "nnz_count": counts.astype(INT),
+    }
+    meta = dict(_blocked_meta(tensor), max_rows=max_brows * br,
+                max_brows=max_brows, max_bnnz=max_bnnz, permuted=1)
+    return ShardedTensor(kind="bcsr_rows", pieces=pieces, arrays=arrays,
+                         meta=meta, partition=part)
 
 
 def _materialize_bcsr_rows_impl(tensor: Tensor, part: TensorPartition,
@@ -920,7 +1127,11 @@ def _materialize_bcsr_nnz_impl(tensor: Tensor, part: TensorPartition,
     meta = dict(_blocked_meta(tensor),
                 max_rows=int((rb[:, 1] - rb[:, 0]).max()) if pieces else 0,
                 max_brows=int((bb[:, 1] - bb[:, 0]).max()) if pieces else 0,
-                max_bnnz=max_bnnz, root_dim=0)
+                max_bnnz=max_bnnz,
+                # dimension tracked by the storage root: leaves may compute
+                # into a block-row window only when this is 0 (BCSR);
+                # otherwise (BCSC) they reduce over the full block grid.
+                root_dim=tensor.format.dim_of_level(0))
     return ShardedTensor(kind="bcsr_nnz", pieces=pieces, arrays=arrays,
                          meta=meta, partition=part)
 
@@ -944,18 +1155,22 @@ def materialize_csr_grid(tensor: Tensor, part: TensorPartition,
 
 def _materialize_csr_grid_impl(tensor: Tensor, part: TensorPartition,
                                ) -> ShardedTensor:
-    """Row×col tile shards of any row-major sparse matrix.
+    """Row×col tile shards of any 2-D sparse matrix.
 
-    Built from the coordinate stream (storage order is (row, col)
-    lexicographic for every row-partitionable 2-D format, so the per-tile
-    entry order is CSR order for free). Per tile: ``pos1`` walks the tile's
-    row window, ``crd1`` holds column-LOCAL coordinates, ``val_idx`` the
-    global value positions (the scatter map for pattern-preserving
-    outputs). Colors are row-major: flat color = p*Q + q."""
+    Built from the level tree's ROW WALK (core/levels.py): the identity
+    storage enumeration for row-major formats — per-tile entry order is
+    CSR order for free — and the transpose walk for column-major roots
+    (CSC), whose permutation re-sorts each tile's entries row-major and
+    maps them back to storage positions. Per tile: ``pos1`` walks the
+    tile's row window, ``crd1`` holds column-LOCAL coordinates,
+    ``val_idx`` the global (storage) value positions — the scatter map
+    for pattern-preserving outputs. Colors are row-major: flat color =
+    p*Q + q."""
     P, Q = part.grid
     rb = part.levels[0].coord_bounds            # (P, 2) row windows
     cb = part.levels[1].coord_bounds            # (Q, 2) col windows
-    coords = tensor.coords().astype(np.int64)   # (nnz, 2), vals-aligned
+    walk = tensor.level_tree().row_walk()       # row-sorted, perm → storage
+    coords = walk.coords.astype(np.int64)
     r, c = coords[:, 0], coords[:, 1]
     cmasks = [(c >= int(cb[q, 0])) & (c < int(cb[q, 1])) for q in range(Q)]
     tiles = []
@@ -984,8 +1199,8 @@ def _materialize_csr_grid_impl(tensor: Tensor, part: TensorPartition,
         pos[rhi - rlo + 1:] = pos[rhi - rlo]    # padded rows stay empty
         pos_shards[color] = pos.astype(INT)
         crd_shards[color, :k] = c[idx] - clo
-        val_idx[color, :k] = idx
-        vals_shards[color, :k] = tensor.vals[idx]
+        val_idx[color, :k] = walk.perm[idx]
+        vals_shards[color, :k] = tensor.vals[walk.perm[idx]]
         nnz_count[color] = k
     arrays = {
         "pos1": pos_shards, "crd1": crd_shards, "vals": vals_shards,
@@ -1016,14 +1231,17 @@ def _materialize_bcsr_grid_impl(tensor: Tensor, part: TensorPartition,
     block grid — windows are block-aligned (the planner guarantees it), so
     each tile owns whole (br, bc) value tiles; ``crd1`` holds block-col
     coordinates LOCAL to the tile's block-column window and ``val_idx``
-    the global stored-block positions."""
+    the global stored-block positions. Column-major block grids (BCSC)
+    arrive through the blocked transpose walk, whose permutation re-sorts
+    each tile's blocks block-row-major."""
     P, Q = part.grid
     br, bc = tensor.format.block_shape
     rb = part.levels[0].coord_bounds            # (P, 2) ROW windows
     cb = part.levels[1].coord_bounds            # (Q, 2) COL windows
     brb = np.stack([rb[:, 0] // br, -(-rb[:, 1] // br)], axis=1)
     bcb = np.stack([cb[:, 0] // bc, -(-cb[:, 1] // bc)], axis=1)
-    bcoords = tensor.block_coords().astype(np.int64)   # (nb, 2), tile-aligned
+    walk = tensor.level_tree().row_walk()       # block-row-sorted
+    bcoords = walk.coords.astype(np.int64)      # (nb, 2), dim order
     rblk, cblk = bcoords[:, 0], bcoords[:, 1]
     cmasks = [(cblk >= bcb[q, 0]) & (cblk < bcb[q, 1]) for q in range(Q)]
     tiles = []
@@ -1051,8 +1269,8 @@ def _materialize_bcsr_grid_impl(tensor: Tensor, part: TensorPartition,
         pos[bhi - blo + 1:] = pos[bhi - blo]
         pos_shards[color] = pos.astype(INT)
         crd_shards[color, :k] = cblk[idx] - int(bcb[q, 0])
-        val_idx[color, :k] = idx
-        vals_shards[color, :k] = tensor.vals[idx]
+        val_idx[color, :k] = walk.perm[idx]
+        vals_shards[color, :k] = tensor.vals[walk.perm[idx]]
         nnz_count[color] = k
     arrays = {
         "pos1": pos_shards, "crd1": crd_shards, "vals": vals_shards,

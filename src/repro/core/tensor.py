@@ -308,6 +308,13 @@ class Tensor:
     def level(self, lvl: int) -> LevelData:
         return self.levels[lvl]
 
+    def level_tree(self):
+        """The level-iterator view of this tensor (core/levels.py): the
+        format-generic walk interface the lowering engine consumes instead
+        of the format descriptor itself."""
+        from .levels import tree_of
+        return tree_of(self)
+
     def fingerprint(self) -> Tuple:
         """Content fingerprint: structural identity (format key, shape,
         dtype) + a CRC over every storage region (pos/crd/vals). This is

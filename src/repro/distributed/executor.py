@@ -58,6 +58,26 @@ def _spmd_runner(name, mesh, axis, static, arrays, build):
     return _SPMD_RUN_CACHE.get_or_build(key, lambda: jax.jit(build()))
 
 
+def _assemble_vals(total, out_vals, arrays, vals_bounds):
+    """Host assembly of per-color leaf VALUE outputs into the global value
+    region (scalar slots or (br, bc) tiles alike). Ordered walks fill by
+    value-space interval; transpose-walked shards carry a ``val_idx``
+    permutation in their packed level arrays and scatter home by stored
+    position — the builders never ask which format produced the walk."""
+    flat = np.zeros((total,) + out_vals.shape[2:], np.float32)
+    cnt = np.asarray(arrays["nnz_count"])
+    if "val_idx" in arrays:
+        vi = np.asarray(arrays["val_idx"])
+        for p in range(out_vals.shape[0]):
+            k = int(cnt[p])
+            flat[vi[p, :k]] = out_vals[p, :k]
+        return flat
+    for p in range(out_vals.shape[0]):
+        lo = int(vals_bounds[p, 0])
+        flat[lo: lo + cnt[p]] = out_vals[p, : cnt[p]]
+    return flat
+
+
 def spmv_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
     """Build the shard_map SpMV for a rows-lowered kernel. Returns a
     callable () -> y executing on ``mesh``."""
@@ -195,12 +215,8 @@ def sddmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
             jnp.asarray(a["vals"]), jnp.asarray(C.arrays["vals"]),
             jnp.asarray(D.arrays["vals"])))
         Bt = accs[0].tensor
-        flat = np.zeros(Bt.nnz, np.float32)
-        vb = kernel.plans[Bt.name].vals_bounds
-        cnt = np.asarray(a["nnz_count"])
-        for p in range(out_vals.shape[0]):
-            flat[vb[p, 0]: vb[p, 0] + cnt[p]] = out_vals[p, : cnt[p]]
-        return flat
+        return _assemble_vals(Bt.nnz, out_vals, a,
+                              kernel.plans[Bt.name].vals_bounds)
 
     return call
 
@@ -274,12 +290,8 @@ def sddmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
             jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
             jnp.asarray(a["vals"]), jnp.asarray(C.arrays["vals"]),
             jnp.asarray(D.arrays["vals"])))
-        flat = np.zeros(Bt.nnz, np.float32)
-        vb = kernel.plans[Bt.name].vals_bounds
-        cnt = np.asarray(a["nnz_count"])
-        for p in range(out_vals.shape[0]):
-            flat[vb[p, 0]: vb[p, 0] + cnt[p]] = out_vals[p, : cnt[p]]
-        return flat
+        return _assemble_vals(Bt.nnz, out_vals, a,
+                              kernel.plans[Bt.name].vals_bounds)
 
     return call
 
@@ -462,12 +474,8 @@ def bcsr_sddmm_rows_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
             jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
             jnp.asarray(a["vals"]), jnp.asarray(C_blk), jnp.asarray(D_blk)))
         total_blocks = int(Bt.levels[1].nnz or 0)
-        flat = np.zeros((total_blocks, br, bc), np.float32)
-        vb = kernel.plans[Bt.name].vals_bounds
-        cnt = np.asarray(a["nnz_count"])
-        for p in range(out_tiles.shape[0]):
-            flat[vb[p, 0]: vb[p, 0] + cnt[p]] = out_tiles[p, : cnt[p]]
-        return flat
+        return _assemble_vals(total_blocks, out_tiles, a,
+                              kernel.plans[Bt.name].vals_bounds)
 
     return call
 
@@ -506,12 +514,8 @@ def bcsr_sddmm_nnz_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
             jnp.asarray(a["bdim0"]), jnp.asarray(a["bdim1"]),
             jnp.asarray(a["vals"]), jnp.asarray(C_blk), jnp.asarray(D_blk)))
         total_blocks = int(Bt.levels[1].nnz or 0)
-        flat = np.zeros((total_blocks, br, bc), np.float32)
-        vb = kernel.plans[Bt.name].vals_bounds
-        cnt = np.asarray(a["nnz_count"])
-        for p in range(out_tiles.shape[0]):
-            flat[vb[p, 0]: vb[p, 0] + cnt[p]] = out_tiles[p, : cnt[p]]
-        return flat
+        return _assemble_vals(total_blocks, out_tiles, a,
+                              kernel.plans[Bt.name].vals_bounds)
 
     return call
 

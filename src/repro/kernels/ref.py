@@ -11,6 +11,15 @@ Two families:
    `core.partition`. These are the "generated leaf kernel" equivalents used
    by the simulation backend; Pallas kernels replace them on TPU.
 
+Leaves consume **packed level arrays**, never format descriptors: the
+positional arguments are the materialized regions of a level-tree walk
+(core/levels.py) — ``pos``/``crd`` pairs for grouped walks, per-dimension
+coordinate columns for flat walks, ``(br, bc)`` tile stacks for block
+levels. Which format produced a walk is invisible here: a transpose-walked
+CSC shard and a CSR shard feed the SAME leaf, which is what keeps the leaf
+set at one per (expression × strategy × walk family) instead of one per
+format.
+
 Padding convention: padded nnz slots have ``vals == 0`` and ``crd == 0`` so
 multiplicative kernels are unaffected; padded rows have empty pos ranges.
 """

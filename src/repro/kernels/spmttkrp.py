@@ -28,18 +28,22 @@ from ..core import formats as fmt
 
 
 def supports(format: "fmt.Format", space: str) -> bool:
-    """Format-dispatch query for 3-D MTTKRP (and TTV). The row-strategy leaf
-    walks a two-level (j-grouped) pos/crd tree, so universe needs a
-    row-partitionable root AND a grouped (non-singleton) middle level: CSF
-    directly, DCSF via the densified row window — but not COO(3), whose
-    trailing singletons carry no j grouping. The nnz leaf consumes flat
-    per-nnz (i, j, k) coordinates, which every unblocked 3-D sparse format
-    provides."""
+    """Format-dispatch query for 3-D MTTKRP (and TTV). Universe needs a
+    row-partitionable root plus a walkable body: a grouped (non-singleton
+    compressed) middle level feeds the two-level pos/crd leaf (CSF
+    directly, DCSF via the densified row window), and trailing-singleton
+    trees (COO3) feed the FLAT per-position leaf bucketed by row window —
+    the trailing-singleton walk of core/levels.py, so no conversion is
+    needed. The nnz leaf consumes flat per-nnz (i, j, k) coordinates,
+    which every unblocked 3-D sparse format provides."""
     caps = fmt.capabilities(format)
     if caps.order != 3:
         return False
     if space == "universe":
-        return caps.row_partitionable and not format.levels[1].singleton
+        grouped = (format.levels[1].compressed
+                   and not format.levels[1].singleton)
+        trailing = all(l.singleton for l in format.levels[1:])
+        return caps.row_partitionable and (grouped or trailing)
     return caps.nnz_partitionable
 
 

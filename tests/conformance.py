@@ -13,11 +13,15 @@ Cell IDs read ``<expression>/<format>/<strategy>/<mesh>``:
                           (coordinate-position) distribution, 4-piece 1-D
                           machine.
 
-Every cell must either lower DIRECTLY (the kernel family iterates the
-declared format in place) or via an explicitly-logged format-conversion
-fallback recorded on ``LoweredKernel.fallbacks``. The census of both is
-printed in the pytest terminal summary (see conftest.py) and the fallback
-set is mirrored in ROADMAP.md open items — shrinking it is tracked work.
+Every cell must lower DIRECTLY: the kernel family iterates the declared
+format in place through its level-iterator walk (core/levels.py — row
+windows, position splits, the transpose walk for column-major roots, the
+trailing-singleton walk for COO trees). The logged format-conversion
+fallback (``LoweredKernel.fallbacks``) still exists for formats outside
+the matrix (e.g. compressed-root block grids), but since the
+level-iterator refactor the census is fully direct and pinned that way —
+a cell silently flipping to fallback is a regression. The census is
+printed in the pytest terminal summary (see conftest.py).
 
 Adding a row/column to the matrix:
   * new expression — add a builder to ``_build_stmt`` + an entry in
@@ -55,6 +59,7 @@ FORMATS_2D = [
     ("dcsr", F.DCSR),
     ("coo", lambda: F.COO(2)),
     ("bcsr", lambda: F.BCSR((2, 2))),
+    ("bcsc", lambda: F.BCSC((2, 2))),
 ]
 FORMATS_3D = [
     ("csf", lambda: F.CSF(3)),
@@ -69,10 +74,13 @@ PIECES = [2, 4]
 # 2-D machine-grid cells (the multi-axis distribution subsystem,
 # core/grid.py): rows = SUMMA-style row×col tiles with per-axis
 # communication, nnz = nested pos-split (flat P*Q chunks). Only the
-# grid-distributable expressions and the formats with direct grid
-# materializers join this column.
+# grid-distributable expressions join this column; since the
+# level-iterator refactor the grid materializers walk column-major roots
+# too (the row walk re-sorts each tile's entries), so csc/bcsc are in.
 GRID_EXPRESSIONS = ["spmv", "spmm", "sddmm"]
-GRID_FORMATS = [("csr", F.CSR), ("bcsr", lambda: F.BCSR((2, 2)))]
+GRID_FORMATS = [("csr", F.CSR), ("csc", F.CSC),
+                ("bcsr", lambda: F.BCSR((2, 2))),
+                ("bcsc", lambda: F.BCSC((2, 2)))]
 GRID_MESHES = [(2, 2), (4, 2)]
 
 
@@ -168,6 +176,14 @@ def _check_cell(expr, fmt_name, fmt_ctor, strategy, pieces, empty=False,
     if kernel.fallbacks:
         assert any("converting to" in r.message for r in caplog.records), \
             f"cell {cid} fell back without logging the conversion"
+    else:
+        # A direct cell performs ZERO format conversions — the whole point
+        # of the level-iterator walks is that the convert cache stays quiet
+        # once every spellable format lowers in place.
+        assert kernel.cache.convert_hits == 0, \
+            f"direct cell {cid} served a cached conversion"
+        assert kernel.cache.convert_misses == 0, \
+            f"direct cell {cid} converted an operand"
     return kernel
 
 
@@ -234,7 +250,8 @@ def test_matrix_empty_operands(fmt_name, fmt_ctor, strategy, caplog):
     ("sddmm", "csc", "nnz"),
     ("spadd3", "coo", "rows"),
     ("spmv", "bcsr", "nnz"),       # exercises the direct blocked path
-    ("spmv", "csc", "rows"),       # exercises the conversion-fallback path
+    ("spmv", "csc", "rows"),       # exercises the transpose-walk path
+    ("spmv", "bcsc", "rows"),      # exercises the blocked transpose walk
 ])
 def test_matrix_smoke(expr, fmt_name, strategy, caplog):
     ctor = dict(FORMATS_2D)[fmt_name]
@@ -242,11 +259,22 @@ def test_matrix_smoke(expr, fmt_name, strategy, caplog):
 
 
 def test_direct_cells_do_not_convert(caplog):
-    """Row-major formats must NOT silently round-trip through CSR — the
-    level-iterator view is the point of the format-dispatch layer."""
+    """No spellable format silently round-trips through its row-major
+    sibling — the level-iterator walks are the point of the format
+    abstraction: densified row windows (dcsr), position splits (coo), the
+    transpose walk (csc, bcsc) and the trailing-singleton walk (coo3) all
+    iterate the declared storage in place."""
     k = _check_cell("spmm", "dcsr", F.DCSR, "rows", 4, caplog=caplog)
     assert k.fallbacks == []
     k = _check_cell("spmv", "coo", lambda: F.COO(2), "nnz", 4, caplog=caplog)
+    assert k.fallbacks == []
+    k = _check_cell("spmm", "csc", F.CSC, "rows", 4, caplog=caplog)
+    assert k.fallbacks == []
+    k = _check_cell("sddmm", "bcsc", lambda: F.BCSC((2, 2)), "rows", 4,
+                    caplog=caplog)
+    assert k.fallbacks == []
+    k = _check_cell("spmttkrp", "coo3", lambda: F.COO(3), "rows", 4,
+                    caplog=caplog)
     assert k.fallbacks == []
 
 
@@ -256,9 +284,9 @@ def test_direct_cells_do_not_convert(caplog):
 # deliberately when adding a direct kernel (and prune the matching ROADMAP
 # open item).
 DIRECT_CONTRACT = {
-    ("2d", "rows"): {"csr", "dcsr", "coo", "bcsr"},
-    ("2d", "nnz"): {"csr", "csc", "dcsr", "coo", "bcsr"},
-    ("3d", "rows"): {"csf", "dcsf"},
+    ("2d", "rows"): {"csr", "csc", "dcsr", "coo", "bcsr", "bcsc"},
+    ("2d", "nnz"): {"csr", "csc", "dcsr", "coo", "bcsr", "bcsc"},
+    ("3d", "rows"): {"csf", "dcsf", "coo3"},
     ("3d", "nnz"): {"csf", "dcsf", "coo3"},
 }
 _FMT_RANK = {f[0]: "2d" for f in FORMATS_2D}
@@ -281,9 +309,12 @@ def test_census_matches_contract():
 # Full-matrix totals, pinned so the cached lowering path (plan memo + shard
 # cache + runner reuse, ISSUE 3) cannot silently flip a cell's status: when
 # the whole matrix ran, the census must be exactly this. ISSUE 4 added the
-# 24 multi-axis (2x2 / 4x2 grid) cells, all direct.
-FULL_CENSUS_TOTALS = {"direct": 115, "fallback": 11}
-_FULL_CELL_COUNT = 126
+# multi-axis (2x2 / 4x2 grid) cells; ISSUE 5's level-iterator walks made
+# the last 11 fallback cells (csc/rows, spmttkrp/coo3/rows) direct and
+# added the bcsc cells plus csc/bcsc grid columns — the census is now
+# fully direct: 96 2-D + 12 3-D + 48 grid + 12 empty-operand cells.
+FULL_CENSUS_TOTALS = {"direct": 168, "fallback": 0}
+_FULL_CELL_COUNT = 168
 
 
 def test_census_totals_with_caching():
@@ -293,3 +324,5 @@ def test_census_totals_with_caching():
     for entry in CENSUS.values():
         counts[entry["status"]] += 1
     assert counts == FULL_CENSUS_TOTALS, counts
+    assert not any(v["fallbacks"] for v in CENSUS.values()), \
+        "fully-direct matrix must perform zero conversions"

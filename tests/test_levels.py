@@ -1,0 +1,186 @@
+"""Level-iterator invariants (ISSUE 5 property tests, hypothesis
+stub–compatible): walks and transpose walks enumerate EXACTLY the stored
+coordinates, the permutation round-trips values through Tensor.from_*,
+block levels cover non-divisible shapes, and the per-level iteration
+capabilities (children ranges, position counts) agree with the physical
+pos/crd regions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core.levels import (CompressedIter, DenseIter, SingletonIter,
+                               tree_of)
+from repro.core.tensor import Tensor
+
+FORMATS_2D = [F.CSR, F.CSC, F.DCSR, lambda: F.COO(2)]
+FORMATS_3D = [lambda: F.CSF(3), lambda: F.DCSF(3), lambda: F.COO(3)]
+
+
+def _sparse(rng, shape, density=0.3):
+    return ((rng.random(shape) < density) *
+            rng.standard_normal(shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 1: walk() / row_walk() enumerate exactly the stored coordinates
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 30), m=st.integers(1, 30), seed=st.integers(0, 999),
+       fi=st.integers(0, len(FORMATS_2D) - 1))
+def test_walk_enumerates_stored_coordinates_2d(n, m, seed, fi):
+    rng = np.random.default_rng(seed)
+    dense = _sparse(rng, (n, m))
+    t = Tensor.from_dense("B", dense, FORMATS_2D[fi]())
+    tree = tree_of(t)
+    w = tree.walk()
+    expect = {tuple(c) for c in np.argwhere(dense != 0)}
+    assert {tuple(c) for c in w.coords} == expect
+    # walk is vals-aligned: coords[i] stores vals[perm[i]]
+    assert np.array_equal(w.perm, np.arange(w.n))
+    for (i, j), v in zip(w.coords, t.vals):
+        assert dense[i, j] == v
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 30), m=st.integers(1, 30), seed=st.integers(0, 999),
+       fi=st.integers(0, len(FORMATS_2D) - 1))
+def test_row_walk_is_dimension_lexicographic(n, m, seed, fi):
+    """row_walk visits (row, col) lexicographically for EVERY format; for
+    column-major roots it is the transpose walk and perm round-trips the
+    value region."""
+    rng = np.random.default_rng(seed)
+    dense = _sparse(rng, (n, m))
+    t = Tensor.from_dense("B", dense, FORMATS_2D[fi]())
+    tree = tree_of(t)
+    w = tree.row_walk()
+    lin = w.coords[:, 0].astype(np.int64) * m + w.coords[:, 1]
+    assert np.array_equal(lin, np.sort(lin)), "row walk must be row-sorted"
+    # perm maps walk position -> storage position of the same entry
+    for k in range(w.n):
+        i, j = w.coords[k]
+        assert t.vals[w.perm[k]] == dense[i, j]
+    assert w.ordered == (not tree.transposed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(dims=st.sampled_from([(6, 5, 4), (9, 3, 7), (4, 4, 4)]),
+       seed=st.integers(0, 999), fi=st.integers(0, len(FORMATS_3D) - 1))
+def test_walk_enumerates_stored_coordinates_3d(dims, seed, fi):
+    rng = np.random.default_rng(seed)
+    dense = _sparse(rng, dims, 0.2)
+    t = Tensor.from_dense("B", dense, FORMATS_3D[fi]())
+    tree = tree_of(t)
+    w = tree.walk()
+    expect = {tuple(c) for c in np.argwhere(dense != 0)}
+    assert {tuple(c) for c in w.coords} == expect
+    assert tree.trailing_singletons == (fi == 2)          # COO(3)
+    assert tree.grouped_middle == (fi != 2)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 2: round-trip through Tensor.from_* via the walk
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 25), m=st.integers(1, 25), seed=st.integers(0, 999),
+       fi=st.integers(0, len(FORMATS_2D) - 1))
+def test_walk_roundtrips_through_from_coo(n, m, seed, fi):
+    """Reassembling from the row walk's (coords, permuted vals) rebuilds a
+    tensor with the same dense image — the walk loses nothing."""
+    rng = np.random.default_rng(seed)
+    dense = _sparse(rng, (n, m))
+    t = Tensor.from_dense("B", dense, FORMATS_2D[fi]())
+    w = tree_of(t).row_walk()
+    rebuilt = Tensor.from_coo("B2", t.shape, w.coords, t.vals[w.perm],
+                              t.format, dedupe=False)
+    np.testing.assert_array_equal(rebuilt.to_dense(), dense)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 3: block levels cover non-divisible shapes
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 30), m=st.integers(2, 30),
+       br=st.integers(1, 4), bc=st.integers(1, 4),
+       seed=st.integers(0, 999), col_major=st.booleans())
+def test_block_walk_covers_nondivisible_shapes(n, m, br, bc, seed,
+                                               col_major):
+    """Blocked trees walk the BLOCK grid: every stored block coordinate is
+    in range (boundary blocks included for non-divisible shapes), every
+    nonzero of the dense image is covered by a stored block, and the walk
+    aligns with the (nb, br, bc) tile axis."""
+    rng = np.random.default_rng(seed)
+    dense = _sparse(rng, (n, m))
+    fm = (F.BCSC((br, bc)) if col_major else F.BCSR((br, bc)))
+    t = Tensor.from_dense("B", dense, fm)
+    tree = tree_of(t)
+    assert tree.blocked and tree.transposed == col_major
+    w = tree.row_walk()
+    grid = (-(-n // br), -(-m // bc))
+    assert (w.coords >= 0).all()
+    assert (w.coords < np.asarray(grid)).all()
+    covered = np.zeros(grid, bool)
+    covered[w.coords[:, 0], w.coords[:, 1]] = True
+    for i, j in np.argwhere(dense != 0):
+        assert covered[i // br, j // bc], "nonzero outside any stored block"
+    # tile alignment: block (bi, bj) at walk position k holds the dense
+    # window it covers (clipped at the boundary)
+    for k in range(w.n):
+        bi, bj = w.coords[k]
+        tile = t.vals[w.perm[k]]
+        win = dense[bi * br: bi * br + br, bj * bc: bj * bc + bc]
+        np.testing.assert_array_equal(tile[: win.shape[0], : win.shape[1]],
+                                      win)
+    np.testing.assert_array_equal(t.to_dense(), dense)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 4: per-level iteration capabilities match the physical regions
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 20), m=st.integers(1, 20), seed=st.integers(0, 999))
+def test_level_children_ranges_match_pos_regions(n, m, seed):
+    rng = np.random.default_rng(seed)
+    t = Tensor.from_dense("B", _sparse(rng, (n, m)), F.CSR())
+    tree = tree_of(t)
+    root, leaf = tree.levels
+    assert isinstance(root, DenseIter) and isinstance(leaf, CompressedIter)
+    assert root.coord_range() == (0, n)
+    assert root.positions(1) == n
+    assert leaf.positions(n) == t.nnz
+    total = 0
+    for r in range(n):
+        lo, hi = leaf.children(r)
+        assert lo == t.levels[1].pos[r] and hi == t.levels[1].pos[r + 1]
+        total += hi - lo
+    assert total == t.nnz
+
+
+def test_singleton_levels_share_parent_positions():
+    rng = np.random.default_rng(0)
+    t = Tensor.from_dense("B", _sparse(rng, (5, 4, 3), 0.3), F.COO(3))
+    tree = tree_of(t)
+    assert isinstance(tree.levels[1], SingletonIter)
+    assert isinstance(tree.levels[2], SingletonIter)
+    assert tree.levels[1].positions(7) == 7           # shared position space
+    assert tree.levels[1].children(3) == (3, 4)
+
+
+def test_tree_predicates():
+    rng = np.random.default_rng(1)
+    d = _sparse(rng, (8, 6))
+    assert not tree_of(Tensor.from_dense("B", d, F.CSR())).transposed
+    assert tree_of(Tensor.from_dense("B", d, F.CSC())).transposed
+    assert tree_of(Tensor.from_dense("B", d, F.CSC())).row_walk().n == \
+        int((d != 0).sum())
+    bt = tree_of(Tensor.from_dense("B", d, F.BCSC((2, 2))))
+    assert bt.blocked and bt.transposed and bt.block_shape == (2, 2)
+    # empty tensors walk to empty, not to an error
+    e = tree_of(Tensor.from_dense("B", np.zeros((4, 4), np.float32),
+                                  F.CSC()))
+    assert e.row_walk().n == 0

@@ -316,15 +316,37 @@ def test_spmd_runner_cache_reuse():
 
 # ---------------------------------------------------------------------------
 # Converted-tensor cache (ISSUE 4 satellite): fallback cells stop paying
-# to_format on every warm lower
+# to_format on every warm lower. Since the level-iterator refactor (ISSUE
+# 5) every spellable conformance format lowers DIRECTLY — csc/coo3 went
+# direct via the transpose / trailing-singleton walks — so the fallback
+# machinery is pinned here on a format that still genuinely converts: a
+# COMPRESSED-ROOT block grid, which no blocked partitioner walks.
 # ---------------------------------------------------------------------------
 
-def test_convert_cache_warm_fallback_lower():
-    """A csc cell converts B -> csr once; the warm re-lower reuses the
-    converted tensor (convert_hits on CacheStats) and stays fully warm."""
+def _bdcsr():
+    """Blocked DCSR — compressed-root block grid, conversion fallback."""
+    return F.Format((F.Compressed, F.Compressed), block_shape=(2, 2))
+
+
+def test_direct_cells_never_convert():
+    """csc/rows lowers DIRECTLY through the transpose walk now: no logged
+    fallback, no convert-cache traffic."""
     rng = np.random.default_rng(17)
     stmt = _spmv_stmt(_sparse(rng), F.CSC())
-    sched = default_row_schedule(stmt, M4)    # csc/rows: conversion fallback
+    clear_lowering_caches()
+    k = lower(stmt, M4, schedule=default_row_schedule(stmt, M4))
+    assert k.fallbacks == []
+    assert k.cache.convert_misses == 0 and k.cache.convert_hits == 0
+    np.testing.assert_allclose(k.run(), interpret(stmt), atol=1e-4)
+
+
+def test_convert_cache_warm_fallback_lower():
+    """A compressed-root blocked cell converts B once; the warm re-lower
+    reuses the converted tensor (convert_hits on CacheStats) and stays
+    fully warm."""
+    rng = np.random.default_rng(17)
+    stmt = _spmv_stmt(_sparse(rng), _bdcsr())
+    sched = default_row_schedule(stmt, M4)    # b[dcsr]: conversion fallback
     clear_lowering_caches()
     k1 = lower(stmt, M4, schedule=sched)
     assert k1.fallbacks and k1.cache.convert_misses == 1
@@ -340,9 +362,9 @@ def test_convert_cache_warm_fallback_lower():
 
 def test_convert_cache_invalidation_on_mutation():
     """In-place mutation of the declared-format operand changes its CRC,
-    so the conversion re-runs instead of serving a stale csr image."""
+    so the conversion re-runs instead of serving a stale converted image."""
     rng = np.random.default_rng(18)
-    stmt = _spmv_stmt(_sparse(rng), F.CSC())
+    stmt = _spmv_stmt(_sparse(rng), _bdcsr())
     sched = default_row_schedule(stmt, M4)
     clear_lowering_caches()
     k1 = lower(stmt, M4, schedule=sched)
