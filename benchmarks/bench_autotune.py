@@ -1,0 +1,100 @@
+"""Autoscheduler benchmark: model-chosen schedule vs every hand-picked
+cell, plus the tuned-plan cache's amortization of the search itself.
+
+Rows per expression (spmv/spmm over a skewed power-law CSR matrix):
+
+  autotune_<expr>_hand_<label> — each enumerable hand schedule (rows/nnz
+                                 1-D + every 2-D factorization), run time
+  autotune_<expr>_auto         — run time of the auto-chosen schedule;
+                                 the derived column records the picked
+                                 label vs the best/worst hand cells
+  autotune_<expr>_lower_cold   — lower(schedule="auto") with ALL caches
+                                 cleared: pays the candidate search
+  autotune_<expr>_lower_warm   — tuned-warm re-lower: the memoized winner
+                                 (cache hit asserted — no search)
+
+The acceptance gate this drives: the auto run time stays within ~10% of
+the best hand cell, and the warm lower is far below the cold one.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as rc
+from repro.core import plan_search as PS
+from repro.core.lower import clear_lowering_caches, lower
+from repro.core.tensor import Tensor
+from repro.data.spdata import powerlaw_matrix
+
+from .common import csv_row, time_fn
+
+M = rc.Machine(("x", 4))
+
+
+def run(n: int = 4096, m: int = 4096, j: int = 64,
+        avg_nnz_per_row: int = 16) -> list:
+    rows = []
+    rng = np.random.default_rng(1)
+    B = powerlaw_matrix("B", n, m, avg_nnz_per_row, seed=0)
+    cv = rng.standard_normal(m).astype(np.float32)
+    Cd = rng.standard_normal((m, j)).astype(np.float32)
+
+    def spmv_stmt():
+        return rc.parse_tin(
+            "a(i) = B(i,j) * c(j)", a=Tensor.zeros_dense("a", (n,)), B=B,
+            c=Tensor.from_dense("c", cv))
+
+    def spmm_stmt():
+        return rc.parse_tin(
+            "A(i,j) = B(i,k) * C(k,j)",
+            A=Tensor.zeros_dense("A", (n, j)), B=B,
+            C=Tensor.from_dense("C", Cd))
+
+    for expr, mk in (("spmv", spmv_stmt), ("spmm", spmm_stmt)):
+        stmt = mk()
+        # -- every hand-pickable cell, timed ------------------------------
+        stats = PS.structural_stats(stmt)
+        hand = {}
+        for p in PS.enumerate_points(stmt, M, stats):
+            sched, mach = p.build(stmt, M)
+            k = lower(stmt, mach, schedule=sched)
+            t = time_fn(k.run, warmup=1, iters=5)
+            hand[p.label] = t
+            rows.append(csv_row(
+                f"autotune_{expr}_hand_{p.label.replace('/', '_')}",
+                t * 1e6))
+        best = min(hand, key=hand.get)
+        worst = max(hand, key=hand.get)
+
+        # -- the auto-chosen schedule -------------------------------------
+        clear_lowering_caches()
+        k_auto = lower(stmt, M, schedule="auto")
+        t_auto = time_fn(k_auto.run, warmup=1, iters=5)
+        rows.append(csv_row(
+            f"autotune_{expr}_auto", t_auto * 1e6,
+            f"picked={k_auto.tuned.label};best={best};worst={worst};"
+            f"vs_best={t_auto / hand[best]:.2f}x"))
+
+        # -- search amortization: cold lower vs tuned-warm re-lower -------
+        def cold():
+            clear_lowering_caches()
+            return lower(stmt, M, schedule="auto")
+
+        t_cold = time_fn(cold, warmup=0, iters=3)
+        lower(stmt, M, schedule="auto")            # prime every cache
+
+        def warm():
+            return lower(stmt, M, schedule="auto")
+
+        t_warm = time_fn(warm, warmup=1, iters=5)
+        assert warm().cache.tuned_hits == 1, "warm lower must hit the " \
+            "tuned-plan cache"
+        rows.append(csv_row(f"autotune_{expr}_lower_cold", t_cold * 1e6))
+        rows.append(csv_row(
+            f"autotune_{expr}_lower_warm", t_warm * 1e6,
+            f"speedup={t_cold / max(t_warm, 1e-12):.0f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -23,7 +23,10 @@ def time_fn(fn: Callable, warmup: int = 3, iters: int = 10) -> float:
         fn()
         ts.append(time.perf_counter() - t0)
     ts.sort()
-    return ts[len(ts) // 2]
+    mid = len(ts) // 2
+    if len(ts) % 2:
+        return ts[mid]
+    return 0.5 * (ts[mid - 1] + ts[mid])
 
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
@@ -34,7 +37,16 @@ def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
 
 
 def drain_results() -> Dict[str, float]:
-    """Return rows recorded since the last drain and reset the registry."""
-    out = dict(RESULTS)
+    """Return rows recorded since the last drain and reset the registry.
+
+    Duplicate names (cold/warm patterns timing the same name twice) are
+    uniquified as ``name``, ``name#2``, ... instead of silently keeping
+    only the last row per name."""
+    out: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for name, us in RESULTS:
+        n = counts.get(name, 0) + 1
+        counts[name] = n
+        out[name if n == 1 else f"{name}#{n}"] = us
     RESULTS.clear()
     return out

@@ -16,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
   bench_levels        — level-iterator walks: direct csc (transpose walk)
                         & coo3 (trailing-singleton walk) vs the
                         conversion-fallback execution they replaced
+  bench_autotune      — autoscheduler: auto-chosen schedule vs best/worst
+                        hand-picked cell + cold vs tuned-warm lower time
 
 Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
 writes a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
@@ -41,10 +43,10 @@ def main() -> None:
                     help="directory for the BENCH_*.json files")
     args = ap.parse_args()
 
-    from . import (bench_bcsr, bench_levels, bench_load_balance,
-                   bench_mesh2d, bench_mismatch, bench_pallas_kernels,
-                   bench_replan, bench_spadd3, bench_vs_interp,
-                   bench_weak_scaling)
+    from . import (bench_autotune, bench_bcsr, bench_levels,
+                   bench_load_balance, bench_mesh2d, bench_mismatch,
+                   bench_pallas_kernels, bench_replan, bench_spadd3,
+                   bench_vs_interp, bench_weak_scaling)
     from .common import drain_results
 
     print("name,us_per_call,derived")
@@ -73,6 +75,9 @@ def main() -> None:
             *((1024, 1024) if args.quick else (4096, 4096)),
             j=32 if args.quick else 64,
             dims3=(96, 64, 48) if args.quick else (256, 128, 96)),
+        "autotune": lambda: bench_autotune.run(
+            *((1024, 1024) if args.quick else (4096, 4096)),
+            j=16 if args.quick else 64),
     }
     only = {s for s in args.only.split(",") if s} if args.only else None
     if only:

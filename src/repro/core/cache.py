@@ -26,6 +26,12 @@ def avals_key(arrays: Sequence) -> Tuple:
     return tuple((tuple(a.shape), str(a.dtype)) for a in arrays)
 
 
+# Private miss sentinel: ``None`` is a legitimate cached value (e.g. the
+# tuned-plan cache recording "no feasible candidate"), so misses must be
+# distinguishable from stored Nones.
+_MISSING = object()
+
+
 class LRUCache:
     """A bounded mapping with least-recently-used eviction + counters."""
 
@@ -36,15 +42,17 @@ class LRUCache:
         self._d: "OrderedDict[Hashable, Any]" = OrderedDict()
         self.stats: Dict[str, int] = {"hits": 0, "misses": 0, "evictions": 0}
 
-    def get(self, key: Hashable) -> Optional[Any]:
-        """Return the cached value (refreshing recency) or None; counts a
-        hit or a miss either way — pair every ``get`` with a ``put`` on
-        None so the counters read as cache effectiveness."""
+    def get(self, key: Hashable, default: Optional[Any] = None) -> Any:
+        """Return the cached value (refreshing recency) or ``default``;
+        counts a hit or a miss either way — pair every ``get`` with a
+        ``put`` on a miss so the counters read as cache effectiveness.
+        Pass a private sentinel as ``default`` when stored values may
+        themselves be None."""
         try:
             value = self._d[key]
         except KeyError:
             self.stats["misses"] += 1
-            return None
+            return default
         self._d.move_to_end(key)
         self.stats["hits"] += 1
         return value
@@ -58,9 +66,10 @@ class LRUCache:
 
     def get_or_build(self, key: Hashable, factory: Callable[[], Any]) -> Any:
         """Return the cached value, or build + insert it (one hit or miss
-        is counted either way)."""
-        value = self.get(key)
-        if value is None:
+        is counted either way). A factory that returns None caches None —
+        subsequent calls hit instead of rebuilding."""
+        value = self.get(key, _MISSING)
+        if value is _MISSING:
             value = factory()
             self.put(key, value)
         return value

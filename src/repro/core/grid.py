@@ -192,34 +192,54 @@ def _grid_plans(stmt: Assignment, strat: DistStrategy, gp: GridPlan,
     return plans, axis_of
 
 
-def _grid_comm(stmt: Assignment, strat: DistStrategy, gp: GridPlan,
-               plans: Dict[str, TensorPartition], axis_of: Dict[str, str],
-               out_t: Tensor) -> L.CommStats:
-    """Per-axis communication plan. An operand sliced along one axis is
-    shared by (broadcast to) every color of the ORTHOGONAL axis; a fully
-    replicated operand broadcasts hierarchically (x once, then y within
-    each of the P grid rows); when the column variable is a reduction
-    variable, every grid row all-reduces its output window along y."""
-    P, Q = gp.P, gp.Q
-    comm = L.CommStats(pieces=gp.pieces)
-    axes = {gp.axis_x: L.AxisComm(size=P), gp.axis_y: L.AxisComm(size=Q)}
-    for name, plan in plans.items():
-        if name == out_t.name:
+def grid_axis_bytes(stmt: Assignment, strat: DistStrategy,
+                    ) -> Dict[str, "L.AxisComm"]:
+    """Per-axis byte formulas of a 2-D grid schedule, computed from the
+    statement + strategy alone (no GridPlan / partitioning needed): an
+    operand sliced along one axis is shared by (broadcast to) every color
+    of the ORTHOGONAL axis; a fully replicated operand broadcasts
+    hierarchically (x once, then y within each of the P grid rows); when
+    the column variable is a reduction variable, every grid row
+    all-reduces its output window along y.
+
+    This is both the ledger `lower_grid` records on the kernel and the
+    estimator `core.plan_search` scores 2-D candidates with before
+    committing to a plan."""
+    v0, v1 = strat.vars[0], strat.vars[1]
+    dx, dy = strat.machine_dims[0], strat.machine_dims[1]
+    P = dx.size
+    out_name = stmt.lhs.tensor.name
+    axes = {dx.name: L.AxisComm(size=dx.size),
+            dy.name: L.AxisComm(size=dy.size)}
+    seen = set()
+    for acc in stmt.accesses():
+        t = acc.tensor
+        if t.name in seen or t.name == out_name:
             continue
-        t = plan.tensor
-        tag = axis_of[name]
+        seen.add(t.name)
+        tag = _grid_tag(acc, v0, v1)
         if tag == "xy":
             continue                      # tiles: owned, nothing moves
         if tag == "*":
-            axes[gp.axis_x].broadcast_bytes += L._nbytes(t)
-            axes[gp.axis_y].broadcast_bytes += P * L._nbytes(t)
+            axes[dx.name].broadcast_bytes += L._nbytes(t)
+            axes[dy.name].broadcast_bytes += P * L._nbytes(t)
         elif tag in ("y", "ycols"):       # sliced by y → broadcast along x
-            axes[gp.axis_x].broadcast_bytes += L._nbytes(t)
+            axes[dx.name].broadcast_bytes += L._nbytes(t)
         else:                             # sliced by x → broadcast along y
-            axes[gp.axis_y].broadcast_bytes += L._nbytes(t)
-    if strat.vars[1] in stmt.reduction_vars:
-        axes[gp.axis_y].reduce_bytes += L._nbytes(out_t)
-    comm.axes = axes
+            axes[dy.name].broadcast_bytes += L._nbytes(t)
+    if v1 in stmt.reduction_vars:
+        axes[dy.name].reduce_bytes += L._nbytes(stmt.lhs.tensor)
+    return axes
+
+
+def _grid_comm(stmt: Assignment, strat: DistStrategy, gp: GridPlan,
+               plans: Dict[str, TensorPartition], axis_of: Dict[str, str],
+               out_t: Tensor) -> L.CommStats:
+    """Per-axis communication plan recorded on the kernel — the shared
+    ``grid_axis_bytes`` formulas over the normalized statement (whose
+    access tensors are exactly the planned tensors)."""
+    comm = L.CommStats(pieces=gp.pieces)
+    comm.axes = grid_axis_bytes(stmt, strat)
     return comm
 
 

@@ -27,7 +27,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 from functools import partial
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -160,9 +160,9 @@ def set_runner_cache_capacity(capacity: int) -> None:
 
 
 def clear_lowering_caches() -> None:
-    """Drop plan, runner, shard, and SPMD-executable caches — the cold
-    path, used by benchmarks to measure what re-lowering cost before the
-    caches."""
+    """Drop plan, runner, shard, tuned-plan, and SPMD-executable caches —
+    the cold path, used by benchmarks to measure what re-lowering cost
+    before the caches."""
     _PLAN_CACHE.clear()
     _RUNNER_CACHE.clear()
     clear_shard_cache()
@@ -171,6 +171,9 @@ def clear_lowering_caches() -> None:
     executor = sys.modules.get("repro.distributed.executor")
     if executor is not None:     # deferred: executor imports this module
         executor.clear_spmd_cache()
+    plan_search = sys.modules.get("repro.core.plan_search")
+    if plan_search is not None:  # deferred: the planner imports this module
+        plan_search.clear_tuned_plan_cache()
 
 
 @dataclasses.dataclass
@@ -187,22 +190,39 @@ class CacheStats:
     runner_misses: int = 0
     convert_hits: int = 0
     convert_misses: int = 0
+    # schedule="auto" tuned-plan cache (core.plan_search): a hit means the
+    # lower skipped the candidate search entirely.
+    tuned_hits: int = 0
+    tuned_misses: int = 0
 
     @property
     def warm(self) -> bool:
         """True when the lower re-assembled nothing (full fast path)."""
         return (self.plan_misses == 0 and self.shard_misses == 0
-                and self.runner_misses == 0 and self.convert_misses == 0)
+                and self.runner_misses == 0 and self.convert_misses == 0
+                and self.tuned_misses == 0)
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
 
 
+def _tuned_cache_stats() -> Dict[str, int]:
+    """Tuned-plan cache counters, read lazily: plan_search imports this
+    module, so lower only sees its stats once the planner is in use."""
+    import sys
+    plan_search = sys.modules.get("repro.core.plan_search")
+    if plan_search is None:
+        return {"hits": 0, "misses": 0}
+    return plan_search.TUNED_PLAN_CACHE_STATS
+
+
 def _cache_snapshot() -> Tuple[int, ...]:
+    tuned = _tuned_cache_stats()
     return (PLAN_CACHE_STATS["hits"], PLAN_CACHE_STATS["misses"],
             SHARD_CACHE_STATS["hits"], SHARD_CACHE_STATS["misses"],
             RUNNER_CACHE_STATS["hits"], RUNNER_CACHE_STATS["misses"],
-            CONVERT_CACHE_STATS["hits"], CONVERT_CACHE_STATS["misses"])
+            CONVERT_CACHE_STATS["hits"], CONVERT_CACHE_STATS["misses"],
+            tuned["hits"], tuned["misses"])
 
 
 def _cache_delta(snap: Tuple[int, ...]) -> CacheStats:
@@ -210,7 +230,8 @@ def _cache_delta(snap: Tuple[int, ...]) -> CacheStats:
     d = [b - a for a, b in zip(snap, now)]
     return CacheStats(plan_hits=d[0], plan_misses=d[1], shard_hits=d[2],
                       shard_misses=d[3], runner_hits=d[4], runner_misses=d[5],
-                      convert_hits=d[6], convert_misses=d[7])
+                      convert_hits=d[6], convert_misses=d[7],
+                      tuned_hits=d[8], tuned_misses=d[9])
 
 
 @dataclasses.dataclass
@@ -237,6 +258,9 @@ class LoweredKernel:
     fallbacks: List[str] = dataclasses.field(default_factory=list)
     declared_formats: Dict[str, str] = dataclasses.field(default_factory=dict)
     cache: CacheStats = dataclasses.field(default_factory=CacheStats)
+    # schedule="auto" provenance: the winning plan_search.SchedulePoint
+    # (estimated/measured costs, tile choice), None for hand schedules.
+    tuned: Optional[Any] = None
 
     def run(self):
         return self.runner()
@@ -425,12 +449,21 @@ def _normalize_operands(
 def lower(
     stmt: Assignment,
     machine: Machine,
-    schedule: Optional[Schedule] = None,
+    schedule: Union[Schedule, str, None] = None,
     distributions: Optional[Dict[str, Distribution]] = None,
     jit: bool = True,
     weights: Optional[np.ndarray] = None,
 ) -> LoweredKernel:
     """Compile a scheduled TIN statement into a distributed executable.
+
+    ``schedule`` may be a hand-built :class:`Schedule`, ``None`` (the
+    default 1-D row schedule), or the string ``"auto"`` — the
+    cost-model-driven autoscheduler (:mod:`repro.core.plan_search`)
+    enumerates strategy × grid-factorization × tile candidates, scores
+    them with structural stats + the per-axis byte formulas, optionally
+    refines the top-K by timing, and memoizes the winner in a tuned-plan
+    cache keyed by content fingerprints (hits observable as
+    ``kernel.cache.tuned_hits``).
 
     ``distributions`` declares the *data* distribution per tensor (TDN). The
     *computation* distribution comes from the schedule. Where they disagree
@@ -448,12 +481,21 @@ def lower(
 
 
 def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
+    snap = _cache_snapshot()
+    tuned_point = None
+    if isinstance(schedule, str):
+        if schedule != "auto":
+            raise ValueError(
+                f"unknown schedule string {schedule!r}; pass a Schedule, "
+                "None, or 'auto'")
+        from . import plan_search
+        schedule, machine, tuned_point = plan_search.resolve_auto(
+            stmt, machine, weights=weights, jit=jit)
     if schedule is None:
         schedule = default_row_schedule(stmt, machine)
     strat = schedule.strategy()
     pieces = strat.pieces
     sig = stmt.signature()
-    snap = _cache_snapshot()
 
     # Format dispatch: convert operands with no direct kernel (logged).
     stmt, fallbacks, declared_formats = _normalize_operands(stmt, strat.space)
@@ -467,10 +509,12 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
     # mesh shape differ.
     if strat.is_grid and strat.space == "universe":
         from . import grid as grid_mod
-        return grid_mod.lower_grid(stmt, machine, strat, jit=jit,
-                                   fallbacks=fallbacks,
-                                   declared_formats=declared_formats,
-                                   snap=snap, distributions=distributions)
+        k = grid_mod.lower_grid(stmt, machine, strat, jit=jit,
+                                fallbacks=fallbacks,
+                                declared_formats=declared_formats,
+                                snap=snap, distributions=distributions)
+        k.tuned = tuned_point
+        return k
 
     out_t: Tensor = stmt.lhs.tensor
     shards: Dict[str, ShardedTensor] = {}
@@ -614,7 +658,7 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
         stmt=stmt, strategy=strat, machine=machine, plans=plans,
         shards=shards, runner=runner, comm=comm, leaf_name=leaf_name,
         fallbacks=fallbacks, declared_formats=declared_formats,
-        cache=_cache_delta(snap),
+        cache=_cache_delta(snap), tuned=tuned_point,
     )
 
 

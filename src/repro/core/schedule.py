@@ -63,6 +63,10 @@ class DistStrategy:
     fused_vars: Optional[Tuple[IndexVar, ...]] = None   # for nnz via fusion
     communicate_at: Dict[str, str] = dataclasses.field(default_factory=dict)
     leaf_unit: Optional[ParallelUnit] = None
+    # Pallas leaf tile hint for blocked formats: (block_R, block_nb) group
+    # shape chosen by the autoscheduler's tune_ell pass (None → the
+    # kernels' built-in fallback defaults).
+    tile: Optional[Tuple[int, int]] = None
     # Tensors the schedule pins to a matching data distribution (C4: when
     # data distribution ≠ computation distribution, lowering inserts a
     # redistribution collective and charges its bytes).
@@ -124,6 +128,7 @@ class Schedule:
         self._communicate: Dict[str, str] = {}
         self._leaf_unit: Optional[ParallelUnit] = None
         self._reorder: Optional[Tuple[IndexVar, ...]] = None
+        self._tile: Optional[Tuple[int, int]] = None
 
     # -- transformations ----------------------------------------------------
     def fuse(self, i: IndexVar, j: IndexVar, f: IndexVar) -> "Schedule":
@@ -183,6 +188,14 @@ class Schedule:
         self.ops.append(ScheduleOp("precompute", (expr, i, iw)))
         return self
 
+    def tile_hint(self, block_r: int, block_n: int) -> "Schedule":
+        """Pin the Pallas leaf tile (block_R, block_nb) for blocked
+        formats — set by the autoscheduler from ``tune_ell``; the kernels
+        fall back to their built-in defaults when unset."""
+        self._tile = (int(block_r), int(block_n))
+        self.ops.append(ScheduleOp("tile_hint", self._tile))
+        return self
+
     # -- canonicalization ---------------------------------------------------
     def strategy(self) -> DistStrategy:
         if not self._distributed:
@@ -210,6 +223,7 @@ class Schedule:
             fused_vars=fused,
             communicate_at=dict(self._communicate),
             leaf_unit=self._leaf_unit,
+            tile=self._tile,
         )
 
     def __repr__(self) -> str:

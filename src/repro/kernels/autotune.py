@@ -17,13 +17,20 @@ padding); uniform matrices prefer larger ones (fewer grid steps).
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+log = logging.getLogger(__name__)
+
 VMEM_BYTES = 16 * 2**20          # ~16 MiB/core usable
 DEFAULT_BLOCK_R = (4, 8, 16, 32)
 DEFAULT_BLOCK_N = (128, 256, 512)
+# Candidate grids for the block-row-group (BCSR) ELL layout, where one
+# stored entry is a whole (br, bc) tile rather than a scalar.
+DEFAULT_BLOCK_GRID_R = (2, 4, 8, 16)
+DEFAULT_BLOCK_GRID_N = (8, 16, 32)
 
 
 @dataclasses.dataclass
@@ -34,11 +41,19 @@ class TuneResult:
     waste: float
     cost: float
     feasible: bool
+    # True when no candidate fit VMEM and the smallest tile was returned
+    # anyway — callers (e.g. the planner) should skip or penalize the point.
+    fallback: bool = False
 
 
 def ell_cost(pos: np.ndarray, block_r: int, block_n: int,
-             dense_cols_bytes: int = 0) -> TuneResult:
-    """Cost of one (block_r, block_n) ELL layout for a CSR pos array."""
+             dense_cols_bytes: int = 0, *, tile_elems: int = 1,
+             vmem_bytes: int = VMEM_BYTES) -> TuneResult:
+    """Cost of one (block_r, block_n) ELL layout for a CSR pos array.
+
+    ``tile_elems`` scales the per-entry value footprint for blocked
+    layouts, where each stored entry is a dense (br, bc) tile instead of
+    one scalar."""
     pos = np.asarray(pos, dtype=np.int64)
     n_rows = pos.shape[0] - 1
     nnz = int(pos[-1])
@@ -49,40 +64,69 @@ def ell_cost(pos: np.ndarray, block_r: int, block_n: int,
     bnnz = max(-(-bnnz // block_n) * block_n, block_n)
     padded = n_rb * bnnz
     waste = 0.0 if padded == 0 else 1.0 - nnz / padded
-    # VMEM: 3 nnz blocks (rows/crd/vals) + one-hot tile + output block
-    vmem = 3 * block_n * 4 + block_r * block_n * 4 + block_r * 4 \
+    # VMEM: rows/crd blocks + value tiles + one-hot tile + output block
+    vmem = 2 * block_n * 4 + block_n * 4 * tile_elems \
+        + block_r * block_n * 4 + block_r * 4 * tile_elems \
         + dense_cols_bytes
     onehot_overhead = block_r / block_n
     cost = padded * (1.0 + onehot_overhead)
     return TuneResult(block_r, block_n, padded, waste, cost,
-                      feasible=vmem <= VMEM_BYTES)
+                      feasible=vmem <= vmem_bytes)
 
 
 def tune_ell(pos: np.ndarray, *,
              block_r_candidates: Sequence[int] = DEFAULT_BLOCK_R,
              block_n_candidates: Sequence[int] = DEFAULT_BLOCK_N,
-             dense_cols_bytes: int = 0) -> TuneResult:
-    """Pick the cheapest feasible (block_r, block_n) for this matrix."""
+             dense_cols_bytes: int = 0, tile_elems: int = 1,
+             vmem_bytes: int = VMEM_BYTES) -> TuneResult:
+    """Pick the cheapest feasible (block_r, block_n) for this matrix.
+
+    When no candidate fits VMEM the smallest tile is still returned so
+    callers always get a layout, but the fallback is explicit: the result
+    carries ``feasible=False, fallback=True`` and a warning is logged."""
     best: Optional[TuneResult] = None
     for br in block_r_candidates:
         for bn in block_n_candidates:
-            r = ell_cost(pos, br, bn, dense_cols_bytes)
+            r = ell_cost(pos, br, bn, dense_cols_bytes,
+                         tile_elems=tile_elems, vmem_bytes=vmem_bytes)
             if not r.feasible:
                 continue
             if best is None or r.cost < best.cost:
                 best = r
-    if best is None:  # fall back to the smallest tile
+    if best is None:  # fall back to the smallest tile — explicitly
         best = ell_cost(pos, min(block_r_candidates),
-                        min(block_n_candidates), dense_cols_bytes)
+                        min(block_n_candidates), dense_cols_bytes,
+                        tile_elems=tile_elems, vmem_bytes=vmem_bytes)
+        best.fallback = True
+        log.warning(
+            "tune_ell: no (block_r, block_n) candidate fits VMEM "
+            "(%d bytes); falling back to smallest tile (%d, %d) with "
+            "feasible=False", vmem_bytes, best.block_r, best.block_n)
     return best
+
+
+def tune_block_ell(pos: np.ndarray, block_shape: Tuple[int, int], *,
+                   block_r_candidates: Sequence[int] = DEFAULT_BLOCK_GRID_R,
+                   block_n_candidates: Sequence[int] = DEFAULT_BLOCK_GRID_N,
+                   dense_cols_bytes: int = 0,
+                   vmem_bytes: int = VMEM_BYTES) -> TuneResult:
+    """Tune the (block_R, block_nb) Pallas group shape for a blocked-CSR
+    shard whose ``pos`` indexes the block grid and whose entries are dense
+    ``block_shape`` tiles."""
+    br, bc = block_shape
+    return tune_ell(pos, block_r_candidates=block_r_candidates,
+                    block_n_candidates=block_n_candidates,
+                    dense_cols_bytes=dense_cols_bytes,
+                    tile_elems=int(br) * int(bc), vmem_bytes=vmem_bytes)
 
 
 def heavy_row_split(pos: np.ndarray, crd: np.ndarray, vals: np.ndarray,
                     threshold_factor: float = 8.0):
     """Split heavy rows into a COO overflow lane (the ELL waste fix noted
-    in DESIGN.md §9): rows with degree > threshold·mean keep only the
-    first ``threshold`` entries in the ELL part; the tail goes to a sorted
-    COO list handled by the two-phase segmented-reduction kernel.
+    in DESIGN.md §9): every row keeps at most
+    ``cap = ceil(threshold_factor · mean_degree)`` entries in the ELL
+    part; the overflow beyond that cap goes to a sorted COO list handled
+    by the two-phase segmented-reduction kernel.
 
     Returns ((pos', crd', vals'), (rows_t, cols_t, vals_t)) — ELL part +
     COO tail. Results combine by addition (both kernels scatter-add)."""

@@ -24,11 +24,35 @@ reported just like partition imbalance.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
 INT = np.int32
+
+# Fallback Pallas group shape for blocked shards when the tuner has no
+# feasible candidate (or is bypassed by an explicit caller choice).
+FALLBACK_BLOCK_R = 8
+FALLBACK_BLOCK_NB = 16
+
+
+def resolve_bcsr_tile(pos: np.ndarray, block_shape: Tuple[int, int],
+                      block_R: Optional[int] = None,
+                      block_nb: Optional[int] = None) -> Tuple[int, int]:
+    """Resolve the (block_R, block_nb) group shape for a blocked shard.
+
+    Explicit values win; unset dimensions come from ``tune_block_ell``
+    over the block-grid pos, with the historical (8, 16) defaults as the
+    fallback when the tuner reports no feasible candidate."""
+    if block_R is not None and block_nb is not None:
+        return int(block_R), int(block_nb)
+    from .autotune import tune_block_ell
+    r = tune_block_ell(np.asarray(pos), block_shape)
+    if r.fallback:
+        return (int(block_R) if block_R is not None else FALLBACK_BLOCK_R,
+                int(block_nb) if block_nb is not None else FALLBACK_BLOCK_NB)
+    return (int(block_R) if block_R is not None else r.block_r,
+            int(block_nb) if block_nb is not None else r.block_n)
 
 
 @dataclasses.dataclass
@@ -115,9 +139,16 @@ class BcsrEllBlocks:
 
 
 def bcsr_ell_pack(pos: np.ndarray, crd: np.ndarray, tiles: np.ndarray,
-                  block_R: int = 8, block_nb: int = 16) -> BcsrEllBlocks:
+                  block_R: Optional[int] = None,
+                  block_nb: Optional[int] = None) -> BcsrEllBlocks:
     """Re-block a blocked-CSR (pos, crd, (nb, br, bc) tiles) into
-    block-row-group ELL for the Pallas bcsr kernels."""
+    block-row-group ELL for the Pallas bcsr kernels.
+
+    ``block_R``/``block_nb`` default to the autotuned group shape for
+    this shard's structure (``resolve_bcsr_tile``); pass explicit values
+    to pin a shape (e.g. from a schedule's ``tile_hint``)."""
+    block_R, block_nb = resolve_bcsr_tile(
+        pos, (tiles.shape[1], tiles.shape[2]), block_R, block_nb)
     pos = np.asarray(pos, dtype=np.int64)
     n_brows = pos.shape[0] - 1
     n_groups = max(-(-n_brows // block_R), 1)

@@ -25,7 +25,7 @@ from . import ref
 from .bcsr import bcsr_sddmm, bcsr_spadd3, bcsr_spmm, bcsr_spmv
 from .layout import (bcsr_ell_pack, coo_block_pad, ell_pack,
                      pack_mat_inner_blocks, pack_mat_row_blocks,
-                     pack_vec_blocks)
+                     pack_vec_blocks, resolve_bcsr_tile)
 from .sddmm import sddmm_coo
 from .spadd3 import spadd3_dense_tiles
 from .spmm import spmm_ell
@@ -99,8 +99,11 @@ def spmm(pos, crd, vals, C, impl: str = "xla",
 # ---------------------------------------------------------------------------
 
 def spmv_bcsr(pos, crd, tiles, c, impl: str = "xla",
-              block_R: int = 8, block_nb: int = 16):
-    """y(grid_rows * br,) = BCSR(pos, crd, tiles) @ c — slice to n_rows."""
+              block_R=None, block_nb=None):
+    """y(grid_rows * br,) = BCSR(pos, crd, tiles) @ c — slice to n_rows.
+
+    ``block_R``/``block_nb`` default to the autotuned group shape
+    (``resolve_bcsr_tile``, fallback (8, 16))."""
     tiles = np.asarray(tiles)
     bc = tiles.shape[2]
     grid_cols = -(-np.asarray(c).shape[0] // bc)
@@ -109,6 +112,8 @@ def spmv_bcsr(pos, crd, tiles, c, impl: str = "xla",
         return jax.jit(ref.leaf_bcsr_spmv_rows)(
             jnp.asarray(pos), jnp.asarray(crd), jnp.asarray(tiles),
             jnp.asarray(c_blk))
+    block_R, block_nb = resolve_bcsr_tile(
+        np.asarray(pos), (tiles.shape[1], bc), block_R, block_nb)
     blocks = bcsr_ell_pack(np.asarray(pos), np.asarray(crd), tiles,
                            block_R=block_R, block_nb=block_nb)
     y = bcsr_spmv(jnp.asarray(blocks.brows_rel), jnp.asarray(blocks.crd),
@@ -119,8 +124,11 @@ def spmv_bcsr(pos, crd, tiles, c, impl: str = "xla",
 
 
 def spmm_bcsr(pos, crd, tiles, C, impl: str = "xla",
-              block_R: int = 8, block_nb: int = 16):
-    """Y(grid_rows * br, J) = BCSR @ C(K, J) — slice to n_rows."""
+              block_R=None, block_nb=None):
+    """Y(grid_rows * br, J) = BCSR @ C(K, J) — slice to n_rows.
+
+    ``block_R``/``block_nb`` default to the autotuned group shape
+    (``resolve_bcsr_tile``, fallback (8, 16))."""
     tiles = np.asarray(tiles)
     bc = tiles.shape[2]
     C = np.asarray(C)
@@ -130,6 +138,8 @@ def spmm_bcsr(pos, crd, tiles, C, impl: str = "xla",
         return jax.jit(ref.leaf_bcsr_spmm_rows)(
             jnp.asarray(pos), jnp.asarray(crd), jnp.asarray(tiles),
             jnp.asarray(C_blk))
+    block_R, block_nb = resolve_bcsr_tile(
+        np.asarray(pos), (tiles.shape[1], bc), block_R, block_nb)
     blocks = bcsr_ell_pack(np.asarray(pos), np.asarray(crd), tiles,
                            block_R=block_R, block_nb=block_nb)
     y = bcsr_spmm(jnp.asarray(blocks.brows_rel), jnp.asarray(blocks.crd),
@@ -166,16 +176,23 @@ def sddmm_bcsr(brow, bcol, tiles, C, D, impl: str = "xla",
 
 
 def spadd3_bcsr_dense(bcsr1, bcsr2, bcsr3, n_rows: int, n_cols: int,
-                      impl: str = "pallas", block_R: int = 8):
+                      impl: str = "pallas", block_R=None):
     """Dense(n, m) = B + C + D from three blocked (pos, crd, tiles)
-    triples sharing one block shape — the fused blocked add."""
-    bc = np.asarray(bcsr1[2]).shape[2]
+    triples sharing one block shape — the fused blocked add.
+
+    ``block_R`` defaults to the autotuned group shape for the first
+    operand's structure; one value is used for all three packs (the
+    fused kernel iterates the three group grids in lockstep)."""
+    t1 = np.asarray(bcsr1[2])
+    bc = t1.shape[2]
     grid_cols = -(-n_cols // bc)
     if impl == "xla":
         f = jax.jit(partial(ref.leaf_bcsr_spadd3_dense, grid_cols=grid_cols))
         dense = f(*(jnp.asarray(x) for t in (bcsr1, bcsr2, bcsr3)
                     for x in t))
         return dense[:n_rows, :n_cols]
+    block_R, _ = resolve_bcsr_tile(np.asarray(bcsr1[0]),
+                                   (t1.shape[1], bc), block_R, None)
     packed = [bcsr_ell_pack(np.asarray(p), np.asarray(c), np.asarray(t),
                             block_R=block_R)
               for (p, c, t) in (bcsr1, bcsr2, bcsr3)]

@@ -32,6 +32,36 @@ PEAK_FLOPS = 197e12       # bf16 / chip
 HBM_BW = 819e9            # bytes/s / chip
 ICI_BW = 50e9             # bytes/s / link
 
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Roofline hardware constants bundled with the time formulas — shared
+    by the HLO report below and the plan-time cost model in
+    :mod:`repro.core.plan_search` (which scores candidate schedules before
+    any HLO exists)."""
+
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    def compute_s(self, flops: float) -> float:
+        return flops / self.peak_flops
+
+    def memory_s(self, nbytes: float) -> float:
+        return nbytes / self.hbm_bw
+
+    def collective_s(self, nbytes: float) -> float:
+        return nbytes / self.ici_bw
+
+    def bound_s(self, flops: float, mem_bytes: float,
+                coll_bytes: float) -> float:
+        """Roofline bound: on-chip terms overlap (max), network adds."""
+        return max(self.compute_s(flops), self.memory_s(mem_bytes)) \
+            + self.collective_s(coll_bytes)
+
+
+DEFAULT_HW = HardwareModel()
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
@@ -331,13 +361,14 @@ class HloAnalyzer:
 
 
 def roofline_report(hlo_text: str, *, model_flops_per_device: float = 0.0,
-                    pieces_hint: str = "") -> Dict:
+                    pieces_hint: str = "",
+                    hw: HardwareModel = DEFAULT_HW) -> Dict:
     """Per-device roofline terms from a compiled SPMD HLO module."""
     an = HloAnalyzer(hlo_text)
     c = an.cost()
-    compute_t = c.flops / PEAK_FLOPS
-    memory_t = c.mem_bytes / HBM_BW
-    coll_t = c.total_coll / ICI_BW
+    compute_t = hw.compute_s(c.flops)
+    memory_t = hw.memory_s(c.mem_bytes)
+    coll_t = hw.collective_s(c.total_coll)
     terms = {"compute_s": compute_t, "memory_s": memory_t,
              "collective_s": coll_t}
     dominant = max(terms, key=terms.get)

@@ -51,3 +51,51 @@ def test_tuner_cost_monotone_in_padding():
     r = tune_ell(pos)
     assert 0 <= r.waste < 1
     assert r.padded_nnz >= int(pos[-1])
+
+
+def test_tuner_infeasible_fallback_is_explicit(caplog):
+    """No candidate fits a tiny VMEM budget: the tuner still returns the
+    smallest tile (callers always get a layout) but the fallback is
+    surfaced — feasible=False, fallback=True, and a logged warning —
+    instead of the old silent best=smallest-tile swap."""
+    import logging
+    B = uniform_sparse("B", (256, 256), 0.02, seed=5)
+    pos = B.levels[1].pos
+    with caplog.at_level(logging.WARNING, logger="repro.kernels.autotune"):
+        r = tune_ell(pos, vmem_bytes=64)          # nothing fits 64 bytes
+    assert not r.feasible and r.fallback
+    from repro.kernels.autotune import DEFAULT_BLOCK_N, DEFAULT_BLOCK_R
+    assert (r.block_r, r.block_n) == (min(DEFAULT_BLOCK_R),
+                                      min(DEFAULT_BLOCK_N))
+    assert any("fits VMEM" in rec.message for rec in caplog.records)
+    # a feasible tune never sets the flag
+    ok = tune_ell(pos)
+    assert ok.feasible and not ok.fallback
+
+
+def test_planner_skips_infeasible_tile():
+    """plan_search: an infeasible blocked tune yields points with NO tile
+    hint (the kernels keep their fallback shape) rather than pinning an
+    over-VMEM layout."""
+    from repro.core import plan_search as PS
+    from repro.kernels.autotune import TuneResult
+
+    bad = TuneResult(2, 8, 0, 0.0, 0.0, feasible=False, fallback=True)
+    good = TuneResult(4, 16, 0, 0.0, 0.0, feasible=True)
+    stats_bad = PS.StructStats(entries=10, n0=4, deg=np.ones(4, np.int64),
+                               entry_elems=4, root_tracks_dim0=True,
+                               tile=bad)
+    stats_good = PS.StructStats(entries=10, n0=4, deg=np.ones(4, np.int64),
+                                entry_elems=4, root_tracks_dim0=True,
+                                tile=good)
+    import repro.core as rc
+    B = powerlaw_matrix("B", 32, 32, 4, seed=6)
+    rng = np.random.default_rng(7)
+    c = Tensor.from_dense("c", rng.standard_normal(32).astype(np.float32))
+    stmt = rc.parse_tin("a(i) = B(i,j) * c(j)",
+                        a=Tensor.zeros_dense("a", (32,)), B=B, c=c)
+    m = rc.Machine(("x", 4))
+    assert all(p.tile is None
+               for p in PS.enumerate_points(stmt, m, stats_bad))
+    assert all(p.tile == (4, 16)
+               for p in PS.enumerate_points(stmt, m, stats_good))

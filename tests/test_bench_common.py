@@ -1,0 +1,40 @@
+"""benchmarks.common regression pins (ISSUE 6 satellites): the JSON
+drain must not drop duplicate-name rows, and ``time_fn`` must return a
+true median for even iteration counts."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import common  # noqa: E402
+
+
+def test_drain_keeps_duplicate_names():
+    """Cold/warm patterns time the same name twice; dict(RESULTS) used to
+    silently keep only the last row. Duplicates uniquify as name#N."""
+    common.RESULTS.clear()
+    common.csv_row("cold", 10.0)
+    common.csv_row("cold", 2.0)
+    common.csv_row("warm", 1.0)
+    out = common.drain_results()
+    assert out == {"cold": 10.0, "cold#2": 2.0, "warm": 1.0}
+    assert common.RESULTS == []      # drained
+
+
+def test_time_fn_true_median_even_iters(monkeypatch):
+    # 4 timed intervals of 1, 1, 8, 4 seconds -> sorted 1,1,4,8: the true
+    # median is 2.5 (the old upper-middle pick returned 4).
+    ticks = iter([0.0, 1.0, 1.0, 2.0, 2.0, 10.0, 10.0, 14.0])
+    monkeypatch.setattr(common.time, "perf_counter", lambda: next(ticks))
+    assert common.time_fn(lambda: None, warmup=0, iters=4) == \
+        pytest.approx(2.5)
+
+
+def test_time_fn_median_odd_iters(monkeypatch):
+    # intervals 1, 3, 2 -> median 2
+    ticks = iter([0.0, 1.0, 1.0, 4.0, 4.0, 6.0])
+    monkeypatch.setattr(common.time, "perf_counter", lambda: next(ticks))
+    assert common.time_fn(lambda: None, warmup=0, iters=3) == \
+        pytest.approx(2.0)

@@ -118,6 +118,25 @@ def test_cache_hit_counters_on_kernel():
     np.testing.assert_allclose(k2.run(), k1.run(), atol=1e-5)
 
 
+def test_lru_cache_none_value_hits():
+    """A factory that returns None caches None: the old ``is not None``
+    miss test rebuilt it on every call (and counted a miss each time).
+    One miss, then hits — the tuned-plan cache stores None winners."""
+    from repro.core.cache import LRUCache
+    cache = LRUCache(capacity=4)
+    calls = []
+
+    def factory():
+        calls.append(1)
+        return None
+
+    for _ in range(3):
+        assert cache.get_or_build("k", factory) is None
+    assert len(calls) == 1
+    assert cache.stats["misses"] == 1 and cache.stats["hits"] == 2
+    assert "k" in cache
+
+
 def test_shard_cache_lru_eviction():
     """The shard cache is bounded: with a tiny cap, older entries evict
     (no unbounded growth — the latent bug of the old add-stream cache)
