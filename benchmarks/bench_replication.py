@@ -1,0 +1,124 @@
+"""Communication-avoiding replication at FIXED piece count (ISSUE 7).
+
+SpMM across 1-D (Px1), the best 2-D factorization, and the replicated
+2.5-D grid (P×Q×R with the sparse operand replicated along z): equal
+pieces, three communication structures. The 2.5-D plan pays |B|·(R−1)
+broadcast bytes along z to shrink the output all-reduce from
+|A|·(QR−1) to |A|·(Q−1) — a strict win whenever |A|·Q > |B|, which the
+wide-output shape below sits squarely inside. SpMTTKRP compares the 1-D
+row split against the P×Q×R COO-brick grid. Rows report wall time (us)
+with comm volume + per-axis attribution in the derived column; the
+*_comm_bytes rows carry the byte totals in the numeric column so
+``BENCH_replication.json`` pins the trajectory.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core.lower import (clear_lowering_caches, default_grid3_schedule,
+                              default_grid_schedule,
+                              default_replicated_schedule,
+                              default_row_schedule, lower)
+from repro.core.tensor import Tensor
+from .common import csv_row, time_fn
+
+
+def _spmm_stmt(rng, n, m, j, density=0.02):
+    dB = ((rng.random((n, m)) < density) *
+          rng.standard_normal((n, m))).astype(np.float32)
+    B = Tensor.from_dense("B", dB, F.CSR())
+    C = Tensor.from_dense("C", rng.standard_normal((m, j)).astype(np.float32))
+    return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (n, j)), B=B, C=C)
+
+
+def _spmttkrp_stmt(rng, dims, L, density=0.02):
+    dB = ((rng.random(dims) < density) *
+          rng.standard_normal(dims)).astype(np.float32)
+    B = Tensor.from_dense("B", dB, F.COO(3))
+    C = Tensor.from_dense(
+        "C", rng.standard_normal((dims[1], L)).astype(np.float32))
+    D = Tensor.from_dense(
+        "D", rng.standard_normal((dims[2], L)).astype(np.float32))
+    return rc.parse_tin("A(i,l) = B(i,j,k) * C(j,l) * D(k,l)",
+                        A=Tensor.zeros_dense("A", (dims[0], L)), B=B, C=C,
+                        D=D)
+
+
+def _net(k):
+    return k.comm.total_network_bytes()
+
+
+def _axes(k):
+    return ";".join(f"{a}_bytes={v.network_bytes()}"
+                    for a, v in sorted(k.comm.axes.items()))
+
+
+def run(n=4096, m=4096, j=128, pieces=8, dims3=(256, 128, 96), L=16):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # ---- SpMM: 1-D vs best 2-D vs replicated 2.5-D --------------------
+    stmt = _spmm_stmt(rng, n, m, j)
+    clear_lowering_caches()
+    m1 = rc.Machine(("x", pieces))
+    k1 = lower(stmt, m1, schedule=default_row_schedule(stmt, m1))
+
+    best2 = None
+    for P in range(2, pieces):
+        if pieces % P or pieces // P < 2:
+            continue
+        m2 = rc.Machine(("x", P), ("y", pieces // P))
+        k2 = lower(stmt, m2, schedule=default_grid_schedule(stmt, m2))
+        if best2 is None or _net(k2) < _net(best2):
+            best2 = k2
+    P2, Q2 = best2.strategy.grid_shape
+
+    m3 = rc.Machine(("x", 2), ("y", pieces // 4), ("z", 2))
+    k3 = lower(stmt, m3, schedule=default_replicated_schedule(stmt, m3))
+
+    b1, b2, b3 = _net(k1), _net(best2), _net(k3)
+    assert b3 < b2 < b1, (
+        f"2.5-D SpMM must move strictly fewer bytes than the best 2-D "
+        f"plan at equal pieces, which beats 1-D: {b3} < {b2} < {b1}")
+
+    t1, t2, t3 = time_fn(k1.run), time_fn(best2.run), time_fn(k3.run)
+    rep_mesh = "x".join(str(d.size) for d in m3.dims) + "r"
+    rows += [
+        csv_row(f"spmm_1d_{pieces}x1", t1 * 1e6, f"net_bytes={b1}"),
+        csv_row(f"spmm_2d_{P2}x{Q2}", t2 * 1e6,
+                f"net_bytes={b2};{_axes(best2)}"),
+        csv_row(f"spmm_25d_{rep_mesh}", t3 * 1e6,
+                f"net_bytes={b3};{_axes(k3)}"),
+        csv_row(f"spmm_1d_{pieces}x1_comm_bytes", float(b1), ""),
+        csv_row(f"spmm_2d_{P2}x{Q2}_comm_bytes", float(b2),
+                f"saving_vs_1d={1.0 - b2 / b1:.3f}"),
+        csv_row(f"spmm_25d_{rep_mesh}_comm_bytes", float(b3),
+                f"saving_vs_2d={1.0 - b3 / b2:.3f}"),
+    ]
+
+    # ---- SpMTTKRP: 1-D rows vs P×Q×R bricks ----------------------------
+    stmt3 = _spmttkrp_stmt(rng, dims3, L)
+    clear_lowering_caches()
+    k1 = lower(stmt3, m1, schedule=default_row_schedule(stmt3, m1))
+    mb = rc.Machine(("x", 2), ("y", pieces // 4), ("z", 2))
+    kb = lower(stmt3, mb, schedule=default_grid3_schedule(stmt3, mb))
+    b1, bb = _net(k1), _net(kb)
+    t1, tb = time_fn(k1.run), time_fn(kb.run)
+    brick_mesh = "x".join(str(d.size) for d in mb.dims)
+    rows += [
+        csv_row(f"spmttkrp_1d_{pieces}x1", t1 * 1e6, f"net_bytes={b1}"),
+        csv_row(f"spmttkrp_3d_{brick_mesh}", tb * 1e6,
+                f"net_bytes={bb};{_axes(kb)}"),
+        csv_row(f"spmttkrp_1d_{pieces}x1_comm_bytes", float(b1), ""),
+        csv_row(f"spmttkrp_3d_{brick_mesh}_comm_bytes", float(bb),
+                f"saving_vs_1d={1.0 - bb / b1:.3f}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

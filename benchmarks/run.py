@@ -18,6 +18,10 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
                         conversion-fallback execution they replaced
   bench_autotune      — autoscheduler: auto-chosen schedule vs best/worst
                         hand-picked cell + cold vs tuned-warm lower time
+  bench_replication   — communication-avoiding replication: SpMM comm
+                        volume + wall time across 1-D / best 2-D /
+                        replicated 2.5-D grids and SpMTTKRP across
+                        1-D / P×Q×R bricks, at fixed total pieces
 
 Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
 writes a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
@@ -45,8 +49,8 @@ def main() -> None:
 
     from . import (bench_autotune, bench_bcsr, bench_levels,
                    bench_load_balance, bench_mesh2d, bench_mismatch,
-                   bench_pallas_kernels, bench_replan, bench_spadd3,
-                   bench_vs_interp, bench_weak_scaling)
+                   bench_pallas_kernels, bench_replan, bench_replication,
+                   bench_spadd3, bench_vs_interp, bench_weak_scaling)
     from .common import drain_results
 
     print("name,us_per_call,derived")
@@ -78,6 +82,11 @@ def main() -> None:
         "autotune": lambda: bench_autotune.run(
             *((1024, 1024) if args.quick else (4096, 4096)),
             j=16 if args.quick else 64),
+        "replication": lambda: bench_replication.run(
+            *((1024, 1024) if args.quick else (4096, 4096)),
+            j=32 if args.quick else 128,
+            dims3=(96, 64, 48) if args.quick else (256, 128, 96),
+            L=8 if args.quick else 16),
     }
     only = {s for s in args.only.split(",") if s} if args.only else None
     if only:

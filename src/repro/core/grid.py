@@ -1,38 +1,47 @@
-"""Multi-axis (grid) distribution subsystem — 2-D processor grids.
+"""Multi-axis (grid) distribution subsystem — 2-D and 3-D processor grids.
 
 SpDISTAL's `distribute((i, k, …) → (x, y, …))` maps SEVERAL index
 variables onto a multi-dimensional machine grid (the DISTAL machine
 abstraction, paper §II-C / Fig. 4c), with communication planned per grid
-axis. This module is that subsystem for 2-D grids:
+axis:
 
 - :class:`GridPlan` — the per-axis universe splits and the cross-product
   tile map: color ``(p, q)`` owns row window ``p`` × column window ``q``
-  of the distributed sparse operand (block-aligned when it is blocked).
-- **Per-axis communication planning**: operands sliced by the second loop
-  variable broadcast along ``x`` (all grid rows in a column share them),
-  operands sliced by the first broadcast along ``y``, and — when the
-  second variable is a reduction variable — output partials all-reduce
-  along ``y`` only. This is SUMMA specialized to sparse operands: a 2-D
-  SpMM at P×Q pieces moves ``|C|·(P−1) + |A|·(Q−1)`` bytes versus 1-D's
-  ``|C|·(PQ−1)``, strictly fewer whenever ``|A| < P·|C|``.
+  of the distributed sparse operand (block-aligned when it is blocked);
+  order-3 grids add a third window axis — bricks ``(p, q, r)`` for
+  order-3 operands, nested column splits (one loop variable divided onto
+  two machine axes), and the REPLICATED 2.5-D schedules where the sparse
+  operand keeps its (P, Q) tiles and the third axis splits a loop
+  variable that does not index it.
+- **Per-axis communication planning** (``grid_axis_bytes``): an operand
+  is sliced by the machine axes its distributed index variables ride;
+  along every OTHER axis it is broadcast, hierarchically in grid order
+  (each broadcast multiplies the copies downstream axes must move).
+  Output partials all-reduce along exactly the axes whose distributed
+  variable is a reduction variable. This is SUMMA specialized to sparse
+  operands — a 2-D SpMM at P×Q pieces moves ``|C|·(P−1) + |A|·(Q−1)``
+  bytes versus 1-D's ``|C|·(PQ−1)`` — and, with replication, the
+  communication-avoiding 2.5-D tradeoff: replicating B along ``z``
+  costs ``|B|·(R−1)`` broadcast bytes but shrinks the output all-reduce
+  from ``|A|·(QR−1)`` to ``|A|·(Q−1)``, a win whenever ``|A|·Q > |B|``.
 - **Grid emitters**: the vmap simulation backend for SpMV / SpMM / SDDMM
-  tiles (scalar and blocked), reusing the same leaf kernels as the 1-D
-  path — a tile is just a CSR-convention shard with column-local
-  coordinates contracted against its axis-window co-operand slice. The
-  SPMD analogs live in ``distributed/executor.py`` (``*_grid_rows``
-  builders over a genuine ``Mesh((P, Q), ("x", "y"))`` with ``psum``
-  scoped to the reduction axis only).
+  tiles (scalar and blocked), k-replicated SpMM / SDDMM, brick SpMTTKRP
+  and nested-column SpAdd3 — reusing the same leaf kernels as the 1-D
+  path. The SPMD analogs live in ``distributed/executor.py`` (builders
+  over genuine ``Mesh((P, Q), ...)`` / ``Mesh((P, Q, R), ...)`` with
+  ``psum`` scoped to exactly the reduction axes the schedule leaves).
 
 Grid NON-ZERO schedules do not pass through here: a nested pos-split
 canonicalizes to the flat equal split of the fused position space, so
-``core.lower`` runs them through the 1-D nnz machinery at ``P*Q`` pieces
-(bit-for-bit their ``Px1`` counterparts) and only re-attributes the
-communication to the axes.
+``core.lower`` runs them through the 1-D nnz machinery at ``P*Q(*R)``
+pieces (bit-for-bit their ``Px1`` counterparts) and only re-attributes
+the communication to the axes.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from functools import partial
+from typing import Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,11 +50,13 @@ import numpy as np
 from . import lower as L
 from .partition import (Bounds, ShardedTensor, TensorPartition,
                         block_aligned_row_bounds, materialize_bcsr_grid,
-                        materialize_csr_grid, materialize_dense_cols,
+                        materialize_coo3_grid, materialize_csr_grid,
+                        materialize_dense_cols, materialize_dense_grid,
                         materialize_dense_rows, materialize_replicated,
                         partition_by_bounds, partition_tensor_cols,
-                        partition_tensor_grid, partition_tensor_rows,
-                        replicate_tensor)
+                        partition_tensor_grid, partition_tensor_grid3,
+                        partition_tensor_rows, replicate_tensor)
+from . import formats as F
 from .schedule import DistStrategy
 from .tdn import Machine
 from .tensor import Tensor
@@ -56,19 +67,28 @@ from ..kernels.layout import pack_rowwindow_blocks
 
 @dataclasses.dataclass
 class GridPlan:
-    """Per-axis splits + the cross-product tile map of a 2-D distribution.
+    """Per-axis splits + the cross-product tile map of a grid distribution.
 
     ``row_bounds`` (P, 2) splits the first distributed variable's universe,
     ``col_bounds`` (Q, 2) the second's; the flat color of tile ``(p, q)``
     is ``p * Q + q`` (row-major), the convention every grid shard set and
-    emitter shares. Only universe strategies flow through a GridPlan —
-    grid nnz schedules canonicalize to the flat 1-D split (module
-    docstring)."""
+    emitter shares. Order-3 grids add ``dep_bounds`` (R, 2) — the third
+    distributed variable's windows — with flat color ``(p*Q + q)*R + r``;
+    ``nested`` marks plans whose column windows are the JOINT y×z split of
+    one variable divided twice (``col_bounds`` then has Q·R windows);
+    ``replicate`` carries the strategy's (tensor, axis) replication pairs
+    (the replicated operand keeps 2-D (P, Q) tiles shared across z). Only
+    universe strategies flow through a GridPlan — grid nnz schedules
+    canonicalize to the flat 1-D split (module docstring)."""
 
     axis_x: str
     axis_y: str
     row_bounds: Bounds                # (P, 2) over extent(vars[0])
     col_bounds: Bounds                # (Q, 2) over extent(vars[1])
+    axis_z: Optional[str] = None
+    dep_bounds: Optional[Bounds] = None   # (R, 2) over extent(vars[2])
+    replicate: Tuple[Tuple[str, str], ...] = ()
+    nested: Optional[Tuple[int, int]] = None  # (Q, R) of a joint col split
 
     @property
     def P(self) -> int:
@@ -79,8 +99,12 @@ class GridPlan:
         return int(self.col_bounds.shape[0])
 
     @property
+    def R(self) -> int:
+        return 1 if self.dep_bounds is None else int(self.dep_bounds.shape[0])
+
+    @property
     def pieces(self) -> int:
-        return self.P * self.Q
+        return self.P * self.Q * self.R
 
     def tile_windows(self):
         """Yield ``(p, q, (rlo, rhi), (clo, chi))`` in flat-color order."""
@@ -90,42 +114,136 @@ class GridPlan:
                        (int(self.row_bounds[p, 0]), int(self.row_bounds[p, 1])),
                        (int(self.col_bounds[q, 0]), int(self.col_bounds[q, 1])))
 
-    def validate(self, n_rows: int, n_cols: int) -> None:
-        """Tiling invariant: the P×Q tiles cover ``[0, n_rows) × [0,
-        n_cols)`` exactly once — each axis's windows are sorted, disjoint,
-        and gap-free."""
-        for bounds, n, label in ((self.row_bounds, n_rows, "row"),
-                                 (self.col_bounds, n_cols, "col")):
-            if bounds[0, 0] != 0 or bounds[-1, 1] != n:
-                raise AssertionError(f"{label} windows do not span [0, {n})")
-            for w in range(bounds.shape[0]):
-                if bounds[w, 0] > bounds[w, 1]:
-                    raise AssertionError(f"negative {label} window {w}")
-                if w and bounds[w, 0] != bounds[w - 1, 1]:
-                    raise AssertionError(
-                        f"{label} windows {w - 1}/{w} overlap or gap")
+    def tile_windows3(self):
+        """Yield ``(p, q, r, rw, cw, dw)`` in flat-color order (3-D plans)."""
+        for p in range(self.P):
+            for q in range(self.Q):
+                for r in range(self.R):
+                    yield (p, q, r,
+                           (int(self.row_bounds[p, 0]),
+                            int(self.row_bounds[p, 1])),
+                           (int(self.col_bounds[q, 0]),
+                            int(self.col_bounds[q, 1])),
+                           (int(self.dep_bounds[r, 0]),
+                            int(self.dep_bounds[r, 1])))
+
+    @staticmethod
+    def _check_axis(bounds: Bounds, n: int, label: str) -> None:
+        if bounds[0, 0] != 0 or bounds[-1, 1] != n:
+            raise AssertionError(f"{label} windows do not span [0, {n})")
+        for w in range(bounds.shape[0]):
+            if bounds[w, 0] > bounds[w, 1]:
+                raise AssertionError(f"negative {label} window {w}")
+            if w and bounds[w, 0] != bounds[w - 1, 1]:
+                raise AssertionError(
+                    f"{label} windows {w - 1}/{w} overlap or gap")
+
+    def validate(self, n_rows: int, n_cols: int,
+                 n_dep: Optional[int] = None) -> None:
+        """Tiling invariant: the grid tiles cover ``[0, n_rows) × [0,
+        n_cols)`` (× ``[0, n_dep)`` for 3-D plans) exactly once — each
+        axis's windows are sorted, disjoint, and gap-free."""
+        self._check_axis(self.row_bounds, n_rows, "row")
+        self._check_axis(self.col_bounds, n_cols, "col")
+        if self.dep_bounds is not None:
+            if n_dep is None:
+                raise AssertionError(
+                    "3-D plan validated without the third-axis extent")
+            self._check_axis(self.dep_bounds, n_dep, "dep")
+
+    def validate_coverage(self, part: TensorPartition,
+                          shape: Tuple[int, ...]) -> None:
+        """Per-operand coverage invariant, replication-aware: every
+        dimension the partition windows must be tiled exactly once
+        (sorted, disjoint, gap-free); a dimension with NO windows is
+        replicated — every piece sees its full extent by construction —
+        and legal only when the partition's color count divides the
+        grid's (replica shards are shared across the leftover machine
+        axes, not sliced by them). Applies to the window-structured grid
+        partitions (tiles / bricks / dense grids / slices), whose levels
+        follow dimension order."""
+        for d, lp in enumerate(part.levels):
+            if lp.coord_bounds is None:
+                continue          # replicated / unsplit: full extent
+            self._check_axis(lp.coord_bounds, shape[d], f"dim{d}")
+        if part.pieces and self.pieces % part.pieces:
+            raise AssertionError(
+                f"operand colors ({part.pieces}) do not divide the machine "
+                f"grid ({self.pieces}): replicas cannot be evenly shared")
 
 
 def compute_grid_plan(stmt: Assignment, strat: DistStrategy) -> GridPlan:
-    """Derive the per-axis universe splits for a 2-D universe strategy:
-    equal splits of the two distributed variables' extents, snapped to
-    block boundaries when the distributed sparse operand is blocked (so
-    every co-partitioned tensor shares the same per-color windows)."""
+    """Derive the per-axis universe splits for a grid universe strategy:
+    equal splits of the distributed variables' extents, snapped to block
+    boundaries when the distributed sparse operand is blocked (so every
+    co-partitioned tensor shares the same per-color windows).
+
+    Three-variable strategies dispatch on shape: three DISTINCT variables
+    matching an order-3 sparse operand's leading dimensions → P×Q×R
+    bricks; one variable divided onto two machine axes (vars ``(i, j,
+    j)``) → nested column split (Q·R joint windows); otherwise the third
+    variable does not index the sparse operand — a REPLICATED 2.5-D
+    schedule, which must name the operand in ``strat.replicate``."""
     if not strat.is_grid or strat.space != "universe":
         raise ValueError("grid plan requires a multi-var universe strategy")
-    if len(strat.vars) != 2:
+    if len(strat.vars) not in (2, 3):
         raise NotImplementedError(
-            f"grid distribution supports exactly 2 machine dimensions, got "
+            f"grid distribution supports 2 or 3 machine dimensions, got "
             f"{len(strat.vars)} distributed vars {strat.vars}")
     dx, dy = strat.machine_dims[0], strat.machine_dims[1]
     v0, v1 = strat.vars[0], strat.vars[1]
     spa = stmt.sparse_accesses()[0]
+    Bt = spa.tensor
+    n0, n1 = stmt.var_extent(v0), stmt.var_extent(v1)
+
+    if len(strat.vars) == 3:
+        dz, v2 = strat.machine_dims[2], strat.vars[2]
+        if v1.name == v2.name:
+            # nested column split: one variable rides both y and z — the
+            # effective tiling is (P, Q·R), zero communication (spadd3)
+            if tuple(spa.idx[:2]) != (v0, v1):
+                raise NotImplementedError(
+                    f"nested grid split must divide the sparse operand's "
+                    f"leading variables, got ({v0}, {v1}) for {spa}")
+            return GridPlan(
+                axis_x=dx.name, axis_y=dy.name, axis_z=dz.name,
+                row_bounds=partition_by_bounds(n0, dx.size),
+                col_bounds=partition_by_bounds(n1, dy.size * dz.size),
+                nested=(dy.size, dz.size))
+        if len(spa.idx) >= 3 and tuple(spa.idx[:3]) == (v0, v1, v2):
+            # order-3 bricks (spmttkrp)
+            return GridPlan(
+                axis_x=dx.name, axis_y=dy.name, axis_z=dz.name,
+                row_bounds=partition_by_bounds(n0, dx.size),
+                col_bounds=partition_by_bounds(n1, dy.size),
+                dep_bounds=partition_by_bounds(stmt.var_extent(v2), dz.size))
+        # replicated 2.5-D: v2 does not index the sparse operand — B keeps
+        # its (P, Q) tiles, shared by every z-slice; replication must be
+        # DECLARED, it is a schedule decision, not an inference
+        if tuple(spa.idx[:2]) != (v0, v1):
+            raise NotImplementedError(
+                f"grid distribution must distribute the sparse operand's "
+                f"first two index variables, got ({v0}, {v1}) for {spa}")
+        rep = dict(strat.replicate)
+        if rep.get(Bt.name) != dz.name:
+            raise ValueError(
+                f"3-var grid schedule: {v2} does not index the sparse "
+                f"operand {Bt.name} — declare the replication explicitly "
+                f"with .replicate([{Bt.name}], {dz.name})")
+        if getattr(Bt.format, "is_blocked", False):
+            raise NotImplementedError(
+                "replicated 2.5-D schedules support scalar sparse formats")
+        return GridPlan(
+            axis_x=dx.name, axis_y=dy.name, axis_z=dz.name,
+            row_bounds=partition_by_bounds(n0, dx.size),
+            col_bounds=partition_by_bounds(n1, dy.size),
+            dep_bounds=partition_by_bounds(stmt.var_extent(v2), dz.size),
+            replicate=strat.replicate)
+
     if tuple(spa.idx[:2]) != (v0, v1):
         raise NotImplementedError(
             f"2-D grid distribution must distribute the sparse operand's "
             f"first two index variables, got ({v0}, {v1}) for {spa}")
-    n0, n1 = stmt.var_extent(v0), stmt.var_extent(v1)
-    Bt = spa.tensor
     if getattr(Bt.format, "is_blocked", False):
         br, bc = Bt.format.block_shape
         row_bounds = block_aligned_row_bounds(n0, dx.size, br)
@@ -137,104 +255,141 @@ def compute_grid_plan(stmt: Assignment, strat: DistStrategy) -> GridPlan:
                     row_bounds=row_bounds, col_bounds=col_bounds)
 
 
-def _grid_tag(acc, v0, v1) -> str:
-    """Which slicing a grid schedule gives this access: ``xy`` = cross
-    product tiles, ``x``/``y`` = sliced by that axis's windows, ``*`` =
-    replicated. The tag is also the communication key: an operand sliced
-    along one axis broadcasts along the ORTHOGONAL axis."""
+def _var_dim_map(strat: DistStrategy) -> Dict[str, List[str]]:
+    """Distributed variable name → the machine axes it rides (two axes for
+    a nested divide)."""
+    m: Dict[str, List[str]] = {}
+    for v, d in zip(strat.vars, strat.machine_dims):
+        m.setdefault(v.name, []).append(d.name)
+    return m
+
+
+def _sliced_dims(acc, strat: DistStrategy,
+                 vdm: Dict[str, List[str]]) -> Set[str]:
+    """Machine axes that SLICE this access — the communication key: along
+    every other axis the operand is broadcast (shared by all colors of
+    that axis). The distributed sparse operand is sliced by the axes of
+    its matching leading variables; a dense operand by the axis of a
+    distributed variable at position 0 (row windows, when dim 0 is the
+    storage root) or position 1 (column windows, all-dense only)."""
     t = acc.tensor
-    idx = tuple(acc.idx)
-    if (t.format.is_sparse and len(idx) >= 2
-            and idx[0] == v0 and idx[1] == v1):
-        return "xy"
-    if v0 in idx and idx.index(v0) == 0 and t.format.level_of_dim(0) == 0:
-        return "x"
-    if v1 in idx and idx.index(v1) == 0 and t.format.level_of_dim(0) == 0:
-        return "y"
-    if v1 in idx and idx.index(v1) == 1 and t.format.is_all_dense:
-        return "ycols"
-    return "*"
+    names = [v.name for v in acc.idx]
+    vs = [v.name for v in strat.vars]
+    if t.format.is_sparse and len(names) >= 2 and names[:2] == vs[:2]:
+        sliced = set(vdm[names[0]]) | set(vdm[names[1]])
+        if len(names) >= 3 and len(vs) >= 3 and names[2] == vs[2]:
+            sliced |= set(vdm[names[2]])
+        return sliced
+    sliced: Set[str] = set()
+    if names and names[0] in vdm and t.format.level_of_dim(0) == 0:
+        sliced.add(vdm[names[0]][0])
+    if len(names) > 1 and names[1] in vdm and t.format.is_all_dense:
+        sliced.add(vdm[names[1]][-1])
+    return sliced
 
 
-def _grid_axis_tags(stmt: Assignment, strat: DistStrategy,
-                    ) -> Dict[str, str]:
-    v0, v1 = strat.vars[0], strat.vars[1]
-    tags: Dict[str, str] = {}
-    for acc in stmt.accesses():
-        tags.setdefault(acc.tensor.name, _grid_tag(acc, v0, v1))
-    return tags
+def _axis_bounds(gp: GridPlan) -> Dict[str, Bounds]:
+    b = {gp.axis_x: gp.row_bounds, gp.axis_y: gp.col_bounds}
+    if gp.dep_bounds is not None:
+        b[gp.axis_z] = gp.dep_bounds
+    return b
 
 
 def _grid_plans(stmt: Assignment, strat: DistStrategy, gp: GridPlan,
-                ) -> Tuple[Dict[str, TensorPartition], Dict[str, str]]:
+                ) -> Dict[str, TensorPartition]:
     """Fig. 9a steps 1 & 2 on a grid: the distributed sparse operand (and a
-    sparse output sharing its index pattern) takes cross-product tiles;
-    every other operand is sliced by whichever distributed variable
-    indexes it — tagged with the axis it rides (``axis_of``)."""
-    axis_of = _grid_axis_tags(stmt, strat)
+    sparse output sharing its index pattern) takes cross-product tiles /
+    bricks; every other operand is sliced by whichever distributed
+    variables index it — row windows, column windows, both (a dense
+    grid), or neither (replication)."""
+    vdm = _var_dim_map(strat)
+    ab = _axis_bounds(gp)
+    vs = [v.name for v in strat.vars]
     plans: Dict[str, TensorPartition] = {}
     for acc in stmt.accesses():
         t = acc.tensor
         if t.name in plans:
             continue
-        tag = axis_of[t.name]
-        if tag == "xy":
-            plans[t.name] = partition_tensor_grid(t, gp.row_bounds,
-                                                  gp.col_bounds)
-        elif tag == "x":
-            plans[t.name] = partition_tensor_rows(t, gp.row_bounds)
-        elif tag == "y":
-            plans[t.name] = partition_tensor_rows(t, gp.col_bounds)
-        elif tag == "ycols":
-            plans[t.name] = partition_tensor_cols(t, gp.col_bounds)
+        names = [v.name for v in acc.idx]
+        if t.format.is_sparse and len(names) >= 2 and names[:2] == vs[:2]:
+            if (gp.dep_bounds is not None and not gp.replicate
+                    and len(names) >= 3 and names[2] == vs[2]):
+                plans[t.name] = partition_tensor_grid3(
+                    t, gp.row_bounds, gp.col_bounds, gp.dep_bounds)
+            else:
+                # 2-D tiles: also the nested joint split (col_bounds is
+                # the Q·R product) and the replicated operand's SHARED
+                # (P, Q) tiling — the same partition, and therefore the
+                # same SHARD_CACHE key, as the unreplicated 2-D plan
+                plans[t.name] = partition_tensor_grid(
+                    t, gp.row_bounds, gp.col_bounds)
+            continue
+        row_axis = col_axis = None
+        if names and names[0] in vdm and t.format.level_of_dim(0) == 0:
+            row_axis = vdm[names[0]][0]
+        if len(names) > 1 and names[1] in vdm and t.format.is_all_dense:
+            col_axis = vdm[names[1]][-1]
+        if row_axis is not None and col_axis is not None:
+            plans[t.name] = partition_tensor_grid(
+                t, ab[row_axis], ab[col_axis])
+        elif row_axis is not None:
+            plans[t.name] = partition_tensor_rows(t, ab[row_axis])
+        elif col_axis is not None:
+            plans[t.name] = partition_tensor_cols(t, ab[col_axis])
         else:
             plans[t.name] = replicate_tensor(t, gp.pieces)
-    return plans, axis_of
+    return plans
 
 
 def grid_axis_bytes(stmt: Assignment, strat: DistStrategy,
                     ) -> Dict[str, "L.AxisComm"]:
-    """Per-axis byte formulas of a 2-D grid schedule, computed from the
-    statement + strategy alone (no GridPlan / partitioning needed): an
-    operand sliced along one axis is shared by (broadcast to) every color
-    of the ORTHOGONAL axis; a fully replicated operand broadcasts
-    hierarchically (x once, then y within each of the P grid rows); when
-    the column variable is a reduction variable, every grid row
-    all-reduces its output window along y.
+    """Per-axis byte formulas of a grid schedule, computed from the
+    statement + strategy alone (no GridPlan / partitioning needed).
+
+    Broadcast: walking the machine axes in grid order, an operand NOT
+    sliced by an axis is broadcast along it; each such broadcast
+    multiplies the copies every later broadcast axis must move (a fully
+    replicated operand on a 2-D grid moves ``|t|`` along x, then ``P·|t|``
+    along y — one copy per grid row). A replicated 2.5-D operand is
+    sliced by x and y but not z, so it lands exactly ``|t|`` on z:
+    network bytes ``|t|·(R−1)`` = payload × (replicas − 1).
+
+    Reduce: output partials all-reduce along exactly the axes whose
+    distributed variable is a reduction variable, hierarchically in grid
+    order (spmttkrp bricks: ``|A|`` along y then ``Q·|A|`` along z).
+    Replication REMOVES an axis from this set by splitting a
+    non-reduction variable over it — the 2.5-D saving.
 
     This is both the ledger `lower_grid` records on the kernel and the
-    estimator `core.plan_search` scores 2-D candidates with before
+    estimator `core.plan_search` scores grid candidates with before
     committing to a plan."""
-    v0, v1 = strat.vars[0], strat.vars[1]
-    dx, dy = strat.machine_dims[0], strat.machine_dims[1]
-    P = dx.size
+    dims = strat.machine_dims
+    vdm = _var_dim_map(strat)
     out_name = stmt.lhs.tensor.name
-    axes = {dx.name: L.AxisComm(size=dx.size),
-            dy.name: L.AxisComm(size=dy.size)}
+    axes = {d.name: L.AxisComm(size=d.size) for d in dims}
     seen = set()
     for acc in stmt.accesses():
         t = acc.tensor
         if t.name in seen or t.name == out_name:
             continue
         seen.add(t.name)
-        tag = _grid_tag(acc, v0, v1)
-        if tag == "xy":
-            continue                      # tiles: owned, nothing moves
-        if tag == "*":
-            axes[dx.name].broadcast_bytes += L._nbytes(t)
-            axes[dy.name].broadcast_bytes += P * L._nbytes(t)
-        elif tag in ("y", "ycols"):       # sliced by y → broadcast along x
-            axes[dx.name].broadcast_bytes += L._nbytes(t)
-        else:                             # sliced by x → broadcast along y
-            axes[dy.name].broadcast_bytes += L._nbytes(t)
-    if v1 in stmt.reduction_vars:
-        axes[dy.name].reduce_bytes += L._nbytes(stmt.lhs.tensor)
+        sliced = _sliced_dims(acc, strat, vdm)
+        m = 1
+        for d in dims:
+            if d.name in sliced:
+                continue
+            axes[d.name].broadcast_bytes += m * L._nbytes(t)
+            m *= d.size
+    m = 1
+    for d, v in zip(dims, strat.vars):
+        if v in stmt.reduction_vars:
+            axes[d.name].reduce_bytes += m * L._nbytes(stmt.lhs.tensor)
+            m *= d.size
     return axes
 
 
-def _grid_comm(stmt: Assignment, strat: DistStrategy, gp: GridPlan,
-               plans: Dict[str, TensorPartition], axis_of: Dict[str, str],
-               out_t: Tensor) -> L.CommStats:
+def _grid_comm(stmt: Assignment, strat: DistStrategy,
+               gp: GridPlan) -> L.CommStats:
     """Per-axis communication plan recorded on the kernel — the shared
     ``grid_axis_bytes`` formulas over the normalized statement (whose
     access tensors are exactly the planned tensors)."""
@@ -261,15 +416,14 @@ def lower_grid(stmt: Assignment, machine: Machine, strat: DistStrategy,
             current.setdefault(acc.tensor.name, acc.tensor)
         plans = {name: dataclasses.replace(p, tensor=current[name])
                  for name, p in plans.items()}
-        axis_of = _grid_axis_tags(stmt, strat)
     else:
-        plans, axis_of = _grid_plans(stmt, strat, gp)
+        plans = _grid_plans(stmt, strat, gp)
         if plan_key is not None:
             L._PLAN_CACHE.put(plan_key, {
                 name: dataclasses.replace(p, tensor=None)
                 for name, p in plans.items()})
 
-    comm = _grid_comm(stmt, strat, gp, plans, axis_of, out_t)
+    comm = _grid_comm(stmt, strat, gp)
 
     # ---- materialize ------------------------------------------------------
     shards: Dict[str, ShardedTensor] = {}
@@ -279,10 +433,15 @@ def lower_grid(stmt: Assignment, machine: Machine, strat: DistStrategy,
         t = plan.tensor
         if plan.replicated:
             shards[name] = materialize_replicated(t, gp.pieces)
-        elif plan.grid is not None:
+        elif plan.grid is not None and len(plan.grid) == 3:
+            shards[name] = materialize_coo3_grid(t, plan)
+        elif plan.grid is not None and t.format.is_sparse:
             shards[name] = (materialize_bcsr_grid(t, plan)
                             if t.format.is_blocked
                             else materialize_csr_grid(t, plan))
+        elif plan.grid is not None:
+            shards[name] = materialize_dense_grid(
+                t, plan.levels[0].coord_bounds, plan.levels[1].coord_bounds)
         elif plan.root_coord_bounds is None:
             shards[name] = materialize_dense_cols(
                 t, plan.levels[1].coord_bounds)
@@ -320,16 +479,29 @@ def lower_grid(stmt: Assignment, machine: Machine, strat: DistStrategy,
 
 def _emit_grid(stmt, strat, gp, plans, shards, jit=True):
     sig = stmt.signature()
-    table = {
-        "d1(i)=s2(i,j)*d1(j)": _emit_spmv_grid,
-        "d2(i,j)=s2(i,k)*d2(k,j)": _emit_spmm_grid,
-        "s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)": _emit_sddmm_grid,
-    }
+    if gp.replicate:
+        table = {
+            "d2(i,j)=s2(i,k)*d2(k,j)": _emit_spmm_grid_rep,
+            "s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)": _emit_sddmm_grid_rep,
+        }
+        kind = "replicated 2.5-D"
+    elif gp.dep_bounds is not None:
+        table = {
+            "d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)": _emit_spmttkrp_grid3,
+        }
+        kind = "3-D brick"
+    else:
+        table = {
+            "d1(i)=s2(i,j)*d1(j)": _emit_spmv_grid,
+            "d2(i,j)=s2(i,k)*d2(k,j)": _emit_spmm_grid,
+            "s2(i,j)=s2(i,j)*d2(i,k)*d2(k,j)": _emit_sddmm_grid,
+            "s2(i,j)=s2(i,j)+s2(i,j)+s2(i,j)": _emit_spadd3_grid,
+        }
+        kind = "nested-column grid" if gp.nested else "2-D grid"
     emitter = table.get(sig)
     if emitter is None:
         raise NotImplementedError(
-            f"no 2-D grid emitter for {sig}; schedule a 1-D distribution "
-            "(spmv/spmm/sddmm are grid-distributable)")
+            f"no {kind} emitter for {sig}; schedule a 1-D distribution")
     return emitter(stmt, gp, plans, shards, jit=jit)
 
 
@@ -501,6 +673,168 @@ def _emit_sddmm_grid(stmt, gp, plans, shards, jit=True):
                       new_vals, Bt.dtype)
 
     return "sddmm_grid_rows", run
+
+
+# ---------------------------------------------------------------------------
+# Communication-avoiding emitters: 2.5-D replicated SpMM / SDDMM (the sparse
+# operand keeps its (P, Q) tiles — fingerprint-shared across the z axis —
+# while the third machine axis splits a non-reduction loop variable), the
+# P×Q×R brick SpMTTKRP, and the nested-column SpAdd3.
+# ---------------------------------------------------------------------------
+
+def _emit_spmm_grid_rep(stmt, gp, plans, shards, jit=True):
+    """2.5-D SpMM: B(i, k) tiled (P, Q) and replicated along z; C(k, j)
+    dense-grid sliced (k by y, j by z); each z-slice r computes the SAME
+    (P, Q) SUMMA as the unreplicated 2-D plan restricted to its column
+    window — partials sum along y only (the all-reduce the replication
+    spares shrinks from QR−1 to Q−1 hops), and the z-slices concatenate
+    disjoint output columns. Bit-for-bit equal to the (P, Q) 2-D plan:
+    output columns are independent lanes of the same leaf contraction."""
+    Bacc, Cacc = stmt.rhs.accesses()
+    B, C = shards[Bacc.tensor.name], shards[Cacc.tensor.name]
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    P, Q = int(B.meta["P"]), int(B.meta["Q"])
+    R = int(gp.R)
+    mr = int(B.meta["max_rows"])
+    max_jw = int(C.meta["max_cols"])
+    Cw = C.arrays["vals"]                         # (Q, R, max_kw, max_jw)
+    widths = tuple(int(w) for w in C.arrays["col_count"])   # (R,)
+
+    def fn(pos, crd, vals, Cw, row_start, row_count):
+        _, q = _color_axes(pos.shape[0], Q)
+        outs = []
+        for r in range(R):
+            blocks = jax.vmap(
+                lambda p_, c_, v_, q_:
+                K.leaf_spmm_rows(p_, c_, v_, Cw[q_, r]))(
+                pos, crd, vals, q)               # (P*Q, mr, max_jw)
+            partial = blocks.reshape(P, Q, mr, max_jw).sum(axis=1)
+            outs.append(L._scatter_rows((out_shape[0], max_jw), partial,
+                                        row_start, row_count)[:, :widths[r]])
+        return jnp.concatenate(outs, axis=1)
+
+    args = (a["pos1"], a["crd1"], a["vals"], Cw,
+            a["row_start"], a["row_count"])
+    f = L._runner(jit, "spmm_grid_rep_rows",
+                  (P, Q, R, mr, max_jw, widths) + out_shape, args,
+                  lambda: fn)
+    return "spmm_grid_rep_rows", lambda: np.asarray(f(*args))
+
+
+def _emit_sddmm_grid_rep(stmt, gp, plans, shards, jit=True):
+    """2.5-D SDDMM: B's sampling tiles stay (P, Q), shared across z; the
+    contraction variable k splits over z — C(i, k) dense-grid (x rows ×
+    z cols), D(k, j) dense-grid (z rows × y cols). Each z-slice samples a
+    partial dot product; partials sum along z (the only reduction axis)
+    and scatter home by B's stored positions."""
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]               # (P, R, max_rw, max_kw)
+    D = shards[accs[2].tensor.name]               # (R, Q, max_kw, max_mw)
+    Bt = accs[0].tensor
+    a = B.arrays
+    Q = int(B.meta["Q"])
+    R = int(gp.R)
+    Cw, Dw = C.arrays["vals"], D.arrays["vals"]
+    total_nnz = Bt.nnz
+
+    def fn(pos, crd, vals, Cw, Dw, val_idx, nnz_count):
+        p, q = _color_axes(pos.shape[0], Q)
+        out = jnp.zeros(crd.shape, dtype=vals.dtype)
+        for r in range(R):
+            out = out + jax.vmap(
+                lambda pos_, crd_, v_, p_, q_:
+                K.leaf_sddmm_rows(pos_, crd_, v_, Cw[p_, r], Dw[r, q_]))(
+                pos, crd, vals, p, q)            # (P*Q, max_tnnz)
+        return L._scatter_by_val_idx(total_nnz, out, val_idx, nnz_count)
+
+    args = (a["pos1"], a["crd1"], a["vals"], Cw, Dw, a["val_idx"],
+            a["nnz_count"])
+    f = L._runner(jit, "sddmm_grid_rep_rows", (total_nnz, Q, R), args,
+                  lambda: fn)
+
+    def run():
+        new_vals = np.asarray(f(*args))
+        return Tensor(stmt.lhs.tensor.name, Bt.shape, Bt.format, Bt.levels,
+                      new_vals, Bt.dtype)
+
+    return "sddmm_grid_rep_rows", run
+
+
+def _emit_spmttkrp_grid3(stmt, gp, plans, shards, jit=True):
+    """P×Q×R brick SpMTTKRP: brick (p, q, r) contracts its COO entries
+    (brick-local coordinates) against C's q-th and D's r-th row windows;
+    partials sum over the Q·R bricks sharing a row window (the y and z
+    all-reduce) and scatter into the output rows."""
+    accs = stmt.rhs.accesses()
+    B = shards[accs[0].tensor.name]
+    C = shards[accs[1].tensor.name]               # (Q, max_jw, L)
+    D = shards[accs[2].tensor.name]               # (R, max_kw, L)
+    out_shape = stmt.lhs.tensor.shape
+    a = B.arrays
+    P, Q, R = int(B.meta["P"]), int(B.meta["Q"]), int(B.meta["R"])
+    max_rows = int(B.meta["max_rows"])
+    Cw, Dw = C.arrays["vals"], D.arrays["vals"]
+
+    def fn(d0, d1, d2, vals, Cw, Dw, row_start, row_count):
+        color = jnp.arange(d0.shape[0], dtype=jnp.int32)
+        q = (color // R) % Q
+        r = color % R
+        blocks = jax.vmap(
+            lambda i_, j_, k_, v_, q_, r_:
+            K.leaf_spmttkrp_nnz(i_, j_, k_, v_, Cw[q_], Dw[r_], max_rows))(
+            d0, d1, d2, vals, q, r)              # (P*Q*R, max_rows, L)
+        partial = blocks.reshape(P, Q * R, max_rows, out_shape[1]).sum(axis=1)
+        return L._scatter_rows(out_shape, partial, row_start, row_count)
+
+    args = (a["dim0"], a["dim1"], a["dim2"], a["vals"], Cw, Dw,
+            a["row_start"], a["row_count"])
+    f = L._runner(jit, "spmttkrp_grid3_rows", (P, Q, R, max_rows) + out_shape,
+                  args, lambda: fn)
+    return "spmttkrp_grid3_rows", lambda: np.asarray(f(*args))
+
+
+def _emit_spadd3_grid(stmt, gp, plans, shards, jit=True):
+    """Grid SpAdd3: all three addends share the same (P, Qr) tile windows
+    (Qr = Q·R for a nested 3-D split), so each tile unions its three
+    local coordinate sets with the 1-D leaf — zero communication — and
+    host assembly offsets rows AND columns back to global coordinates."""
+    accs = stmt.rhs.accesses()
+    Bs = [shards[acc.tensor.name] for acc in accs]
+    n_rows, n_cols = stmt.lhs.tensor.shape
+    Qr = int(Bs[0].meta["Q"])
+    max_cw = int(np.asarray(Bs[0].arrays["col_count"]).max())
+
+    def fn(args):
+        (p1, c1, v1), (p2, c2, v2), (p3, c3, v3) = args
+        leaf = partial(K.leaf_spadd3_rows, n_cols=max_cw)
+        return jax.vmap(leaf)(p1, c1, v1, p2, c2, v2, p3, c3, v3)
+
+    args = tuple(
+        (S.arrays["pos1"], S.arrays["crd1"], S.arrays["vals"]) for S in Bs)
+    flat = tuple(x for trip in args for x in trip)
+    f = L._runner(jit, "spadd3_grid_rows", (n_rows, n_cols, Qr, max_cw),
+                  flat, lambda: fn)
+
+    def run():
+        rows, cols, vals, counts = (np.asarray(x) for x in f(args))
+        rs = np.asarray(Bs[0].arrays["row_start"])
+        cs = np.asarray(Bs[0].arrays["col_start"])
+        out_rows, out_cols, out_vals = [], [], []
+        for color in range(rows.shape[0]):
+            p, q = divmod(color, Qr)
+            k = int(counts[color])
+            out_rows.append(rows[color, :k] + rs[p])
+            out_cols.append(cols[color, :k] + cs[q])
+            out_vals.append(vals[color, :k])
+        coords = np.stack([np.concatenate(out_rows),
+                           np.concatenate(out_cols)], 1)
+        return Tensor.from_coo(stmt.lhs.tensor.name, (n_rows, n_cols),
+                               coords, np.concatenate(out_vals),
+                               F.CSR(), dedupe=True)
+
+    return "spadd3_grid_rows", run
 
 
 # -- per-window block packing for the blocked grid leaves -------------------

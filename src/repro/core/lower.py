@@ -636,19 +636,14 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
     # reverse) — totals are unchanged (b*(PQ-1)), the per-axis ledger is
     # what the comm-volume benches and the SPMD psum scoping read.
     if strat.is_grid:
-        if len(strat.machine_dims) != 2:
-            raise NotImplementedError(
-                f"grid distribution supports exactly 2 machine dimensions, "
-                f"got {len(strat.machine_dims)}")
-        dx, dy = strat.machine_dims[0], strat.machine_dims[1]
-        comm.axes = {
-            dx.name: AxisComm(size=dx.size,
-                              broadcast_bytes=comm.replicate_bytes,
-                              reduce_bytes=comm.reduce_bytes),
-            dy.name: AxisComm(size=dy.size,
-                              broadcast_bytes=dx.size * comm.replicate_bytes,
-                              reduce_bytes=dx.size * comm.reduce_bytes),
-        }
+        m = 1
+        axes = {}
+        for d in strat.machine_dims:
+            axes[d.name] = AxisComm(size=d.size,
+                                    broadcast_bytes=m * comm.replicate_bytes,
+                                    reduce_bytes=m * comm.reduce_bytes)
+            m *= d.size
+        comm.axes = axes
         comm.replicate_bytes = 0
         comm.reduce_bytes = 0
 
@@ -677,6 +672,7 @@ def _plan_cache_key(stmt: Assignment, strat: DistStrategy,
     return (stmt.signature(), strat.space,
             tuple(v.name for v in strat.vars),
             tuple(d.size for d in strat.machine_dims),
+            tuple(strat.replicate),
             weights_fingerprint(weights), tuple(ops))
 
 
@@ -860,12 +856,75 @@ def default_grid_nnz_schedule(stmt: Assignment, machine: Machine) -> Schedule:
         nf = IndexVar(f"{f.name}{v.name}")
         s.fuse(f, v, nf)
         f = nf
-    fo, fi = IndexVar(f"{f.name}o"), IndexVar(f"{f.name}i")
-    s.pos_split(f, fo, fi, machine.dims[0])
-    fio, fii = IndexVar(f"{fi.name}o"), IndexVar(f"{fi.name}i")
-    s.pos_split(fi, fio, fii, machine.dims[1])
-    s.distribute(fo, fio)
-    s.communicate(stmt.tensors(), fo)
+    outers = []
+    cur = f
+    for d in machine.dims:
+        co, ci = IndexVar(f"{cur.name}o"), IndexVar(f"{cur.name}i")
+        s.pos_split(cur, co, ci, d)
+        outers.append(co)
+        cur = ci
+    s.distribute(*outers)
+    s.communicate(stmt.tensors(), outers[0])
+    return s
+
+
+def default_grid3_schedule(stmt: Assignment, machine: Machine) -> Schedule:
+    """3-D universe schedule over an order-3 machine grid. An order-3
+    sparse operand maps its three index variables onto the three machine
+    dimensions (P×Q×R COO bricks); an order-2 operand nests a second
+    divide of its column variable so the grid reads ``i → x, j → (y, z)``
+    (the joint Q·R column split used by spadd3)."""
+    if len(machine.dims) < 3:
+        raise ValueError("grid3 schedule needs a 3-D machine")
+    spa = stmt.sparse_accesses()[0]
+    s = Schedule(stmt, machine)
+    if len(spa.idx) >= 3:
+        outers = []
+        for v, d in zip(spa.idx[:3], machine.dims[:3]):
+            vo, vi = IndexVar(f"{v.name}o"), IndexVar(f"{v.name}i")
+            s.divide(v, vo, vi, d)
+            outers.append(vo)
+        s.distribute(*outers)
+        s.communicate(stmt.tensors(), outers[0])
+        return s
+    i, j = spa.idx[0], spa.idx[1]
+    io, ii = IndexVar(f"{i.name}o"), IndexVar(f"{i.name}i")
+    jo, ji = IndexVar(f"{j.name}o"), IndexVar(f"{j.name}i")
+    jio, jii = IndexVar(f"{ji.name}o"), IndexVar(f"{ji.name}i")
+    s.divide(i, io, ii, machine.dims[0])
+    s.divide(j, jo, ji, machine.dims[1])
+    s.divide(ji, jio, jii, machine.dims[2])
+    s.distribute(io, jo, jio)
+    s.communicate(stmt.tensors(), io)
+    return s
+
+
+def default_replicated_schedule(stmt: Assignment, machine: Machine) -> Schedule:
+    """2.5-D communication-avoiding schedule: tile the sparse operand over
+    the first two machine dimensions (as the 2-D grid schedule does) and
+    split the remaining dense loop variable over the third, replicating
+    the sparse operand along it — each z-layer computes a disjoint slab of
+    the dense contraction, so the cross-grid reduction shrinks from a
+    (Q·R−1)-hop all-reduce to (Q−1) hops at the cost of broadcasting the
+    sparse operand R−1 extra times."""
+    if len(machine.dims) < 3:
+        raise ValueError("replicated schedule needs a 3-D machine")
+    spa = stmt.sparse_accesses()[0]
+    v0, v1 = spa.idx[0], spa.idx[1]
+    rest = [v for v in stmt.all_vars if v not in spa.idx]
+    if not rest:
+        raise ValueError("replicated schedule needs a loop variable outside "
+                         "the sparse operand's index set")
+    v2 = rest[0]
+    s = Schedule(stmt, machine)
+    outers = []
+    for v, d in zip((v0, v1, v2), machine.dims[:3]):
+        vo, vi = IndexVar(f"{v.name}o"), IndexVar(f"{v.name}i")
+        s.divide(v, vo, vi, d)
+        outers.append(vo)
+    s.distribute(*outers)
+    s.replicate([spa.tensor], machine.dims[2])
+    s.communicate(stmt.tensors(), outers[0])
     return s
 
 

@@ -148,10 +148,11 @@ class TensorPartition:
     # Bounds over the *root coordinate space* (output-row ownership etc.).
     root_coord_bounds: Optional[Bounds] = None
     overlapping_root: bool = False  # preimage-derived roots may overlap
-    # (P, Q) when this is a 2-D grid tile partition: colors are row-major
-    # over the P×Q cross product of levels[0] row windows × levels[1]
-    # column windows (core/grid.py). None for all 1-D partitions.
-    grid: Optional[Tuple[int, int]] = None
+    # Grid shape when this is a multi-axis tile partition: (P, Q) colors
+    # are row-major over the P×Q cross product of levels[0] row windows ×
+    # levels[1] column windows; (P, Q, R) bricks extend the cross product
+    # to levels[2] windows (core/grid.py). None for all 1-D partitions.
+    grid: Optional[Tuple[int, ...]] = None
     # Transpose-walked universe partitions (column-major roots — CSC,
     # BCSC): the row walk's permutation, walk position → storage position.
     # ``vals_bounds`` then index the WALK space; materializers permute the
@@ -502,6 +503,24 @@ def partition_tensor_grid(tensor: Tensor, row_bounds: Bounds,
         tensor=tensor, pieces=P * Q, levels=levels,
         vals_bounds=None, root_coord_bounds=row_bounds.copy(),
         overlapping_root=False, grid=(P, Q),
+    )
+
+
+def partition_tensor_grid3(tensor: Tensor, b0: Bounds, b1: Bounds,
+                           b2: Bounds) -> TensorPartition:
+    """Order-3 cross-product brick partition: color ``(p, q, r)`` (row-major
+    flat color ``(p*Q + q)*R + r``) owns the dimension-0 window ``b0[p]`` ×
+    dimension-1 window ``b1[q]`` × dimension-2 window ``b2[r]`` — the 2-D
+    grid tiling lifted to P×Q×R machine grids for order-3 operands
+    (spmttkrp bricks)."""
+    P, Q, R = b0.shape[0], b1.shape[0], b2.shape[0]
+    levels = [LevelPartition(coord_bounds=b0.copy()),
+              LevelPartition(coord_bounds=b1.copy()),
+              LevelPartition(coord_bounds=b2.copy())]
+    return TensorPartition(
+        tensor=tensor, pieces=P * Q * R, levels=levels,
+        vals_bounds=None, root_coord_bounds=b0.copy(),
+        overlapping_root=False, grid=(P, Q, R),
     )
 
 
@@ -1288,6 +1307,110 @@ def _materialize_bcsr_grid_impl(tensor: Tensor, part: TensorPartition,
                 max_rows=int((rb[:, 1] - rb[:, 0]).max()))
     return ShardedTensor(kind="bcsr_grid", pieces=P * Q, arrays=arrays,
                          meta=meta, partition=part)
+
+
+def materialize_coo3_grid(tensor: Tensor, part: TensorPartition,
+                          ) -> ShardedTensor:
+    key = ("coo3_grid", tensor_fingerprint(tensor),
+           partition_fingerprint(part))
+    return _cached_shards(
+        key, lambda: _materialize_coo3_grid_impl(tensor, part),
+        partition=part)
+
+
+def _materialize_coo3_grid_impl(tensor: Tensor, part: TensorPartition,
+                                ) -> ShardedTensor:
+    """P×Q×R brick shards of an order-3 sparse tensor in COO convention.
+
+    Each brick (flat color ``(p*Q + q)*R + r``) holds its entries'
+    coordinates LOCAL to the brick's three windows (``dim0``/``dim1``/
+    ``dim2``) plus vals, padded to the widest brick. Padding slots keep
+    vals = 0 so segment-sum leaves can consume the full padded width
+    without masking. Entry order within a brick is storage order — the
+    segment-reduction leaves are order-independent, so no walk permutation
+    is needed regardless of the root's major dimension."""
+    P, Q, R = part.grid
+    b0 = part.levels[0].coord_bounds            # (P, 2) dim-0 windows
+    b1 = part.levels[1].coord_bounds            # (Q, 2) dim-1 windows
+    b2 = part.levels[2].coord_bounds            # (R, 2) dim-2 windows
+    coords = tensor.coords().astype(np.int64)   # (nnz, 3), dimension order
+    d0, d1, d2 = coords[:, 0], coords[:, 1], coords[:, 2]
+    masks1 = [(d1 >= int(b1[q, 0])) & (d1 < int(b1[q, 1])) for q in range(Q)]
+    masks2 = [(d2 >= int(b2[r, 0])) & (d2 < int(b2[r, 1])) for r in range(R)]
+    bricks = []
+    for p in range(P):
+        m0 = (d0 >= int(b0[p, 0])) & (d0 < int(b0[p, 1]))
+        for q in range(Q):
+            for r in range(R):
+                bricks.append(np.nonzero(m0 & masks1[q] & masks2[r])[0])
+    max_bnnz = max((int(b.shape[0]) for b in bricks), default=0)
+    n_colors = P * Q * R
+    dim_shards = [np.zeros((n_colors, max_bnnz), dtype=INT) for _ in range(3)]
+    vals_shards = np.zeros((n_colors, max_bnnz), dtype=tensor.vals.dtype)
+    nnz_count = np.zeros((n_colors,), dtype=INT)
+    starts = (b0[:, 0], b1[:, 0], b2[:, 0])
+    for color, idx in enumerate(bricks):
+        p, qr = divmod(color, Q * R)
+        q, r = divmod(qr, R)
+        k = idx.shape[0]
+        for d, (dcol, win) in enumerate(zip((d0, d1, d2), (p, q, r))):
+            dim_shards[d][color, :k] = dcol[idx] - int(starts[d][win])
+        vals_shards[color, :k] = tensor.vals[idx]
+        nnz_count[color] = k
+    arrays = {
+        "dim0": dim_shards[0], "dim1": dim_shards[1], "dim2": dim_shards[2],
+        "vals": vals_shards, "nnz_count": nnz_count,
+        "row_start": b0[:, 0].astype(INT),
+        "row_count": (b0[:, 1] - b0[:, 0]).astype(INT),
+    }
+    meta = {"P": P, "Q": Q, "R": R, "max_bnnz": max_bnnz,
+            "max_rows": int((b0[:, 1] - b0[:, 0]).max()),
+            "n_rows": tensor.shape[0]}
+    return ShardedTensor(kind="coo3_grid", pieces=n_colors, arrays=arrays,
+                         meta=meta, partition=part)
+
+
+def materialize_dense_grid(tensor: Tensor, row_bounds: Bounds,
+                           col_bounds: Bounds) -> ShardedTensor:
+    """Dense matrix tiled by row windows × column windows — the co-operand
+    plan when BOTH its indexing variables ride machine axes (e.g. C(k, j)
+    under a replicated 2.5-D SpMM, sliced k-rows by the y axis and j-cols
+    by the z axis). Shards stack tile-major: ``vals[g0, g1]`` is the
+    (max_rw, max_cw)-padded tile for row window g0 × col window g1."""
+    tp = partition_tensor_grid(tensor, row_bounds, col_bounds)
+    key = ("dense_grid", tensor_fingerprint(tensor),
+           _crc_arrays(0, row_bounds, col_bounds))
+    return _cached_shards(
+        key, lambda: _materialize_dense_grid_impl(
+            tensor, row_bounds, col_bounds, tp), partition=tp)
+
+
+def _materialize_dense_grid_impl(tensor: Tensor, row_bounds: Bounds,
+                                 col_bounds: Bounds,
+                                 tp: TensorPartition) -> ShardedTensor:
+    dense = tensor.to_dense()
+    G0, G1 = row_bounds.shape[0], col_bounds.shape[0]
+    rcounts = row_bounds[:, 1] - row_bounds[:, 0]
+    ccounts = col_bounds[:, 1] - col_bounds[:, 0]
+    max_rw, max_cw = int(rcounts.max()), int(ccounts.max())
+    shards = np.zeros((G0, G1, max_rw, max_cw) + dense.shape[2:],
+                      dtype=dense.dtype)
+    for g0 in range(G0):
+        rlo, rhi = int(row_bounds[g0, 0]), int(row_bounds[g0, 1])
+        for g1 in range(G1):
+            clo, chi = int(col_bounds[g1, 0]), int(col_bounds[g1, 1])
+            shards[g0, g1, : rhi - rlo, : chi - clo] = dense[rlo:rhi, clo:chi]
+    return ShardedTensor(
+        kind="dense_grid", pieces=G0 * G1,
+        arrays={"vals": shards,
+                "row_start": row_bounds[:, 0].astype(INT),
+                "row_count": rcounts.astype(INT),
+                "col_start": col_bounds[:, 0].astype(INT),
+                "col_count": ccounts.astype(INT)},
+        meta={"max_rows": max_rw, "max_cols": max_cw,
+              "n_rows": dense.shape[0], "n_cols": dense.shape[1]},
+        partition=tp,
+    )
 
 
 def materialize_dense_cols(tensor: Tensor, bounds: Bounds) -> ShardedTensor:

@@ -99,28 +99,48 @@ class SchedulePoint:
     cacheable."""
 
     space: str                       # 'universe' | 'nnz'
-    grid: Tuple[int, int]            # (P, Q); Q == 1 -> 1-D
+    grid: Tuple[int, ...]            # (P,), (P, Q), or (P, Q, R)
     tile: Optional[Tuple[int, int]] = None   # (block_R, block_nb)
+    replicated: bool = False         # 2.5-D: sparse operand replicated on z
     est_cost_s: float = float("inf")
     measured_s: Optional[float] = None
 
     @property
     def label(self) -> str:
         kind = "rows" if self.space == "universe" else "nnz"
-        return f"{kind}/{self.grid[0]}x{self.grid[1]}"
+        mesh = "x".join(str(s) for s in self.grid)
+        return f"{kind}/{mesh}" + ("r" if self.replicated else "")
+
+    @property
+    def canonical_grid(self) -> Tuple[int, ...]:
+        """Grid with trailing singleton axes stripped — a P×1 (or 1-deep
+        z) factorization IS the lower-order plan, and dedupe keys on
+        this so refine never times the same executable twice."""
+        g = list(self.grid)
+        while len(g) > 1 and g[-1] == 1:
+            g.pop()
+        return tuple(g)
+
+    @property
+    def plan_key(self) -> Tuple:
+        g = self.canonical_grid
+        return (self.space, g, self.replicated and len(g) >= 3, self.tile)
 
     def machine_for(self, base: Machine) -> Machine:
-        P, Q = self.grid
         names = [d.name for d in base.dims]
-        if Q > 1:
-            return Machine((names[0] if len(names) > 0 else "x", P),
-                           (names[1] if len(names) > 1 else "y", Q))
-        return Machine((names[0] if names else "x", P * Q))
+        defaults = ["x", "y", "z", "w"]
+        g = self.canonical_grid
+        return Machine(*[(names[i] if i < len(names) else defaults[i], s)
+                         for i, s in enumerate(g)])
 
     def build(self, stmt: Assignment,
               base: Machine) -> Tuple[Schedule, Machine]:
         m = self.machine_for(base)
-        if self.grid[1] > 1:
+        if self.replicated:
+            s = lower_mod.default_replicated_schedule(stmt, m)
+        elif len(m.dims) >= 3:
+            s = lower_mod.default_grid3_schedule(stmt, m)
+        elif len(m.dims) == 2:
             s = lower_mod.default_grid_schedule(stmt, m)
         elif self.space == "universe":
             s = lower_mod.default_row_schedule(stmt, m)
@@ -204,6 +224,19 @@ def _grid_eligible(stmt: Assignment) -> bool:
     return root in _GRID_FORMAT_ROOTS
 
 
+def _replicated_eligible(stmt: Assignment) -> bool:
+    """2.5-D replicated candidates: scalar-format sparse operand (the
+    replicated grid emitters don't walk blocked trees) and a loop
+    variable outside the sparse index set to split over z (SpMM's output
+    columns, SDDMM's contraction) — SpMV has no such variable."""
+    if not _grid_eligible(stmt):
+        return False
+    spa = stmt.sparse_accesses()[0]
+    if spa.tensor.format.is_blocked:
+        return False
+    return any(v not in spa.idx for v in stmt.all_vars)
+
+
 def enumerate_points(stmt: Assignment, machine: Machine,
                      stats: Optional[StructStats] = None,
                      ) -> List[SchedulePoint]:
@@ -224,7 +257,26 @@ def enumerate_points(stmt: Assignment, machine: Machine,
         for P in range(2, pieces):
             if pieces % P == 0 and pieces // P > 1:
                 pts.append(SchedulePoint("universe", (P, pieces // P), tile))
-    return pts
+    if _replicated_eligible(stmt):
+        # every P×Q×R factorization with a genuine replication depth
+        # (R >= 2; R == 1 would just be the 2-D plan again)
+        for P in range(2, pieces + 1):
+            if pieces % P:
+                continue
+            rest = pieces // P
+            for Q in range(1, rest):
+                if rest % Q:
+                    continue
+                R = rest // Q
+                if R >= 2:
+                    pts.append(SchedulePoint("universe", (P, Q, R), tile,
+                                             replicated=True))
+    # dedupe by canonical plan key so degenerate factorizations that
+    # coincide with a lower-order plan are scored (and refined) once
+    uniq: Dict[Tuple, SchedulePoint] = {}
+    for p in pts:
+        uniq.setdefault(p.plan_key, p)
+    return list(uniq.values())
 
 
 # ---------------------------------------------------------------------------
@@ -310,8 +362,12 @@ def estimate(stmt: Assignment, point: SchedulePoint, stats: StructStats,
     output merge (the full output touched once more) plus the
     overlapping-row (or full-extent, for column-major roots) reduction
     the lowering engine charges."""
-    P, Q = point.grid
-    pieces = P * Q
+    grid = tuple(point.grid)
+    P = grid[0]
+    pieces = 1
+    for s in grid:
+        pieces *= s
+    par = max(pieces // max(P, 1), 1)   # column-axis (y·z) work division
     flops_per_entry = _entry_flops(stmt) * stats.entry_elems
     bytes_per_entry = 8 + 4 * stats.entry_elems
     out_t = stmt.lhs.tensor
@@ -323,11 +379,11 @@ def estimate(stmt: Assignment, point: SchedulePoint, stats: StructStats,
         cum = np.zeros(stats.n0 + 1, np.int64)
         np.cumsum(stats.deg, out=cum[1:])
         win = cum[bounds[:, 1]] - cum[bounds[:, 0]]
-        work = float(win.max()) / max(Q, 1)   # leaves pad to the max window
+        work = float(win.max()) / par         # leaves pad to the max window
         mem = work * bytes_per_entry
-        if Q > 1:
+        if len(point.canonical_grid) > 1:
             from . import grid as grid_mod
-            sched, _ = point.build(stmt, Machine.grid(P, Q))
+            sched, _ = point.build(stmt, Machine.grid(*grid))
             axes = grid_mod.grid_axis_bytes(stmt, sched.strategy())
             comm = float(sum(a.network_bytes() for a in axes.values()))
         else:

@@ -67,9 +67,12 @@ class DistStrategy:
     # shape chosen by the autoscheduler's tune_ell pass (None → the
     # kernels' built-in fallback defaults).
     tile: Optional[Tuple[int, int]] = None
-    # Tensors the schedule pins to a matching data distribution (C4: when
-    # data distribution ≠ computation distribution, lowering inserts a
-    # redistribution collective and charges its bytes).
+    # Per-operand replication: (tensor_name, machine_dim_name) pairs. A
+    # replicated operand is NOT partitioned along the named machine axis —
+    # every processor along it holds the full slice (the DISTAL
+    # "1.5-D/2.5-D" communication-avoiding schedules): broadcast bytes are
+    # paid once along that axis to save reduction hops elsewhere.
+    replicate: Tuple[Tuple[str, str], ...] = ()
 
     @property
     def var(self) -> IndexVar:
@@ -91,12 +94,13 @@ class DistStrategy:
         return len(self.vars) > 1
 
     @property
-    def grid_shape(self) -> Tuple[int, int]:
-        """(P, Q) of the processor grid (Q = 1 for 1-D strategies)."""
+    def grid_shape(self) -> Tuple[int, ...]:
+        """Processor-grid shape: (P, Q) for 1-D/2-D strategies (Q = 1 when
+        1-D), the full (P, Q, R, ...) tuple for higher-order grids."""
         sizes = [d.size for d in self.machine_dims]
         while len(sizes) < 2:
             sizes.append(1)
-        return tuple(sizes[:2])
+        return tuple(sizes)
 
     @property
     def space_label(self) -> str:
@@ -107,11 +111,13 @@ class DistStrategy:
 
     @property
     def mesh_label(self) -> str:
-        """Mesh-shape component of a conformance cell ID (``4x1``, ``2x2``)."""
+        """Mesh-shape component of a conformance cell ID (``4x1``, ``2x2``,
+        ``2x2x2``; a trailing ``r`` marks a replicated schedule)."""
         sizes = [d.size for d in self.machine_dims]
         while len(sizes) < 2:
             sizes.append(1)
-        return "x".join(str(s) for s in sizes)
+        label = "x".join(str(s) for s in sizes)
+        return label + ("r" if self.replicate else "")
 
 
 class Schedule:
@@ -129,6 +135,11 @@ class Schedule:
         self._leaf_unit: Optional[ParallelUnit] = None
         self._reorder: Optional[Tuple[IndexVar, ...]] = None
         self._tile: Optional[Tuple[int, int]] = None
+        self._replicate: List[Tuple[str, str]] = []
+        # inner-split var -> the ORIGINAL loop variable it descends from,
+        # so nested divides (divide j, then divide its inner half again)
+        # canonicalize to the same origin var on both machine axes.
+        self._inner_origin: Dict[str, IndexVar] = {}
 
     # -- transformations ----------------------------------------------------
     def fuse(self, i: IndexVar, j: IndexVar, f: IndexVar) -> "Schedule":
@@ -150,6 +161,7 @@ class Schedule:
         if space not in ("universe", "nnz"):
             raise ValueError(space)
         self._divided[io.name] = (i, ii, mdim, space)
+        self._inner_origin[ii.name] = self._inner_origin.get(i.name, i)
         self.ops.append(ScheduleOp("divide", (i, io, ii, mdim, space)))
         return self
 
@@ -166,6 +178,17 @@ class Schedule:
                     "a divide/pos_split")
             self._distributed.append(v)
         self.ops.append(ScheduleOp("distribute", vars))
+        return self
+
+    def replicate(self, tensors: Sequence, mdim: MachineDim) -> "Schedule":
+        """Replicate ``tensors`` along machine dimension ``mdim`` instead of
+        partitioning them — the communication-avoiding knob (DISTAL's
+        1.5-D/2.5-D schedules): every processor along ``mdim`` holds the
+        operand's full slice, eliminating the reduction hops along the
+        other axes at the cost of one broadcast along ``mdim``."""
+        for t in tensors:
+            self._replicate.append((t.name, mdim.name))
+        self.ops.append(ScheduleOp("replicate", (tuple(tensors), mdim)))
         return self
 
     def communicate(self, tensors: Sequence, at: IndexVar) -> "Schedule":
@@ -207,7 +230,10 @@ class Schedule:
             i, ii, mdim, space = self._divided[io.name]
             mdims.append(mdim)
             spaces.add(space)
-            outer_vars.append(i)
+            # resolve inner-split vars back to their original loop var so a
+            # nested divide (j -> y, then its inner half -> z) reads as the
+            # SAME origin var distributed over two machine axes
+            outer_vars.append(self._inner_origin.get(i.name, i))
         if len(spaces) != 1:
             raise NotImplementedError("mixed universe/nnz distribution")
         space = spaces.pop()
@@ -224,6 +250,7 @@ class Schedule:
             communicate_at=dict(self._communicate),
             leaf_unit=self._leaf_unit,
             tile=self._tile,
+            replicate=tuple(self._replicate),
         )
 
     def __repr__(self) -> str:

@@ -535,6 +535,13 @@ def _grid_axes(mesh: Mesh) -> tuple:
     return mesh.axis_names[0], mesh.axis_names[1]
 
 
+def _grid_axes3(mesh: Mesh) -> tuple:
+    if len(mesh.axis_names) != 3:
+        raise ValueError(f"3-D grid executor needs a 3-D mesh, got "
+                         f"{mesh.axis_names}")
+    return mesh.axis_names[0], mesh.axis_names[1], mesh.axis_names[2]
+
+
 def _grid_reshape(a: np.ndarray, P: int, Q: int) -> np.ndarray:
     return np.asarray(a).reshape((P, Q) + a.shape[1:])
 
@@ -710,6 +717,155 @@ def bcsr_spmm_grid_rows_spmd(kernel: LoweredKernel, mesh: Mesh,
     return call
 
 
+def spmm_grid_rep_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """2.5-D replicated SpMM over Mesh((P, Q, R)): B's (P, Q) tiles shard
+    over (x, y) and the in_spec's silence on z replicates them across the
+    z-layers; C's (Q, R) dense grid shards over (y, z). Each z-layer runs
+    the SUMMA for its own output-column slab, so the psum is scoped to y
+    ONLY — the (QR−1)-hop all-reduce of an unreplicated 3-D spread shrinks
+    to Q−1 hops, which is exactly what the z-axis broadcast bought."""
+    ax, ay, az = _grid_axes3(mesh)
+    Bacc, Cacc = kernel.stmt.rhs.accesses()
+    B = kernel.shards[Bacc.tensor.name]
+    C = kernel.shards[Cacc.tensor.name]
+    n, J = kernel.stmt.lhs.tensor.shape
+    a = B.arrays
+    P_, Q_ = int(B.meta["P"]), int(B.meta["Q"])
+    pos = _grid_reshape(a["pos1"], P_, Q_)
+    crd = _grid_reshape(a["crd1"], P_, Q_)
+    vals = _grid_reshape(a["vals"], P_, Q_)
+    Cw = C.arrays["vals"]                       # (Q, R, max_kw, max_jw)
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(ax, ay), P(ax, ay), P(ax, ay), P(ay, az)),
+            out_specs=P(ax, az))
+        def run(pos, crd, vals, Cw):
+            y = K.leaf_spmm_rows(pos[0, 0], crd[0, 0], vals[0, 0], Cw[0, 0])
+            return jax.lax.psum(y, axis_name=ay)[None, None]
+        return run
+
+    run = _spmd_runner("spmm_grid_rep_rows", mesh, (ax, ay, az), (),
+                       (pos, crd, vals, Cw), build)
+
+    def call():
+        yb = np.asarray(run(jnp.asarray(pos), jnp.asarray(crd),
+                            jnp.asarray(vals), jnp.asarray(Cw)))
+        out = np.zeros((n, J), np.float32)
+        rs, cnt = np.asarray(a["row_start"]), np.asarray(a["row_count"])
+        cs = np.asarray(C.arrays["col_start"])
+        cw = np.asarray(C.arrays["col_count"])
+        for p in range(yb.shape[0]):
+            for r in range(yb.shape[1]):
+                out[rs[p]: rs[p] + cnt[p], cs[r]: cs[r] + cw[r]] = \
+                    yb[p, r, : cnt[p], : cw[r]]
+        return out
+
+    return call
+
+
+def sddmm_grid_rep_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """2.5-D replicated SDDMM: B's sampling tiles shard over (x, y) and
+    replicate across z; the contraction variable k splits over z — C's
+    (P, R) grid shards over (x, z), D's (R, Q) grid over (z, y). Each
+    z-layer samples a partial dot product and the psum is scoped to z
+    ONLY (the single reduction axis); outputs stay tile-aligned."""
+    ax, ay, az = _grid_axes3(mesh)
+    accs = kernel.stmt.rhs.accesses()
+    B = kernel.shards[accs[0].tensor.name]
+    C = kernel.shards[accs[1].tensor.name]
+    D = kernel.shards[accs[2].tensor.name]
+    Bt = accs[0].tensor
+    a = B.arrays
+    P_, Q_ = int(B.meta["P"]), int(B.meta["Q"])
+    pos = _grid_reshape(a["pos1"], P_, Q_)
+    crd = _grid_reshape(a["crd1"], P_, Q_)
+    vals = _grid_reshape(a["vals"], P_, Q_)
+    Cw = C.arrays["vals"]                       # (P, R, max_rw, max_kw)
+    Dw = D.arrays["vals"]                       # (R, Q, max_kw, max_mw)
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(ax, ay), P(ax, ay), P(ax, ay), P(ax, az), P(az, ay)),
+            out_specs=P(ax, ay))
+        def run(pos, crd, vals, Cw, Dw):
+            out = K.leaf_sddmm_rows(pos[0, 0], crd[0, 0], vals[0, 0],
+                                    Cw[0, 0], Dw[0, 0])
+            return jax.lax.psum(out, axis_name=az)[None, None]
+        return run
+
+    run = _spmd_runner("sddmm_grid_rep_rows", mesh, (ax, ay, az), (),
+                       (pos, crd, vals, Cw, Dw), build)
+
+    def call():
+        out_vals = np.asarray(run(
+            jnp.asarray(pos), jnp.asarray(crd), jnp.asarray(vals),
+            jnp.asarray(Cw), jnp.asarray(Dw)))    # (P, Q, max_tnnz)
+        flat = np.zeros(Bt.nnz, np.float32)
+        vi = np.asarray(a["val_idx"]).reshape(P_, Q_, -1)
+        cnt = np.asarray(a["nnz_count"]).reshape(P_, Q_)
+        for p in range(P_):
+            for q in range(Q_):
+                k = int(cnt[p, q])
+                flat[vi[p, q, :k]] = out_vals[p, q, :k]
+        return flat
+
+    return call
+
+
+def spmttkrp_grid3_spmd(kernel: LoweredKernel, mesh: Mesh, axis: str = "x"):
+    """P×Q×R brick SpMTTKRP over Mesh((P, Q, R)): the COO brick arrays
+    shard over all three axes, C's row windows over y, D's over z; each
+    brick segment-sums its contraction and the partials psum over (y, z)
+    — the Q·R bricks sharing a row window — landing row-aligned on x."""
+    ax, ay, az = _grid_axes3(mesh)
+    accs = kernel.stmt.rhs.accesses()
+    B = kernel.shards[accs[0].tensor.name]
+    C = kernel.shards[accs[1].tensor.name]
+    D = kernel.shards[accs[2].tensor.name]
+    out_shape = kernel.stmt.lhs.tensor.shape
+    a = B.arrays
+    P_, Q_, R_ = int(B.meta["P"]), int(B.meta["Q"]), int(B.meta["R"])
+    max_rows = int(B.meta["max_rows"])
+
+    def brick(x):
+        return np.asarray(x).reshape((P_, Q_, R_) + x.shape[1:])
+
+    d0, d1, d2 = brick(a["dim0"]), brick(a["dim1"]), brick(a["dim2"])
+    vals = brick(a["vals"])
+    Cw = C.arrays["vals"]                       # (Q, max_jw, L)
+    Dw = D.arrays["vals"]                       # (R, max_kw, L)
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(ax, ay, az), P(ax, ay, az), P(ax, ay, az),
+                      P(ax, ay, az), P(ay), P(az)),
+            out_specs=P(ax))
+        def run(d0, d1, d2, vals, Cw, Dw):
+            y = K.leaf_spmttkrp_nnz(d0[0, 0, 0], d1[0, 0, 0], d2[0, 0, 0],
+                                    vals[0, 0, 0], Cw[0], Dw[0], max_rows)
+            return jax.lax.psum(y, axis_name=(ay, az))[None]
+        return run
+
+    run = _spmd_runner("spmttkrp_grid3_rows", mesh, (ax, ay, az), (),
+                       (d0, d1, d2, vals, Cw, Dw), build)
+
+    def call():
+        yb = np.asarray(run(jnp.asarray(d0), jnp.asarray(d1),
+                            jnp.asarray(d2), jnp.asarray(vals),
+                            jnp.asarray(Cw), jnp.asarray(Dw)))
+        out = np.zeros(out_shape, np.float32)
+        rs, cnt = np.asarray(a["row_start"]), np.asarray(a["row_count"])
+        for p in range(yb.shape[0]):
+            out[rs[p]: rs[p] + cnt[p]] = yb[p, : cnt[p]]
+        return out
+
+    return call
+
+
 SPMD_BUILDERS: Dict[str, Callable] = {
     "spmv_rows": spmv_rows_spmd,
     "spmv_nnz": spmv_nnz_spmd,
@@ -727,6 +883,9 @@ SPMD_BUILDERS: Dict[str, Callable] = {
     "spmm_grid_rows": spmm_grid_rows_spmd,
     "sddmm_grid_rows": sddmm_grid_rows_spmd,
     "bcsr_spmm_grid_rows": bcsr_spmm_grid_rows_spmd,
+    "spmm_grid_rep_rows": spmm_grid_rep_spmd,
+    "sddmm_grid_rep_rows": sddmm_grid_rep_spmd,
+    "spmttkrp_grid3_rows": spmttkrp_grid3_spmd,
 }
 
 
@@ -740,7 +899,7 @@ def to_spmd(kernel: LoweredKernel, mesh: Mesh = None, axis: str = "x"):
         mesh = machine_to_mesh(kernel.machine)
     strat = kernel.strategy
     if getattr(strat, "is_grid", False) and strat.space == "nnz" \
-            and len(mesh.axis_names) == 2:
+            and len(mesh.axis_names) >= 2:
         axis = tuple(mesh.axis_names)
     builder = SPMD_BUILDERS.get(kernel.leaf_name)
     if builder is None:

@@ -20,6 +20,15 @@ from ..core.tdn import Machine
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    want = int(np.prod(np.asarray(shape, dtype=np.int64))) if len(shape) else 1
+    have = len(jax.devices())
+    if want > have:
+        raise ValueError(
+            f"machine grid {tuple(int(s) for s in shape)} "
+            f"({'×'.join(str(int(s)) for s in shape)} = {want} pieces) "
+            f"exceeds the {have} visible device(s); shrink the grid or "
+            f"expose more devices (e.g. XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={want} on CPU)")
     return make_mesh_compat(shape, axes)
 
 

@@ -45,8 +45,10 @@ import pytest
 import repro.core as rc
 from repro.core import formats as F
 from repro.core.interp import interpret
-from repro.core.lower import (default_grid_nnz_schedule,
+from repro.core.lower import (default_grid3_schedule,
+                              default_grid_nnz_schedule,
                               default_grid_schedule, default_nnz_schedule,
+                              default_replicated_schedule,
                               default_row_schedule, lower)
 from repro.core.tensor import Tensor
 
@@ -82,6 +84,16 @@ GRID_FORMATS = [("csr", F.CSR), ("csc", F.CSC),
                 ("bcsr", lambda: F.BCSR((2, 2))),
                 ("bcsc", lambda: F.BCSC((2, 2)))]
 GRID_MESHES = [(2, 2), (4, 2)]
+
+# Order-3 machine-grid cells (ISSUE 7): spmttkrp on P×Q×R COO bricks
+# (rows) / the flat nested pos-split (nnz); spadd3 rows rides the nested
+# column split (one variable divided onto y AND z). The replicated cells
+# are the communication-avoiding 2.5-D schedules — spmm/sddmm with the
+# sparse operand's tiles shared across z.
+GRID3_MESHES = [(2, 2, 2), (2, 1, 2)]
+GRID3_SPADD3_FORMATS = [("csr", F.CSR), ("csc", F.CSC)]
+REPLICATED_EXPRESSIONS = ["spmm", "sddmm"]
+REPLICATED_FORMATS = [("csr", F.CSR), ("csc", F.CSC)]
 
 
 def _sparse_2d(rng, n, m, density=0.25):
@@ -146,17 +158,27 @@ def _build_stmt(expr, fm, rng, empty=False):
 
 
 def _check_cell(expr, fmt_name, fmt_ctor, strategy, pieces, empty=False,
-                caplog=None, mesh=None):
+                caplog=None, mesh=None, replicated=False):
     # deterministic per-cell seed (str hash is process-randomized);
-    # ``mesh=(P, Q)`` selects a 2-D machine grid + the grid schedules
-    mesh_tag = pieces if mesh is None else f"{mesh[0]}x{mesh[1]}"
+    # ``mesh=(P, Q)`` / ``(P, Q, R)`` selects a machine grid + the grid
+    # schedules; ``replicated`` the 2.5-D schedule (sparse operand
+    # replicated along z)
+    mesh_tag = pieces if mesh is None else \
+        "x".join(str(s) for s in mesh) + ("r" if replicated else "")
     cell_tag = f"{expr}/{fmt_name}/{strategy}/{mesh_tag}/{empty}"
     rng = np.random.default_rng(zlib.crc32(cell_tag.encode()))
     stmt = _build_stmt(expr, fmt_ctor(), rng, empty=empty)
     if mesh is not None:
-        machine = rc.Machine(("x", mesh[0]), ("y", mesh[1]))
-        sched = (default_grid_schedule(stmt, machine) if strategy == "rows"
-                 else default_grid_nnz_schedule(stmt, machine))
+        names = ("x", "y", "z")
+        machine = rc.Machine(*[(names[i], s) for i, s in enumerate(mesh)])
+        if replicated:
+            sched = default_replicated_schedule(stmt, machine)
+        elif strategy == "nnz":
+            sched = default_grid_nnz_schedule(stmt, machine)
+        elif len(mesh) > 2:
+            sched = default_grid3_schedule(stmt, machine)
+        else:
+            sched = default_grid_schedule(stmt, machine)
     else:
         machine = rc.Machine(("x", pieces))
         sched = (default_row_schedule(stmt, machine) if strategy == "rows"
@@ -228,6 +250,66 @@ def test_matrix_grid(expr, fmt_name, fmt_ctor, strategy, mesh, caplog):
         # replicate/reduce fields
         assert set(k.comm.axes) == {"x", "y"}
         assert k.comm.replicate_bytes == 0 and k.comm.reduce_bytes == 0
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("mesh", GRID3_MESHES,
+                         ids=["x".join(str(s) for s in m)
+                              for m in GRID3_MESHES])
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("fmt_name,fmt_ctor", FORMATS_3D,
+                         ids=[f[0] for f in FORMATS_3D])
+def test_matrix_grid3(fmt_name, fmt_ctor, strategy, mesh, caplog):
+    """Order-3 grid cells: spmttkrp over P×Q×R COO bricks (rows) and the
+    flat nested pos-split (nnz) on a genuine 3-D machine grid — direct,
+    oracle-checked, with the comm ledger attributed to all three axes."""
+    pieces = mesh[0] * mesh[1] * mesh[2]
+    k = _check_cell("spmttkrp", fmt_name, fmt_ctor, strategy, pieces,
+                    caplog=caplog, mesh=mesh)
+    assert k.fallbacks == [], f"grid3 cell {k.cell_id()} fell back"
+    assert k.strategy.is_grid and k.strategy.grid_shape == mesh
+    if strategy == "rows":
+        assert set(k.comm.axes) == {"x", "y", "z"}
+        assert k.comm.replicate_bytes == 0 and k.comm.reduce_bytes == 0
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("fmt_name,fmt_ctor", GRID3_SPADD3_FORMATS,
+                         ids=[f[0] for f in GRID3_SPADD3_FORMATS])
+def test_matrix_spadd3_grid3(fmt_name, fmt_ctor, strategy, caplog):
+    """spadd3 on a 2×2×2 grid: rows rides the NESTED column split (the
+    column variable divided onto y and z → Q·R joint windows, zero
+    communication), nnz the flat 8-piece chunk union."""
+    k = _check_cell("spadd3", fmt_name, fmt_ctor, strategy, 8,
+                    caplog=caplog, mesh=(2, 2, 2))
+    assert k.fallbacks == [], f"spadd3 grid3 cell {k.cell_id()} fell back"
+    if strategy == "rows":
+        assert sum(a.network_bytes() for a in k.comm.axes.values()) == 0
+
+
+@pytest.mark.conformance
+@pytest.mark.parametrize("fmt_name,fmt_ctor", REPLICATED_FORMATS,
+                         ids=[f[0] for f in REPLICATED_FORMATS])
+@pytest.mark.parametrize("expr", REPLICATED_EXPRESSIONS)
+def test_matrix_replicated(expr, fmt_name, fmt_ctor, caplog):
+    """2.5-D communication-avoiding cells: the sparse operand keeps its
+    (P, Q) tiles and is replicated along z, which splits the loop
+    variable outside its index set — z pays the replica broadcast and
+    the reduction rides ONLY the axes replication leaves (y for spmm's
+    SUMMA partials, z itself for sddmm's split contraction)."""
+    k = _check_cell(expr, fmt_name, fmt_ctor, "rows", 8, caplog=caplog,
+                    mesh=(2, 2, 2), replicated=True)
+    assert k.fallbacks == [], f"replicated cell {k.cell_id()} fell back"
+    assert k.strategy.mesh_label == "2x2x2r"
+    assert set(k.comm.axes) == {"x", "y", "z"}
+    assert k.comm.axes["z"].broadcast_bytes > 0
+    if expr == "spmm":
+        assert k.comm.axes["z"].reduce_bytes == 0
+        assert k.comm.axes["y"].reduce_bytes > 0
+    else:
+        assert k.comm.axes["z"].reduce_bytes > 0
+        assert k.comm.axes["y"].reduce_bytes == 0
 
 
 @pytest.mark.conformance
@@ -311,10 +393,13 @@ def test_census_matches_contract():
 # the whole matrix ran, the census must be exactly this. ISSUE 4 added the
 # multi-axis (2x2 / 4x2 grid) cells; ISSUE 5's level-iterator walks made
 # the last 11 fallback cells (csc/rows, spmttkrp/coo3/rows) direct and
-# added the bcsc cells plus csc/bcsc grid columns — the census is now
-# fully direct: 96 2-D + 12 3-D + 48 grid + 12 empty-operand cells.
-FULL_CENSUS_TOTALS = {"direct": 168, "fallback": 0}
-_FULL_CELL_COUNT = 168
+# added the bcsc cells plus csc/bcsc grid columns; ISSUE 7 added the
+# order-3 grid cells (spmttkrp bricks, spadd3 nested columns) and the
+# replicated 2.5-D spmm/sddmm cells — the census stays fully direct:
+# 96 2-D + 12 3-D + 48 grid + 12 3-D-grid + 4 spadd3-grid3 +
+# 4 replicated + 12 empty-operand cells.
+FULL_CENSUS_TOTALS = {"direct": 188, "fallback": 0}
+_FULL_CELL_COUNT = 188
 
 
 def test_census_totals_with_caching():

@@ -218,3 +218,82 @@ def test_auto_matrix_2d(expr, fmt_name, fmt_ctor):
 @pytest.mark.parametrize("expr", conformance.EXPRESSIONS_3D)
 def test_auto_matrix_3d(expr, fmt_name, fmt_ctor):
     _check_auto_cell(expr, fmt_name, fmt_ctor)
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7: replicated candidates + canonical-key dedupe
+# ---------------------------------------------------------------------------
+
+def _wide_spmm(n=200, m=200, J=64, density=0.02, seed=0):
+    """|A|·Q > |B|: many output columns over a sparse-ish operand — the
+    regime where replicating B along z beats every 2-D factorization."""
+    rng = np.random.default_rng(seed)
+    dB = ((rng.random((n, m)) < density) *
+          rng.standard_normal((n, m))).astype(np.float32)
+    B = Tensor.from_dense("B", dB, F.CSR())
+    C = Tensor.from_dense("C", rng.standard_normal((m, J)).astype(np.float32))
+    return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (n, J)), B=B, C=C), dB, dC_ref(C)
+
+
+def dC_ref(C):
+    return np.asarray(C.to_dense())
+
+
+def test_enumeration_dedupes_canonical_plans():
+    """Degenerate factorizations that coincide with a lower-order plan
+    (P×1 grids, z-depth-1 replication) must be enumerated ONCE — refine
+    would otherwise time the same executable twice."""
+    stmt, _, _ = _wide_spmm()
+    M8 = rc.Machine(("x", 8))
+    pts = PS.enumerate_points(stmt, M8, PS.structural_stats(stmt))
+    keys = [p.plan_key for p in pts]
+    assert len(keys) == len(set(keys)), "duplicate canonical plans enumerated"
+    labels = {p.label for p in pts}
+    # replicated triples present, every depth a genuine replication
+    assert any(p.replicated for p in pts)
+    for p in pts:
+        if p.replicated:
+            assert p.grid[2] >= 2
+    # the flat candidates keep their pinned labels
+    assert {"rows/8x1", "nnz/8x1"} <= labels
+
+
+def test_replicated_point_label_and_machine():
+    p = PS.SchedulePoint("universe", (2, 2, 2), None, replicated=True)
+    assert p.label == "rows/2x2x2r"
+    m = p.machine_for(rc.Machine(("x", 8)))
+    assert [(d.name, d.size) for d in m.dims] == \
+        [("x", 2), ("y", 2), ("z", 2)]
+    # canonical stripping: a trailing singleton z IS the 2-D plan
+    q = PS.SchedulePoint("universe", (4, 2, 1), None)
+    assert q.plan_key == PS.SchedulePoint("universe", (4, 2), None).plan_key
+
+
+def test_auto_picks_replicated_when_bytes_favor_it():
+    """Acceptance: on the wide-output SpMM the byte model must rank a
+    2.5-D replicated point first and lower(schedule='auto') must run it."""
+    stmt, dB, dC = _wide_spmm()
+    M8 = rc.Machine(("x", 8))
+    winner = PS.search(stmt, M8, config=MODEL_ONLY)
+    assert winner is not None and winner.replicated, winner.label
+    clear_lowering_caches()
+    k = lower(stmt, M8, schedule="auto")
+    assert k.tuned is not None and k.tuned.replicated
+    assert k.leaf_name == "spmm_grid_rep_rows"
+    assert k.strategy.mesh_label.endswith("r")
+    np.testing.assert_allclose(np.asarray(k.run()), dB @ dC, atol=1e-3)
+
+
+def test_auto_still_picks_nnz_on_skewed_rows_with_replication_enabled():
+    """The replicated candidates must not mask the structural nnz win:
+    a skewed SpMM's row windows stay imbalanced under every universe
+    factorization (replicated included)."""
+    B = _skewed_csr()
+    rng = np.random.default_rng(5)
+    C = Tensor.from_dense(
+        "C", rng.standard_normal((B.shape[1], 4)).astype(np.float32))
+    stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (B.shape[0], 4)), B=B, C=C)
+    winner = PS.search(stmt, M4, config=MODEL_ONLY)
+    assert winner is not None and winner.space == "nnz", winner.label

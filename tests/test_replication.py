@@ -1,0 +1,243 @@
+"""Communication-avoiding replication invariants (ISSUE 7, hypothesis
+stub–compatible property tests).
+
+The 2.5-D contract, checked per plan against the lowered kernels' own
+``CommStats.axes`` ledger:
+
+  * replicated-operand broadcast bytes on the replication axis equal
+    payload × (replicas − 1) on the wire;
+  * the reduction the replication eliminates is GONE from the ledger
+    (spmm reduces along y only, never z) and the surviving reduction is
+    strictly smaller than the unreplicated plan's at equal pieces;
+  * the replicated plan's result is BIT-FOR-BIT equal to the
+    unreplicated 2-D plan on integer-valued inputs (output columns are
+    independent lanes of the same leaf contraction);
+  * a replica is fingerprint-shared through SHARD_CACHE, not copied per
+    z-layer;
+  * 3-D GridPlans uphold the tiling invariant, replication-aware.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core import plan_search as PS
+from repro.core.grid import compute_grid_plan, grid_axis_bytes
+from repro.core.lower import (_nbytes, default_grid_schedule,
+                              default_replicated_schedule, lower)
+from repro.core.partition import SHARD_CACHE
+from repro.core.tensor import Tensor
+
+
+def _int_sparse(rng, n, m, density=0.3):
+    """Integer-valued sparse matrix: all partial sums are exact in fp32,
+    so differently-ordered reductions must agree BIT FOR BIT."""
+    return (rng.integers(-3, 4, (n, m)) *
+            (rng.random((n, m)) < density)).astype(np.float32)
+
+
+def _spmm_stmt(rng, n, m, J, fm=None, integer=True):
+    dB = _int_sparse(rng, n, m) if integer else \
+        ((rng.random((n, m)) < .3) * rng.standard_normal((n, m))
+         ).astype(np.float32)
+    dC = (rng.integers(-3, 4, (m, J)).astype(np.float32) if integer
+          else rng.standard_normal((m, J)).astype(np.float32))
+    B = Tensor.from_dense("B", dB, fm or F.CSR())
+    C = Tensor.from_dense("C", dC)
+    stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (n, J)), B=B, C=C)
+    return stmt, dB, dC
+
+
+def _machine3(P, Q, R):
+    return rc.Machine(("x", P), ("y", Q), ("z", R))
+
+
+# ---------------------------------------------------------------------------
+# Invariant 1: the replication ledger is self-consistent
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 40), m=st.integers(8, 40), J=st.integers(2, 12),
+       P=st.integers(2, 3), Q=st.integers(1, 3), R=st.integers(2, 3),
+       seed=st.integers(0, 999))
+def test_replicated_broadcast_equals_payload_times_replicas(
+        n, m, J, P, Q, R, seed):
+    rng = np.random.default_rng(seed)
+    stmt, dB, dC = _spmm_stmt(rng, n, m, J)
+    M = _machine3(P, Q, R)
+    k = lower(stmt, M, schedule=default_replicated_schedule(stmt, M))
+    B = stmt.rhs.accesses()[0].tensor
+    z = k.comm.axes["z"]
+    # the replicated operand rides z un-sliced: the z hop broadcasts one
+    # full payload to each of the R-1 extra layers
+    assert z.size == R
+    assert z.broadcast_bytes == _nbytes(B)
+    assert z.network_bytes() == _nbytes(B) * (R - 1)
+    # replication eliminates the z reduction entirely; partials sum on y
+    assert z.reduce_bytes == 0
+    assert k.comm.axes["y"].broadcast_bytes == 0
+    if Q > 1:
+        assert k.comm.axes["y"].reduce_bytes > 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(16, 48), m=st.integers(16, 48), J=st.integers(4, 16),
+       P=st.integers(2, 3), Q=st.integers(2, 3), R=st.integers(2, 3),
+       seed=st.integers(0, 999))
+def test_replication_shrinks_reduction(n, m, J, P, Q, R, seed):
+    """At equal pieces P×(Q·R), replication trades the (Q·R−1)-hop output
+    all-reduce for a (Q−1)-hop one plus the z broadcast — the reduction
+    bytes on the wire must shrink by exactly the eliminated hops."""
+    rng = np.random.default_rng(seed)
+    stmt, _, _ = _spmm_stmt(rng, n, m, J)
+    M3 = _machine3(P, Q, R)
+    k3 = lower(stmt, M3, schedule=default_replicated_schedule(stmt, M3))
+    M2 = rc.Machine(("x", P), ("y", Q * R))
+    k2 = lower(stmt, M2, schedule=default_grid_schedule(stmt, M2))
+    red3 = sum(a.reduce_bytes * (a.size - 1) for a in k3.comm.axes.values())
+    red2 = sum(a.reduce_bytes * (a.size - 1) for a in k2.comm.axes.values())
+    payload = k2.comm.axes["y"].reduce_bytes
+    assert payload > 0
+    assert red2 - red3 == payload * (Q * R - 1) - payload * (Q - 1)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 2: bit-for-bit agreement with the unreplicated 2-D plan
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 40), m=st.integers(8, 40), J=st.integers(2, 12),
+       P=st.integers(2, 3), Q=st.integers(1, 3), R=st.integers(2, 3),
+       fmt=st.sampled_from(["csr", "csc"]), seed=st.integers(0, 999))
+def test_replicated_bit_for_bit_vs_2d(n, m, J, P, Q, R, fmt, seed):
+    rng = np.random.default_rng(seed)
+    fm = F.CSR() if fmt == "csr" else F.CSC()
+    stmt, dB, dC = _spmm_stmt(rng, n, m, J, fm=fm)
+    M3 = _machine3(P, Q, R)
+    k3 = lower(stmt, M3, schedule=default_replicated_schedule(stmt, M3))
+    M2 = rc.Machine(("x", P), ("y", Q))
+    k2 = lower(stmt, M2, schedule=default_grid_schedule(stmt, M2))
+    got3, got2 = np.asarray(k3.run()), np.asarray(k2.run())
+    assert np.array_equal(got3, got2), \
+        "z-slices are independent column lanes of the same contraction"
+    assert np.array_equal(got3, dB @ dC)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 3: the replica is fingerprint-shared, not copied per layer
+# ---------------------------------------------------------------------------
+
+def test_replica_shares_shards_with_2d_plan():
+    rng = np.random.default_rng(3)
+    stmt, _, _ = _spmm_stmt(rng, 30, 24, 8)
+    M2 = rc.Machine(("x", 2), ("y", 2))
+    k2 = lower(stmt, M2, schedule=default_grid_schedule(stmt, M2))
+    misses_after_2d = SHARD_CACHE.stats["misses"]
+    M3 = _machine3(2, 2, 2)
+    k3 = lower(stmt, M3, schedule=default_replicated_schedule(stmt, M3))
+    B = stmt.rhs.accesses()[0].tensor
+    # same (P, Q) tiles -> same cache entry: the replicated plan reuses
+    # the 2-D plan's packed tile arrays (the cache hit re-wraps only the
+    # partition field), no per-z-layer copies
+    for name in ("pos1", "crd1", "vals"):
+        assert k3.shards[B.name].arrays[name] is k2.shards[B.name].arrays[name]
+    assert SHARD_CACHE.stats["misses"] > misses_after_2d  # C regridded
+    gp = compute_grid_plan(stmt, k3.strategy)
+    gp.validate(30, 24, n_dep=8)
+    gp.validate_coverage(k3.plans[B.name], B.shape)
+
+
+# ---------------------------------------------------------------------------
+# Invariant 4: 3-D grid plans tile the universe exactly once
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 40), m=st.integers(2, 40), d=st.integers(2, 40),
+       P=st.integers(1, 4), Q=st.integers(1, 4), R=st.integers(1, 4),
+       seed=st.integers(0, 99))
+def test_brick_tiling_covers_universe_exactly_once(n, m, d, P, Q, R, seed):
+    rng = np.random.default_rng(seed)
+    dB = ((rng.random((n, m, d)) < .2) *
+          rng.standard_normal((n, m, d))).astype(np.float32)
+    B = Tensor.from_dense("B", dB, F.COO(3))
+    L = 3
+    stmt = rc.parse_tin(
+        "A(i,l) = B(i,j,k) * C(j,l) * D(k,l)",
+        A=Tensor.zeros_dense("A", (n, L)), B=B,
+        C=Tensor.from_dense("C", rng.standard_normal((m, L)).astype(np.float32)),
+        D=Tensor.from_dense("D", rng.standard_normal((d, L)).astype(np.float32)))
+    M = _machine3(P, Q, R)
+    from repro.core.lower import default_grid3_schedule
+    gp = compute_grid_plan(stmt, default_grid3_schedule(stmt, M).strategy())
+    gp.validate(n, m, n_dep=d)
+    hits = np.zeros((n, m, d), np.int64)
+    for p, q, r, rw, cw, dw in gp.tile_windows3():
+        hits[rw[0]:rw[1], cw[0]:cw[1], dw[0]:dw[1]] += 1
+    assert (hits == 1).all(), "bricks must partition the universe"
+
+
+def test_validate_requires_dep_extent():
+    rng = np.random.default_rng(0)
+    stmt, _, _ = _spmm_stmt(rng, 20, 16, 4)
+    M = _machine3(2, 2, 2)
+    gp = compute_grid_plan(
+        stmt, default_replicated_schedule(stmt, M).strategy())
+    with pytest.raises(AssertionError, match="third-axis extent"):
+        gp.validate(20, 16)
+
+
+def test_replication_must_be_declared():
+    """A 3-var schedule whose third variable misses the sparse operand is
+    only legal with an explicit .replicate([B], z) — replication is a
+    schedule decision, not an inference."""
+    rng = np.random.default_rng(1)
+    stmt, _, _ = _spmm_stmt(rng, 20, 16, 4)
+    M = _machine3(2, 2, 2)
+    s = default_replicated_schedule(stmt, M)
+    s._replicate.clear()                 # strip the declaration
+    with pytest.raises(ValueError, match="replicate"):
+        lower(stmt, M, schedule=s)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance pin: 2.5-D moves fewer bytes than the best 2-D at equal pieces
+# ---------------------------------------------------------------------------
+
+def test_replicated_spmm_beats_best_2d_comm_volume():
+    """The bench_replication shape (n=m=200, 2% dense, J=64, 8 pieces):
+    |A|·Q > |B|, so replicating B along z must beat EVERY unreplicated
+    2-D factorization on total network bytes — the measurable win the
+    autoscheduler's byte model is built to find."""
+    rng = np.random.default_rng(7)
+    stmt, _, _ = _spmm_stmt(rng, 200, 200, 64, integer=False)
+
+    def net(k):
+        return sum(a.network_bytes() for a in k.comm.axes.values()) \
+            + (k.comm.replicate_bytes + k.comm.reduce_bytes) * 7
+
+    M3 = _machine3(2, 2, 2)
+    rep = lower(stmt, M3, schedule=default_replicated_schedule(stmt, M3))
+    two_d = []
+    for P, Q in ((2, 4), (4, 2)):
+        M2 = rc.Machine(("x", P), ("y", Q))
+        two_d.append(net(lower(stmt, M2,
+                               schedule=default_grid_schedule(stmt, M2))))
+    assert net(rep) < min(two_d), \
+        f"2.5-D {net(rep)}B must beat best 2-D {min(two_d)}B"
+
+
+def test_model_ledger_agreement_replicated():
+    """grid_axis_bytes (the autoscheduler's model) and the lowered
+    kernel's CommStats.axes (the ledger) must agree per axis on
+    replicated plans — model-vs-ledger drift is a bug, not calibration."""
+    rng = np.random.default_rng(11)
+    stmt, _, _ = _spmm_stmt(rng, 40, 30, 8)
+    M = _machine3(2, 2, 2)
+    strat = default_replicated_schedule(stmt, M).strategy()
+    k = lower(stmt, M, schedule=default_replicated_schedule(stmt, M))
+    model = grid_axis_bytes(stmt, strat)
+    for ax in ("x", "y", "z"):
+        assert model[ax].broadcast_bytes == k.comm.axes[ax].broadcast_bytes
+        assert model[ax].reduce_bytes == k.comm.axes[ax].reduce_bytes

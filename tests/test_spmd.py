@@ -315,3 +315,75 @@ def test_shard_map_grid_2d_executors():
         print("GRID_SPMD_OK")
     """)
     assert "GRID_SPMD_OK" in out
+
+
+def test_shard_map_grid_3d_and_replicated_executors():
+    """3-D mesh executors (ISSUE 7): 2.5-D replicated SpMM/SDDMM with
+    psum scoped to exactly the reduction axis the replication leaves,
+    brick SpMTTKRP with psum over (y, z), and the device-count guard."""
+    out = run_sub("""
+        import numpy as np
+        import pytest
+        import repro.core as rc
+        from repro.core import formats as F
+        from repro.core.lower import (default_grid3_schedule,
+                                      default_replicated_schedule, lower)
+        from repro.core.tensor import Tensor
+        from repro.distributed.executor import to_spmd
+        from repro.distributed.mesh import machine_to_mesh, make_mesh
+
+        rng = np.random.default_rng(0)
+        M = rc.Machine(("x", 2), ("y", 2), ("z", 2))
+        mesh = machine_to_mesh(M)
+        n, m, J, K = 37, 29, 10, 5
+
+        # 2.5-D replicated SpMM: psum over y only
+        dB = ((rng.random((n, m)) < .25) *
+              rng.standard_normal((n, m))).astype(np.float32)
+        B = Tensor.from_dense("B", dB, F.CSR())
+        C = Tensor.from_dense(
+            "C", rng.standard_normal((m, J)).astype(np.float32))
+        stmt = rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (n, J)), B=B, C=C)
+        k = lower(stmt, M, schedule=default_replicated_schedule(stmt, M))
+        y = to_spmd(k, mesh)()
+        assert np.allclose(y, dB @ np.asarray(C.to_dense()), atol=1e-3)
+        assert np.allclose(y, k.run(), atol=1e-5)
+
+        # 2.5-D replicated SDDMM: psum over z only
+        Cs = Tensor.from_dense(
+            "C", rng.standard_normal((n, K)).astype(np.float32))
+        D = Tensor.from_dense(
+            "D", rng.standard_normal((K, m)).astype(np.float32))
+        A = Tensor.from_dense("A", (dB != 0) * 1.0, F.CSR())
+        stmt = rc.parse_tin("A(i,j) = B(i,j) * C(i,k) * D(k,j)",
+                            A=A, B=B, C=Cs, D=D)
+        k = lower(stmt, M, schedule=default_replicated_schedule(stmt, M))
+        y = to_spmd(k, mesh)()
+        assert np.allclose(y, np.asarray(k.run().vals), atol=1e-4)
+
+        # brick SpMTTKRP: psum over (y, z)
+        n3, m3, p3, L = 17, 13, 11, 6
+        dB3 = ((rng.random((n3, m3, p3)) < .1) *
+               rng.standard_normal((n3, m3, p3))).astype(np.float32)
+        stmt = rc.parse_tin(
+            "A(i,l) = B(i,j,k) * C(j,l) * D(k,l)",
+            A=Tensor.zeros_dense("A", (n3, L)),
+            B=Tensor.from_dense("B", dB3, F.COO(3)),
+            C=Tensor.from_dense(
+                "C", rng.standard_normal((m3, L)).astype(np.float32)),
+            D=Tensor.from_dense(
+                "D", rng.standard_normal((p3, L)).astype(np.float32)))
+        k = lower(stmt, M, schedule=default_grid3_schedule(stmt, M))
+        y = to_spmd(k, mesh)()
+        assert np.allclose(y, k.run(), atol=1e-4)
+
+        # oversized grid fails FAST with the device count in the message
+        try:
+            make_mesh((4, 4, 4), ("x", "y", "z"))
+            raise SystemExit("mesh guard did not fire")
+        except ValueError as e:
+            assert "64 pieces" in str(e) and "8 visible" in str(e), str(e)
+        print("GRID3_SPMD_OK")
+    """)
+    assert "GRID3_SPMD_OK" in out
