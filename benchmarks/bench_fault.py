@@ -1,0 +1,121 @@
+"""Elastic recovery: cold re-lower vs shard-reusing relower, and the
+recovery wall-time split.
+
+The elastic claim (ISSUE 8): after losing one of P devices, re-planning on
+the P−1 survivors should NOT pay the cold lower price — the migration
+bounds leave P−2 partition windows bitwise unchanged, so their per-piece
+SHARD_CACHE entries (plus the content-keyed replicated operand) are pure
+hits and only the merged window re-packs. Suite rows:
+
+  ``fault_cold_lower_p4``       — lower+run at P=4 with all caches cleared
+                                  (the baseline every path starts from)
+  ``fault_cold_relower_p3``     — fresh lower+run at P=3, caches cleared
+                                  (what device-loss recovery cost WITHOUT
+                                  elastic shard reuse)
+  ``fault_elastic_relower_p3``  — relower(dead=1)+run from the warm P=4
+                                  kernel (shard reuse asserted ≥ 50%,
+                                  result asserted bit-for-bit)
+  ``fault_recovery_total``      — full run_with_recovery with an injected
+                                  device loss, minus the unfaulted run:
+                                  the marginal price of one recovery
+  ``fault_recovery_restore``    — …split: checkpoint restore
+  ``fault_recovery_replan``     — …split: shrink + elastic re-plan
+  ``fault_recovery_rejit``      — …split: first post-recovery execute
+  ``fault_shard_reuse_pct``     — reuse fraction ×100 (not a time; lets
+                                  the JSON artifact track the counter)
+"""
+from __future__ import annotations
+
+import tempfile
+
+import numpy as np
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core.lower import clear_lowering_caches, lower, relower
+from repro.core.tensor import Tensor
+from repro.runtime.elastic import run_with_recovery
+from repro.runtime.fault import FaultEvent, FaultInjector
+
+from .common import csv_row, time_fn
+
+
+def _int_sparse(rng, n: int, m: int, density: float) -> np.ndarray:
+    # integer-valued so every reduction order agrees bit for bit
+    return (rng.integers(-3, 4, (n, m)) *
+            (rng.random((n, m)) < density)).astype(np.float32)
+
+
+def run(n: int = 4096, m: int = 4096, j: int = 64,
+        density: float = 0.01, steps: int = 4) -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    dB = _int_sparse(rng, n, m, density)
+    dC = rng.integers(-3, 4, (m, j)).astype(np.float32)
+
+    def mkstmt():
+        B = Tensor.from_dense("B", dB.copy(), F.CSR())
+        C = Tensor.from_dense("C", dC.copy())
+        return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (n, j)), B=B, C=C)
+
+    M4, M3 = rc.Machine(("x", 4)), rc.Machine(("x", 3))
+    stmt = mkstmt()
+
+    def cold_p4():
+        clear_lowering_caches()
+        return np.asarray(lower(stmt, M4, elastic=True).run())
+
+    def cold_p3():
+        clear_lowering_caches()
+        return np.asarray(lower(stmt, M3).run())
+
+    t = time_fn(cold_p4, warmup=1, iters=5)
+    rows.append(csv_row("fault_cold_lower_p4", t * 1e6))
+    ref = cold_p4()
+
+    t = time_fn(cold_p3, warmup=1, iters=5)
+    rows.append(csv_row("fault_cold_relower_p3", t * 1e6))
+
+    # elastic path: warm P=4 kernel in cache, then migrate dead piece 1
+    clear_lowering_caches()
+    k4 = lower(stmt, M4, elastic=True)
+    k4.run()
+
+    def elastic_p3():
+        k3 = relower(k4, M3, dead=1)
+        out = np.asarray(k3.run())
+        assert k3.cache.shard_reuse >= 0.5, k3.cache.shard_reuse
+        assert np.array_equal(out, ref)
+        return k3
+
+    k3 = elastic_p3()
+    reuse = k3.cache.shard_reuse
+    t = time_fn(lambda: elastic_p3(), warmup=1, iters=5)
+    rows.append(csv_row("fault_elastic_relower_p3", t * 1e6,
+                        f"reuse={reuse:.0%}"))
+    rows.append(csv_row("fault_shard_reuse_pct", reuse * 100.0))
+
+    # full recovery loop: device loss mid-run vs the unfaulted run
+    clear_lowering_caches()
+    base, _ = run_with_recovery(mkstmt(), M4, steps,
+                                ckpt_dir=tempfile.mkdtemp(prefix="bf_"))
+    clear_lowering_caches()
+    inj = FaultInjector([FaultEvent(step=steps // 2, kind="device_loss",
+                                    piece=1)])
+    state, rep = run_with_recovery(mkstmt(), M4, steps,
+                                   ckpt_dir=tempfile.mkdtemp(prefix="bf_"),
+                                   injector=inj)
+    assert np.array_equal(state, base)
+    assert rep.restarts == 1 and rep.shard_reuse >= 0.5
+    total = rep.restore_s + rep.replan_s + rep.rejit_s
+    rows.append(csv_row("fault_recovery_total", total * 1e6,
+                        f"pieces={rep.initial_pieces}->{rep.final_pieces}"))
+    rows.append(csv_row("fault_recovery_restore", rep.restore_s * 1e6))
+    rows.append(csv_row("fault_recovery_replan", rep.replan_s * 1e6))
+    rows.append(csv_row("fault_recovery_rejit", rep.rejit_s * 1e6))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -22,6 +22,9 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
                         volume + wall time across 1-D / best 2-D /
                         replicated 2.5-D grids and SpMTTKRP across
                         1-D / P×Q×R bricks, at fixed total pieces
+  bench_fault         — elastic recovery: cold P−1 re-lower vs shard-
+                        reusing relower(dead=…), plus the recovery wall
+                        time split restore / re-plan / re-jit
 
 Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
 writes a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
@@ -47,7 +50,7 @@ def main() -> None:
                     help="directory for the BENCH_*.json files")
     args = ap.parse_args()
 
-    from . import (bench_autotune, bench_bcsr, bench_levels,
+    from . import (bench_autotune, bench_bcsr, bench_fault, bench_levels,
                    bench_load_balance, bench_mesh2d, bench_mismatch,
                    bench_pallas_kernels, bench_replan, bench_replication,
                    bench_spadd3, bench_vs_interp, bench_weak_scaling)
@@ -87,6 +90,9 @@ def main() -> None:
             j=32 if args.quick else 128,
             dims3=(96, 64, 48) if args.quick else (256, 128, 96),
             L=8 if args.quick else 16),
+        "fault": lambda: bench_fault.run(
+            *((1024, 1024) if args.quick else (4096, 4096)),
+            j=32 if args.quick else 64),
     }
     only = {s for s in args.only.split(",") if s} if args.only else None
     if only:

@@ -90,6 +90,13 @@ class LRUCache:
     def reset_stats(self) -> None:
         self.stats.update(hits=0, misses=0, evictions=0)
 
+    def items(self):
+        """Snapshot of (key, value) pairs, oldest → newest. No recency or
+        counter effects — the observability/checkpoint-export view (the
+        tuned-plan cache rides checkpoints so an elastic restart skips
+        re-search; see runtime/checkpoint.py)."""
+        return list(self._d.items())
+
     def __len__(self) -> int:
         return len(self._d)
 

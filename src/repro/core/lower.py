@@ -40,13 +40,16 @@ from .partition import (CONVERT_CACHE_STATS, SHARD_CACHE_STATS,
                         ShardedTensor, TensorPartition,
                         block_aligned_row_bounds, clear_convert_cache,
                         clear_shard_cache, convert_tensor_cached,
-                        fingerprint_memo, materialize_add_stream,
-                        materialize_bcsr_nnz, materialize_bcsr_rows,
-                        materialize_coo_nnz, materialize_csr_rows,
-                        materialize_dense_rows, materialize_replicated,
-                        partition_by_bounds, partition_tensor_nonzeros,
-                        partition_tensor_rows, replicate_tensor,
-                        tensor_fingerprint, weights_fingerprint)
+                        elastic_row_bounds, fingerprint_memo,
+                        materialize_add_stream, materialize_bcsr_nnz,
+                        materialize_bcsr_rows, materialize_coo_nnz,
+                        materialize_csr_rows, materialize_dense_rows,
+                        materialize_dense_rows_pieces, materialize_pieces,
+                        materialize_replicated,
+                        materialize_replicated_elastic, partition_by_bounds,
+                        partition_tensor_nonzeros, partition_tensor_rows,
+                        replicate_tensor, tensor_fingerprint,
+                        weights_fingerprint)
 from .schedule import DistStrategy, Schedule
 from .tdn import Distribution, Machine
 from .tensor import Tensor
@@ -194,6 +197,15 @@ class CacheStats:
     # lower skipped the candidate search entirely.
     tuned_hits: int = 0
     tuned_misses: int = 0
+
+    @property
+    def shard_reuse(self) -> float:
+        """Fraction of shard-cache lookups this lower served from cache —
+        the elastic-resize metric (relower asserts ≥ 0.5 reuse on a
+        migration-style P→P−1; bench_fault reports it). 0.0 when the
+        lower did no shard lookups at all."""
+        total = self.shard_hits + self.shard_misses
+        return self.shard_hits / total if total else 0.0
 
     @property
     def warm(self) -> bool:
@@ -453,6 +465,9 @@ def lower(
     distributions: Optional[Dict[str, Distribution]] = None,
     jit: bool = True,
     weights: Optional[np.ndarray] = None,
+    *,
+    elastic: bool = False,
+    init_bounds: Optional[np.ndarray] = None,
 ) -> LoweredKernel:
     """Compile a scheduled TIN statement into a distributed executable.
 
@@ -474,13 +489,24 @@ def lower(
     the straggler re-plan (runtime/fault.StragglerMitigator emits them;
     re-lowering with new weights is the re-plan, and the plan/shard/runner
     caches make everything the weights did NOT change near-free). Ignored
-    by universe (rows) schedules, whose splits are coordinate-driven."""
+    by universe (rows) schedules, whose splits are coordinate-driven.
+
+    ``elastic=True`` routes 1-D materialization through PER-PIECE shard
+    caching (partition.materialize_pieces): each color is its own
+    SHARD_CACHE entry, so a later :func:`relower` onto a resized machine
+    reuses every color whose window the resize left alone. The stacked
+    arrays are bit-for-bit the whole-set materializers' output (runners
+    are shared); the cost is per-color cache keys, so the default path
+    keeps its one-entry-per-tensor accounting. ``init_bounds`` (pieces, 2)
+    overrides the initial equal split — the elastic-resize entry point
+    feeds merged survivor windows here (see relower)."""
     with fingerprint_memo():   # one O(nnz) CRC per tensor per lower
         return _lower_impl(stmt, machine, schedule, distributions, jit,
-                           weights)
+                           weights, elastic=elastic, init_bounds=init_bounds)
 
 
-def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
+def _lower_impl(stmt, machine, schedule, distributions, jit, weights,
+                elastic=False, init_bounds=None):
     snap = _cache_snapshot()
     tuned_point = None
     if isinstance(schedule, str):
@@ -523,7 +549,7 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
     # ---- Step 1 & 2 of Fig. 9a: initial + derived partitions --------------
     # Memoized on (signature, strategy, operand fingerprints, weights): an
     # unchanged schedule over unchanged operands skips partitioning.
-    plan_key = _plan_cache_key(stmt, strat, weights)
+    plan_key = _plan_cache_key(stmt, strat, weights, init_bounds)
     plans = _PLAN_CACHE.get(plan_key) if plan_key is not None else None
     if plans is not None:
         # Rebind each memoized plan to the CURRENT statement's tensor
@@ -536,7 +562,7 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
         plans = {name: dataclasses.replace(p, tensor=current[name])
                  for name, p in plans.items()}
     else:
-        plans = _compute_plans(stmt, strat, out_t, weights)
+        plans = _compute_plans(stmt, strat, out_t, weights, init_bounds)
         if plan_key is not None:
             # Stored without tensor refs: the cache holds only the small
             # bounds arrays instead of pinning O(nnz) storage of up to
@@ -575,24 +601,33 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
         if name == out_t.name and _output_is_assembled(sig):
             continue  # outputs assembled from leaf results, not materialized
         if plan.replicated:
-            shards[name] = materialize_replicated(t, pieces)
+            shards[name] = (materialize_replicated_elastic(t, pieces)
+                            if elastic else materialize_replicated(t, pieces))
             comm.replicate_bytes += _nbytes(t)
         elif strat.space == "nnz" and t.format.is_sparse:
-            shards[name] = (materialize_bcsr_nnz(t, plan)
-                            if t.format.is_blocked
-                            else materialize_coo_nnz(t, plan))
+            kind = "bcsr_nnz" if t.format.is_blocked else "coo_nnz"
+            shards[name] = (materialize_pieces(kind, t, plan) if elastic
+                            else (materialize_bcsr_nnz(t, plan)
+                                  if t.format.is_blocked
+                                  else materialize_coo_nnz(t, plan)))
         elif (t.format.is_sparse and not t.format.is_blocked
                 and t.order >= 3 and t.format.levels[1].singleton):
             # trailing-singleton trees (COO3) have no grouped middle level:
             # the universe row plan materializes the FLAT walk (coordinate
             # columns bucketed by row window) and the flat leaves consume it
-            shards[name] = materialize_coo_nnz(t, plan)
+            shards[name] = (materialize_pieces("coo_nnz", t, plan) if elastic
+                            else materialize_coo_nnz(t, plan))
         elif t.format.is_all_dense:
-            shards[name] = materialize_dense_rows(t, plan.root_coord_bounds)
+            shards[name] = (
+                materialize_dense_rows_pieces(t, plan.root_coord_bounds)
+                if elastic
+                else materialize_dense_rows(t, plan.root_coord_bounds))
         elif t.format.is_blocked:
-            shards[name] = materialize_bcsr_rows(t, plan)
+            shards[name] = (materialize_pieces("bcsr_rows", t, plan)
+                            if elastic else materialize_bcsr_rows(t, plan))
         else:
-            shards[name] = materialize_csr_rows(t, plan)
+            shards[name] = (materialize_pieces("csr_rows", t, plan)
+                            if elastic else materialize_csr_rows(t, plan))
 
     # data-vs-computation distribution mismatch cost (C4)
     if distributions:
@@ -658,10 +693,13 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights):
 
 
 def _plan_cache_key(stmt: Assignment, strat: DistStrategy,
-                    weights: Optional[np.ndarray]) -> Optional[Tuple]:
+                    weights: Optional[np.ndarray],
+                    init_bounds: Optional[np.ndarray] = None,
+                    ) -> Optional[Tuple]:
     """Memoization key for the partitioning step: signature + strategy +
-    per-operand content fingerprints (+ straggler weights). None disables
-    caching (dry-run TensorVar operands have no storage to fingerprint)."""
+    per-operand content fingerprints (+ straggler weights + elastic
+    init-bounds override). None disables caching (dry-run TensorVar
+    operands have no storage to fingerprint)."""
     ops = []
     for acc in stmt.accesses():
         t = acc.tensor
@@ -669,17 +707,27 @@ def _plan_cache_key(stmt: Assignment, strat: DistStrategy,
             return None
         ops.append((t.name, tensor_fingerprint(t),
                     tuple(v.name for v in acc.idx)))
+    from .partition import _crc_arrays
+    init_crc = (None if init_bounds is None
+                else _crc_arrays(0, np.asarray(init_bounds, dtype=np.int64)))
     return (stmt.signature(), strat.space,
             tuple(v.name for v in strat.vars),
             tuple(d.size for d in strat.machine_dims),
             tuple(strat.replicate),
-            weights_fingerprint(weights), tuple(ops))
+            weights_fingerprint(weights), init_crc, tuple(ops))
 
 
 def _compute_plans(stmt: Assignment, strat: DistStrategy, out_t: Tensor,
                    weights: Optional[np.ndarray],
+                   init_bounds: Optional[np.ndarray] = None,
                    ) -> Dict[str, TensorPartition]:
-    """Fig. 9a steps 1 & 2: initial + derived coordinate-tree partitions."""
+    """Fig. 9a steps 1 & 2: initial + derived coordinate-tree partitions.
+
+    ``init_bounds`` replaces the equal initial split (universe: root
+    coordinate windows; nnz: split-level position windows) with
+    caller-supplied windows — relower's migration bounds, already
+    block-aligned because they come from a previous plan of the same
+    operands."""
     plans: Dict[str, TensorPartition] = {}
     pieces = strat.pieces
     sig = stmt.signature()
@@ -687,19 +735,23 @@ def _compute_plans(stmt: Assignment, strat: DistStrategy, out_t: Tensor,
     if strat.space == "universe":
         # coordinate-value loop -> createInitialUniversePartitions
         n = stmt.var_extent(dist_var)
-        bounds = partition_by_bounds(n, pieces)
-        # A blocked operand distributed on its row dimension snaps the
-        # universe split to block-row boundaries so EVERY co-partitioned
-        # tensor (dense row operands, the output) shares the same per-color
-        # row windows — whichever level stores the rows (BCSR and BCSC).
-        for acc in stmt.rhs.accesses():
-            t = acc.tensor
-            if (t.format.is_sparse and t.format.is_blocked
-                    and dist_var in acc.idx
-                    and acc.idx.index(dist_var) == 0):
-                bounds = block_aligned_row_bounds(
-                    n, pieces, t.format.block_shape[0])
-                break
+        if init_bounds is not None:
+            bounds = np.asarray(init_bounds, dtype=np.int64)
+        else:
+            bounds = partition_by_bounds(n, pieces)
+            # A blocked operand distributed on its row dimension snaps the
+            # universe split to block-row boundaries so EVERY co-partitioned
+            # tensor (dense row operands, the output) shares the same
+            # per-color row windows — whichever level stores the rows (BCSR
+            # and BCSC).
+            for acc in stmt.rhs.accesses():
+                t = acc.tensor
+                if (t.format.is_sparse and t.format.is_blocked
+                        and dist_var in acc.idx
+                        and acc.idx.index(dist_var) == 0):
+                    bounds = block_aligned_row_bounds(
+                        n, pieces, t.format.block_shape[0])
+                    break
         for acc in stmt.accesses():
             t = acc.tensor
             if t.name in plans:
@@ -741,7 +793,8 @@ def _compute_plans(stmt: Assignment, strat: DistStrategy, out_t: Tensor,
                 break
         if pos_tensor is None:
             raise ValueError("nnz schedule requires a sparse rhs tensor")
-        p = partition_tensor_nonzeros(pos_tensor, pieces, weights)
+        p = partition_tensor_nonzeros(pos_tensor, pieces, weights,
+                                      init_bounds=init_bounds)
         plans[pos_tensor.name] = p
         root_bounds = p.root_coord_bounds
         for acc in stmt.accesses():
@@ -928,6 +981,100 @@ def default_replicated_schedule(stmt: Assignment, machine: Machine) -> Schedule:
     return s
 
 
+# ---------------------------------------------------------------------------
+# Elastic re-plan: mesh-as-data. A Schedule traces against ONE machine, but
+# the STRATEGY it canonicalizes to is plain data (space, grid rank,
+# replication, tile) — so moving a lowered kernel to a different machine is
+# a pure function of (strategy, new machine), not a re-trace of user
+# schedule code. relower() is the elastic entry point: rebuild the
+# schedule family on the new machine, derive migration-friendly initial
+# bounds, and re-lower with per-piece shard caching so everything the
+# resize did not touch is a cache hit.
+# ---------------------------------------------------------------------------
+
+
+def rebuild_schedule(stmt: Assignment, machine: Machine,
+                     strat: DistStrategy) -> Schedule:
+    """Re-instantiate ``strat``'s schedule family against a NEW machine —
+    the same reconstruction the autoscheduler's SchedulePoint.build uses
+    (core/plan_search.py), driven here by an existing strategy instead of
+    a search candidate."""
+    nd = len(machine.dims)
+    if strat.replicate and nd >= 3:
+        s = default_replicated_schedule(stmt, machine)
+    elif nd >= 3:
+        s = default_grid3_schedule(stmt, machine)
+    elif nd == 2:
+        s = (default_grid_schedule(stmt, machine)
+             if strat.space == "universe"
+             else default_grid_nnz_schedule(stmt, machine))
+    elif strat.space == "universe":
+        s = default_row_schedule(stmt, machine)
+    else:
+        s = default_nnz_schedule(stmt, machine)
+    if strat.tile is not None:
+        s.tile_hint(*strat.tile)
+    return s
+
+
+def _elastic_init_bounds(kernel: LoweredKernel) -> Optional[np.ndarray]:
+    """The initial split the kernel's plans were derived from: universe →
+    the (block-aligned) root row windows; nnz → the position tensor's
+    split-level windows (== vals_bounds under full fusion / block split).
+    None when no migration-style reuse applies (grids, spadd3/nnz whose
+    per-operand splits are independent)."""
+    strat = kernel.strategy
+    if strat.is_grid:
+        return None
+    if (kernel.stmt.signature(), strat.space) in _SELF_MATERIALIZING:
+        return None
+    if strat.space == "universe":
+        for p in kernel.plans.values():
+            if not p.replicated and p.root_coord_bounds is not None:
+                return np.asarray(p.root_coord_bounds, dtype=np.int64)
+        return None
+    for acc in kernel.stmt.rhs.accesses():
+        if acc.tensor.format.is_sparse:
+            p = kernel.plans.get(acc.tensor.name)
+            if p is not None and p.vals_bounds is not None:
+                return np.asarray(p.vals_bounds, dtype=np.int64)
+            return None
+    return None
+
+
+def relower(kernel: LoweredKernel, new_machine: Machine, *,
+            dead: Optional[int] = None,
+            weights: Optional[np.ndarray] = None,
+            jit: bool = True) -> LoweredKernel:
+    """Re-plan a lowered kernel for a DIFFERENT machine — shrunk, grown,
+    or re-factorized — reusing every cache entry the resize leaves valid.
+
+    ``dead`` names the lost piece for a P→P−1 shrink: its window is merged
+    into a neighbor (partition.elastic_row_bounds) instead of re-splitting
+    equally, so P−2 of the surviving windows — and their per-piece shard
+    cache entries, seeded by a previous ``lower(..., elastic=True)`` — are
+    bitwise unchanged. Reuse is observable as ``kernel.cache.shard_reuse``
+    (≥ 50% asserted in tests/bench for row-split resizes). Without
+    ``dead`` (or for grids / weighted re-plans) the new machine gets a
+    fresh equal split; replicated operands still hit regardless.
+
+    ``weights`` forwards to the straggler re-plan path — e.g.
+    ``relower(kernel, kernel.machine, weights=w)`` re-balances in place
+    on the SAME machine."""
+    stmt = kernel.stmt
+    old = kernel.strategy
+    schedule = rebuild_schedule(stmt, new_machine, old)
+    new_strat = schedule.strategy()
+    init = None
+    if (dead is not None and weights is None
+            and not old.is_grid and not new_strat.is_grid
+            and new_strat.space == old.space
+            and new_strat.pieces == old.pieces - 1):
+        ob = _elastic_init_bounds(kernel)
+        if ob is not None and ob.shape[0] == old.pieces:
+            init = elastic_row_bounds(ob, dead)
+    return lower(stmt, new_machine, schedule=schedule, jit=jit,
+                 weights=weights, elastic=True, init_bounds=init)
 
 
 # ---------------------------------------------------------------------------

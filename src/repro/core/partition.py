@@ -370,6 +370,7 @@ def _partition_tensor_block_rows_walk(tensor: Tensor, row_bounds: Bounds,
 
 def partition_tensor_block_nonzeros(tensor: Tensor, pieces: int,
                                     weights: Optional[np.ndarray] = None,
+                                    init_bounds: Optional[Bounds] = None,
                                     ) -> TensorPartition:
     """Non-zero partition of a blocked tensor: equal (or weighted) split of
     the STORED-BLOCK position space, root block-row ownership derived with
@@ -386,7 +387,9 @@ def partition_tensor_block_nonzeros(tensor: Tensor, pieces: int,
     b_root = tensor.format.block_shape[root_dim]
     n = tensor.shape[root_dim]
     n_blocks = tensor.levels[1].nnz or 0
-    init = partition_nonzeros(n_blocks, pieces, weights)
+    init = (partition_nonzeros(n_blocks, pieces, weights)
+            if init_bounds is None
+            else np.asarray(init_bounds, dtype=np.int64))
     up = preimage(tensor.levels[1].pos, init)       # root-level entry bounds
     levels = [LevelPartition(coord_bounds=up.copy()),
               LevelPartition(pos_bounds=init.copy())]
@@ -402,6 +405,7 @@ def partition_tensor_block_nonzeros(tensor: Tensor, pieces: int,
 def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
                               weights: Optional[np.ndarray] = None,
                               fused_levels: Optional[int] = None,
+                              init_bounds: Optional[Bounds] = None,
                               ) -> TensorPartition:
     """Non-zero partition of the (fully or partially) fused coordinate tree.
 
@@ -412,11 +416,15 @@ def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
     Fig. 5's "non-zero tubes": T_xyz with xy→f splits the level-2 position
     space evenly, then derives the leaf via image and the root via
     preimage). Blocked tensors split their stored-block position space
-    (``partition_tensor_block_nonzeros``)."""
+    (``partition_tensor_block_nonzeros``). ``init_bounds`` overrides the
+    equal/weighted split of the split-level position space with
+    caller-supplied windows — the elastic resize path feeds merged
+    survivor windows here so unaffected colors keep identical bounds."""
     if tensor.format.is_all_dense:
         raise ValueError("non-zero partition of a dense tensor — use rows")
     if tensor.format.is_blocked:
-        return partition_tensor_block_nonzeros(tensor, pieces, weights)
+        return partition_tensor_block_nonzeros(tensor, pieces, weights,
+                                               init_bounds=init_bounds)
     order = tensor.order
     n_dense = _dense_prefix(tensor)
     split_level = order - 1 if fused_levels is None else fused_levels - 1
@@ -424,7 +432,9 @@ def partition_tensor_nonzeros(tensor: Tensor, pieces: int,
         raise ValueError("partial fusion must end at a compressed level")
     n_at = (tensor.levels[split_level].nnz
             if tensor.levels[split_level].crd is not None else tensor.nnz)
-    init_bounds = partition_nonzeros(n_at, pieces, weights)
+    init_bounds = (partition_nonzeros(n_at, pieces, weights)
+                   if init_bounds is None
+                   else np.asarray(init_bounds, dtype=np.int64))
     levels: List[LevelPartition] = [LevelPartition() for _ in range(order)]
     # derive DOWNWARD from the split level to the leaf (image chain)
     down = init_bounds.astype(np.int64)
@@ -1601,3 +1611,149 @@ def _materialize_replicated_impl(tensor: Tensor, pieces: int) -> ShardedTensor:
         meta={},
         partition=replicate_tensor(tensor, pieces),
     )
+
+
+# ---------------------------------------------------------------------------
+# Elastic materialization — per-PIECE shard caching + migration bounds
+#
+# The whole-set materializers above key one SHARD_CACHE entry per
+# (tensor, full partition); any resize changes the partition fingerprint
+# and re-packs everything. The elastic path (lower(..., elastic=True),
+# used by core.lower.relower) instead caches one entry PER COLOR, keyed
+# by the color's own window. Because every per-color derivation in the
+# partitioners is row-independent (searchsorted / image / preimage are
+# elementwise per color), slicing a partition to one color yields bounds
+# identical to that color's rows of the full partition — so after a
+# migration-style resize (a dead piece's window merged into a neighbor,
+# ``elastic_row_bounds``) every surviving window is a cache hit and only
+# the merged window re-packs. Stacking the per-piece shards with the
+# same padding rules the whole-set impls use reproduces their output
+# bit-for-bit, so runners (keyed on shapes + meta) are shared between
+# the two paths.
+# ---------------------------------------------------------------------------
+
+
+def elastic_row_bounds(bounds: Bounds, dead: int) -> Bounds:
+    """Migration bounds for losing piece ``dead`` of a 1-D split: the dead
+    window is merged into its left neighbor (or the right one when piece 0
+    dies), every other window is untouched. P−2 of the P−1 surviving
+    windows are bitwise unchanged — the shard-reuse guarantee."""
+    b = np.asarray(bounds, dtype=np.int64)
+    pieces = b.shape[0]
+    if not 0 <= dead < pieces:
+        raise ValueError(f"dead piece {dead} out of range for {pieces} pieces")
+    if pieces < 2:
+        raise ValueError("cannot shrink a 1-piece partition")
+    keep = np.delete(b, dead, axis=0)
+    if dead == 0:
+        keep[0, 0] = b[0, 0]
+    else:
+        keep[dead - 1, 1] = b[dead, 1]
+    return keep
+
+
+def _slice_bounds(b: Optional[Bounds], p: int) -> Optional[Bounds]:
+    return None if b is None else b[p:p + 1]
+
+
+def _slice_partition(part: TensorPartition, p: int) -> TensorPartition:
+    """View of color ``p`` as a 1-piece partition (bounds rows sliced;
+    ``walk_perm`` carried whole — it indexes storage, not colors)."""
+    levels = [LevelPartition(coord_bounds=_slice_bounds(lv.coord_bounds, p),
+                             pos_bounds=_slice_bounds(lv.pos_bounds, p),
+                             replicated=lv.replicated)
+              for lv in part.levels]
+    return dataclasses.replace(
+        part, pieces=1, levels=levels,
+        vals_bounds=_slice_bounds(part.vals_bounds, p),
+        root_coord_bounds=_slice_bounds(part.root_coord_bounds, p),
+        grid=None)
+
+
+def _stack_piece_shards(kind: str, piece_shards: List[ShardedTensor],
+                        part: TensorPartition) -> ShardedTensor:
+    """Stack per-color 1-piece shards into one whole-set ShardedTensor,
+    reproducing the whole-set impls' padding bit-for-bit: ``pos*`` arrays
+    edge-pad (out-of-range rows stay empty), other stacked arrays zero-pad,
+    1-D per-color scalars concatenate; ``max_*`` meta takes the max."""
+    first = piece_shards[0]
+    arrays: Dict[str, np.ndarray] = {}
+    for name in first.arrays:
+        cols = [sh.arrays[name] for sh in piece_shards]
+        if cols[0].ndim == 1:
+            arrays[name] = np.concatenate(cols, axis=0)
+            continue
+        width = max(c.shape[1] for c in cols)
+        padded = []
+        for c in cols:
+            pad = width - c.shape[1]
+            if pad:
+                spec = [(0, 0), (0, pad)] + [(0, 0)] * (c.ndim - 2)
+                c = (np.pad(c, spec, mode="edge")
+                     if name.startswith("pos") else np.pad(c, spec))
+            padded.append(c)
+        arrays[name] = np.concatenate(padded, axis=0)
+    meta = {k: (max(sh.meta[k] for sh in piece_shards)
+                if k.startswith("max_") else first.meta[k])
+            for k in first.meta}
+    return ShardedTensor(kind=kind, pieces=part.pieces, arrays=arrays,
+                         meta=meta, partition=part)
+
+
+def materialize_pieces(kind: str, tensor: Tensor,
+                       part: TensorPartition) -> ShardedTensor:
+    """Elastic counterpart of materialize_{csr,bcsr}_rows / *_nnz: one
+    SHARD_CACHE entry per color, stacked. ``kind`` ∈ {csr_rows, bcsr_rows,
+    coo_nnz, bcsr_nnz}; transpose walks dispatch automatically."""
+    impls = {"csr_rows": _materialize_csr_rows_impl,
+             "csr_rows_walk": _materialize_csr_rows_walk_impl,
+             "bcsr_rows": _materialize_bcsr_rows_impl,
+             "bcsr_rows_walk": _materialize_bcsr_rows_walk_impl,
+             "coo_nnz": _materialize_coo_nnz_impl,
+             "bcsr_nnz": _materialize_bcsr_nnz_impl}
+    impl_key = kind
+    if part.walk_perm is not None and kind in ("csr_rows", "bcsr_rows"):
+        impl_key = kind + "_walk"
+    impl = impls[impl_key]
+    fp = tensor_fingerprint(tensor)
+    piece_shards = []
+    for p in range(part.pieces):
+        sp = _slice_partition(part, p)
+        key = (impl_key + "_piece", fp, partition_fingerprint(sp))
+        piece_shards.append(
+            SHARD_CACHE.get_or_build(key, lambda sp=sp: impl(tensor, sp)))
+    stacked = _stack_piece_shards(piece_shards[0].kind, piece_shards, part)
+    return stacked
+
+
+def materialize_dense_rows_pieces(tensor: Tensor,
+                                  bounds: Bounds) -> ShardedTensor:
+    """Elastic counterpart of materialize_dense_rows (no ``pad_rows``
+    clamp — the 1-D sparse paths never pass one)."""
+    fp = tensor_fingerprint(tensor)
+    bounds = np.asarray(bounds, dtype=np.int64)
+    piece_shards = []
+    for p in range(bounds.shape[0]):
+        b = bounds[p:p + 1]
+        tp = TensorPartition(tensor, 1, [LevelPartition(coord_bounds=b)],
+                             root_coord_bounds=b, vals_bounds=None)
+        key = ("dense_rows_piece", fp, _crc_arrays(0, b))
+        piece_shards.append(SHARD_CACHE.get_or_build(
+            key,
+            lambda b=b, tp=tp: _materialize_dense_rows_impl(tensor, b, None,
+                                                            tp)))
+    full = TensorPartition(tensor, bounds.shape[0],
+                           [LevelPartition(coord_bounds=bounds)],
+                           root_coord_bounds=bounds, vals_bounds=None)
+    return _stack_piece_shards("dense_rows", piece_shards, full)
+
+
+def materialize_replicated_elastic(tensor: Tensor,
+                                   pieces: int) -> ShardedTensor:
+    """Replicated shards hold ONE copy regardless of piece count, so the
+    elastic variant keys on content alone — every resize is a pure hit."""
+    key = ("replicated_src", tensor_fingerprint(tensor))
+    src = SHARD_CACHE.get_or_build(
+        key, lambda: _materialize_replicated_impl(tensor, 1))
+    return dataclasses.replace(src, pieces=pieces,
+                               partition=replicate_tensor(tensor, pieces))

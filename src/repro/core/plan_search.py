@@ -70,6 +70,25 @@ def set_tuned_plan_cache_capacity(capacity: int) -> None:
     _TUNED_PLAN_CACHE.set_capacity(capacity)
 
 
+def export_tuned_entries() -> list:
+    """Snapshot of the tuned-plan cache as (key, SchedulePoint-or-None)
+    pairs, oldest → newest. Checkpoints persist this (picklable — keys are
+    tuples of str/int, points are plain dataclasses) so a recovered run
+    skips the candidate search for operands whose fingerprints survived."""
+    return _TUNED_PLAN_CACHE.items()
+
+
+def import_tuned_entries(entries) -> int:
+    """Merge checkpointed tuned entries back in; existing keys win (the
+    live entry is at least as fresh). Returns the number imported."""
+    n = 0
+    for key, point in entries:
+        if key not in _TUNED_PLAN_CACHE:
+            _TUNED_PLAN_CACHE.put(key, point)
+            n += 1
+    return n
+
+
 # Signatures/format families the grid subsystem lowers directly (mirrors
 # the conformance matrix's grid cells); other cells only get 1-D points.
 _GRID_EXPRS = {"spmv", "spmm", "sddmm"}

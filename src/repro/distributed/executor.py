@@ -892,11 +892,18 @@ SPMD_BUILDERS: Dict[str, Callable] = {
 def to_spmd(kernel: LoweredKernel, mesh: Mesh = None, axis: str = "x"):
     """SPMD executor for a lowered kernel, when a builder exists.
 
+    ``mesh`` is data, not trace state: pass nothing to realize the
+    kernel's own Machine, a ``jax.sharding.Mesh``, or a ``Machine``
+    directly (realized here) — the elastic path hands the resized Machine
+    straight through after ``relower``.
+
     Grid (multi-axis) NON-ZERO kernels reuse their 1-D builders with the
     flat color axis sharded over BOTH mesh axes and the reduction psum
     scoped to both — the nested pos-split is the flat P*Q split."""
     if mesh is None:
         mesh = machine_to_mesh(kernel.machine)
+    elif isinstance(mesh, Machine):
+        mesh = machine_to_mesh(mesh)
     strat = kernel.strategy
     if getattr(strat, "is_grid", False) and strat.space == "nnz" \
             and len(mesh.axis_names) >= 2:

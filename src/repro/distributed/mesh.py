@@ -42,6 +42,33 @@ def mesh_to_machine(mesh: Mesh) -> Machine:
                      zip(mesh.axis_names, mesh.devices.shape)])
 
 
+def resize_machine(machine: Machine, axis: str, size: int) -> Machine:
+    """A new Machine with ``axis`` resized to ``size`` — the mesh-as-data
+    primitive: machines are values, so elastic resize is construction, not
+    mutation of trace state."""
+    names = [d.name for d in machine.dims]
+    if axis not in names:
+        raise ValueError(f"machine has no axis {axis!r} (axes: {names})")
+    if size < 1:
+        raise ValueError(f"axis size must be >= 1, got {size}")
+    return Machine(*[(d.name, size if d.name == axis else d.size)
+                     for d in machine.dims])
+
+
+def shrink_machine(machine: Machine, axis: Optional[str] = None,
+                   by: int = 1) -> Machine:
+    """The P→P−1 device-loss resize: shrink ``axis`` (default: the first
+    dimension) by ``by`` pieces."""
+    axis = axis if axis is not None else machine.dims[0].name
+    cur = {d.name: d.size for d in machine.dims}.get(axis)
+    if cur is None:
+        raise ValueError(f"machine has no axis {axis!r}")
+    if cur - by < 1:
+        raise ValueError(
+            f"cannot shrink axis {axis!r} from {cur} by {by}: no pieces left")
+    return resize_machine(machine, axis, cur - by)
+
+
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     """Axes used for data parallelism ('pod' composes with 'data')."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

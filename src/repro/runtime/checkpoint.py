@@ -12,11 +12,16 @@ Design for 1000+ nodes (DESIGN.md §6):
   picks the newest committed step.
 - The data-pipeline cursor is part of the checkpoint so restart is
   deterministic (no skipped/duplicated batches).
+- **Sparse-aware**: :class:`SparseCheckpoint` layers the compressed-tree
+  snapshot (pos/crd/vals per level), per-tensor content fingerprints, and
+  the tuned-plan cache on top, so elastic recovery restores only what
+  changed and skips re-partitioning / re-search for unchanged operands.
 """
 from __future__ import annotations
 
 import json
 import os
+import pickle
 import shutil
 import threading
 import time
@@ -30,11 +35,20 @@ import numpy as np
 def _flatten_with_names(tree) -> List[Tuple[str, Any]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
+    seen: Dict[str, int] = {}
     for path, leaf in flat:
         name = "/".join(
             str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
-            for p in path)
-        out.append((name or "leaf", leaf))
+            for p in path) or "leaf"
+        # "/"-joined paths can collide (e.g. {"a": {"b": _}, "a/b": _});
+        # manifests are keyed positionally but the names must still be
+        # unambiguous for humans and for name-addressed partial restores.
+        if name in seen:
+            seen[name] += 1
+            name = f"{name}#{seen[name]}"
+        else:
+            seen[name] = 0
+        out.append((name, leaf))
     return out
 
 
@@ -107,6 +121,7 @@ class CheckpointManager:
         ShapeDtypeStructs). Re-sharding onto a new mesh happens by the
         caller placing the returned host arrays with device_put — shapes
         are global, so any mesh works (elastic restart)."""
+        self._sweep_orphans()
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {self.dir}")
@@ -116,8 +131,133 @@ class CheckpointManager:
         treedef = jax.tree_util.tree_structure(like)
         return step, jax.tree_util.tree_unflatten(treedef, leaves)
 
+    def _sweep_orphans(self) -> None:
+        """Remove ``step_<N>.tmp/`` directories left by a crash mid-write.
+        They never commit (os.replace is the commit point) so they are
+        garbage — but without this sweep they accumulate forever. Skipped
+        while an async save is in flight (its tmp dir is live)."""
+        if self._thread is not None and self._thread.is_alive():
+            return
+        for p in self.dir.glob("step_*.tmp"):
+            shutil.rmtree(p, ignore_errors=True)
+
     def _gc(self) -> None:
         steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob(
             "step_*") if not p.name.endswith(".tmp"))
         for s in steps[: -self.keep]:
             shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# Sparse checkpointing — compressed trees + plan fingerprints + tuned plans
+# ---------------------------------------------------------------------------
+
+
+class SparseCheckpoint:
+    """Checkpoint/restore for sparse-kernel run loops.
+
+    Each snapshot holds, per tensor, the full compressed tree (vals plus
+    every level's pos/crd) and its content CRC — the same fingerprint that
+    keys the shard/plan caches. On restore, tensors whose live CRC already
+    matches the snapshot are left untouched (their cache entries stay
+    valid → recovery skips re-partitioning them); mismatches are healed in
+    place. The tuned-plan cache (core.plan_search) rides along as a pickle
+    so a recovered ``schedule="auto"`` run skips re-search. Arbitrary
+    extra state (accumulators, step counters) goes in ``extra``.
+    """
+
+    def __init__(self, directory: str, *, keep: int = 3,
+                 process_index: Optional[int] = None):
+        self.mgr = CheckpointManager(directory, keep=keep,
+                                     process_index=process_index)
+        self._last_fp: Dict[str, int] = {}
+
+    # -- snapshot layout ------------------------------------------------
+    @staticmethod
+    def _leaves(t) -> Dict[str, np.ndarray]:
+        out = {"vals": np.asarray(t.vals)}
+        for l, ld in enumerate(t.levels):
+            if ld.pos is not None:
+                out[f"pos{l}"] = np.asarray(ld.pos)
+            if ld.crd is not None:
+                out[f"crd{l}"] = np.asarray(ld.crd)
+        return out
+
+    @staticmethod
+    def _crc(t) -> int:
+        return int(t.fingerprint()[-1])
+
+    def _like(self, tensors: Dict[str, Any],
+              extra_like: Dict[str, Any]) -> Dict[str, Any]:
+        return {"extra": extra_like,
+                "fp": {n: np.int64(0) for n in tensors},
+                "tensors": {n: self._leaves(t) for n, t in tensors.items()},
+                "tuned": np.zeros(0, dtype=np.uint8)}
+
+    # -- save / restore -------------------------------------------------
+    def save(self, step: int, tensors: Dict[str, Any],
+             extra: Optional[Dict[str, Any]] = None, *,
+             blocking: bool = True) -> None:
+        from ..core import plan_search
+        fps = {n: self._crc(t) for n, t in tensors.items()}
+        tuned = np.frombuffer(
+            pickle.dumps(plan_search.export_tuned_entries()),
+            dtype=np.uint8).copy()
+        state = {"extra": dict(extra or {}),
+                 "fp": {n: np.int64(c) for n, c in fps.items()},
+                 "tensors": {n: self._leaves(t) for n, t in tensors.items()},
+                 "tuned": tuned}
+        self.mgr.save(step, state, blocking=blocking)
+        self._last_fp = fps
+
+    def stale_operands(self, tensors: Dict[str, Any]) -> List[str]:
+        """Tensors whose CURRENT content CRC deviates from the last
+        committed snapshot — corruption detection through the exact
+        fingerprints that key the shard caches."""
+        return sorted(n for n, t in tensors.items()
+                      if n in self._last_fp
+                      and self._crc(t) != self._last_fp[n])
+
+    def restore(self, tensors: Dict[str, Any],
+                extra_like: Optional[Dict[str, Any]] = None,
+                step: Optional[int] = None,
+                ) -> Tuple[int, Dict[str, Any], Dict[str, Any]]:
+        """Restore the newest (or given) step. Heals mismatched tensors in
+        place, leaves matching ones alone, merges tuned-plan entries back,
+        and returns ``(step, extra, info)`` where info counts what was
+        ``reused`` vs ``restored`` (plus ``tuned_imported``)."""
+        step, got = self.mgr.restore(
+            self._like(tensors, dict(extra_like or {})), step=step)
+        reused, restored = [], []
+        for n, t in tensors.items():
+            saved_crc = int(got["fp"][n])
+            if self._crc(t) == saved_crc:
+                reused.append(n)
+            else:
+                self._copy_into(t, got["tensors"][n])
+                restored.append(n)
+            self._last_fp[n] = saved_crc
+        n_tuned = 0
+        tuned = np.asarray(got.get("tuned", np.zeros(0, np.uint8)),
+                           dtype=np.uint8)
+        if tuned.size:
+            from ..core import plan_search
+            n_tuned = plan_search.import_tuned_entries(
+                pickle.loads(tuned.tobytes()))
+        return step, got["extra"], {"reused": reused, "restored": restored,
+                                    "tuned_imported": n_tuned}
+
+    def wait(self) -> None:
+        self.mgr.wait()
+
+    def latest_step(self) -> Optional[int]:
+        return self.mgr.latest_step()
+
+    @staticmethod
+    def _copy_into(t, leaves: Dict[str, np.ndarray]) -> None:
+        t.vals[...] = leaves["vals"]
+        for l, ld in enumerate(t.levels):
+            if ld.pos is not None:
+                ld.pos[...] = leaves[f"pos{l}"]
+            if ld.crd is not None:
+                ld.crd[...] = leaves[f"crd{l}"]

@@ -1,0 +1,371 @@
+"""Elastic execution & fault recovery invariants (ISSUE 8, hypothesis
+stub–compatible property tests).
+
+The elastic contract, end to end:
+
+  * ``relower`` onto a resized machine is BIT-FOR-BIT a fresh lower on
+    that machine (integer-valued operands — reductions must agree
+    exactly), while reusing ≥ 50% of shard-cache lookups on a
+    migration-style P→P−1 under EVERY format family and both strategy
+    spaces;
+  * migration bounds (``elastic_row_bounds``) cover the domain and leave
+    P−2 windows untouched;
+  * ``SparseCheckpoint`` round-trips compressed trees + fingerprints:
+    corrupted tensors are healed in place, unchanged ones are reported
+    reused (their cache entries stay valid), and tuned-plan entries ride
+    along;
+  * a fault-injected ``run_with_recovery`` (device loss mid-loop)
+    restores, shrinks to P−1, re-lowers with shard reuse, and produces
+    bit-for-bit the unfaulted result — same for healed corruption and
+    straggler-weight re-plans;
+  * satellites: RestartPolicy backoff jitter, StepWatchdog warm-up,
+    orphaned tmp-dir sweep, _flatten_with_names collisions.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as rc
+from repro.core import formats as F
+from repro.core import plan_search as PS
+from repro.core.lower import (clear_lowering_caches, default_nnz_schedule,
+                              lower, rebuild_schedule, relower)
+from repro.core.partition import elastic_row_bounds, partition_by_bounds
+from repro.core.tensor import Tensor
+from repro.distributed.mesh import resize_machine, shrink_machine
+from repro.runtime.checkpoint import (CheckpointManager, SparseCheckpoint,
+                                      _flatten_with_names)
+from repro.runtime.elastic import run_with_recovery
+from repro.runtime.fault import (DeviceLoss, FaultEvent, FaultInjector,
+                                 RestartPolicy, StepWatchdog,
+                                 StragglerMitigator)
+
+
+def _int_sparse(rng, n, m, density=0.3):
+    """Integer-valued sparse matrix: all partial sums are exact in fp32,
+    so differently-ordered reductions must agree BIT FOR BIT."""
+    return (rng.integers(-3, 4, (n, m)) *
+            (rng.random((n, m)) < density)).astype(np.float32)
+
+
+def _spmm_stmt(rng, n, m, J, fm=None):
+    dB = _int_sparse(rng, n, m)
+    dC = rng.integers(-3, 4, (m, J)).astype(np.float32)
+    B = Tensor.from_dense("B", dB, fm or F.CSR())
+    C = Tensor.from_dense("C", dC)
+    return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                        A=Tensor.zeros_dense("A", (n, J)), B=B, C=C)
+
+
+_FAMILIES = {
+    "csr": lambda: F.CSR(),
+    "dcsr": lambda: F.DCSR(),
+    "csc": lambda: F.CSC(),
+    "coo": lambda: F.COO(2),
+    "bcsr": lambda: F.BCSR((8, 8)),
+    "bcsc": lambda: F.BCSC((8, 8)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Migration bounds
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 200), P=st.integers(2, 8), seed=st.integers(0, 99))
+def test_elastic_bounds_cover_and_preserve(n, P, seed):
+    rng = np.random.default_rng(seed)
+    b = partition_by_bounds(n, P)
+    dead = int(rng.integers(0, P))
+    keep = elastic_row_bounds(b, dead)
+    assert keep.shape == (P - 1, 2)
+    # contiguous cover of [0, n)
+    assert keep[0, 0] == 0 and keep[-1, 1] == n
+    assert np.array_equal(keep[1:, 0], keep[:-1, 1])
+    # P-2 of the surviving windows are bitwise rows of the original split
+    orig = {(int(lo), int(hi)) for lo, hi in b}
+    unchanged = sum((int(lo), int(hi)) in orig for lo, hi in keep)
+    assert unchanged >= P - 2
+
+
+# ---------------------------------------------------------------------------
+# Resize equivalence + shard reuse (the tentpole assertions)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(fam=st.sampled_from(sorted(_FAMILIES)), dead=st.integers(0, 3),
+       nnz_space=st.booleans(), seed=st.integers(0, 999))
+def test_relower_bitforbit_and_reuse(fam, dead, nnz_space, seed):
+    rng = np.random.default_rng(seed)
+    stmt = _spmm_stmt(rng, 48, 40, 8, fm=_FAMILIES[fam]())
+    M4, M3 = rc.Machine(("x", 4)), rc.Machine(("x", 3))
+    sched4 = default_nnz_schedule(stmt, M4) if nnz_space else None
+    sched3 = default_nnz_schedule(stmt, M3) if nnz_space else None
+    clear_lowering_caches()
+    k4 = lower(stmt, M4, schedule=sched4, elastic=True)
+    ref4 = np.asarray(k4.run())
+    k3 = relower(k4, M3, dead=dead)
+    out3 = np.asarray(k3.run())
+    # bit-for-bit vs a fresh (equal-split) lower on the shrunk machine AND
+    # vs the original P=4 result
+    fresh = lower(stmt, M3, schedule=sched3)
+    assert np.array_equal(out3, np.asarray(fresh.run()))
+    assert np.array_equal(out3, ref4)
+    # ≥ 50% of shard-cache lookups hit: P−2 surviving windows + the
+    # replicated operand are reused, only the merged window re-packs
+    assert k3.cache.shard_reuse >= 0.5
+    assert k3.cache.shard_hits + k3.cache.shard_misses > 0
+    assert k3.strategy.pieces == 3 and k3.machine is M3
+
+
+def test_relower_regrid_and_weights():
+    """Mesh-as-data beyond shrinking: re-factorize 1-D → 2-D, and re-plan
+    in place with straggler weights through the same entry point."""
+    rng = np.random.default_rng(7)
+    stmt = _spmm_stmt(rng, 48, 40, 8)
+    M4 = rc.Machine(("x", 4))
+    M22 = rc.Machine(("x", 2), ("y", 2))
+    clear_lowering_caches()
+    k4 = lower(stmt, M4, elastic=True)
+    ref = np.asarray(k4.run())
+    k22 = relower(k4, M22)
+    assert k22.strategy.is_grid
+    assert tuple(d.size for d in k22.strategy.machine_dims) == (2, 2)
+    assert np.array_equal(np.asarray(k22.run()), ref)
+    # weighted re-plan on the SAME machine (nnz space)
+    kn = lower(stmt, M4, schedule=default_nnz_schedule(stmt, M4),
+               elastic=True)
+    w = np.array([0.5, 1.0, 1.5, 1.0])
+    kw = relower(kn, M4, weights=w)
+    assert np.array_equal(np.asarray(kw.run()), ref)
+
+
+def test_rebuild_schedule_matches_strategy_family():
+    rng = np.random.default_rng(11)
+    stmt = _spmm_stmt(rng, 48, 40, 8)
+    M4 = rc.Machine(("x", 4))
+    k = lower(stmt, M4, schedule=default_nnz_schedule(stmt, M4))
+    s = rebuild_schedule(stmt, rc.Machine(("x", 3)), k.strategy)
+    assert s.strategy().space == "nnz" and s.strategy().pieces == 3
+    k2 = lower(stmt, M4)   # universe default
+    s2 = rebuild_schedule(stmt, rc.Machine(("x", 2), ("y", 2)), k2.strategy)
+    assert s2.strategy().is_grid and s2.strategy().pieces == 4
+
+
+# ---------------------------------------------------------------------------
+# Sparse checkpoint round-trip
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(fam=st.sampled_from(sorted(_FAMILIES)), seed=st.integers(0, 999))
+def test_sparse_checkpoint_roundtrip(fam, seed):
+    rng = np.random.default_rng(seed)
+    stmt = _spmm_stmt(rng, 40, 32, 4, fm=_FAMILIES[fam]())
+    tensors = {a.tensor.name: a.tensor for a in stmt.accesses()}
+    B = tensors["B"]
+    fp0 = B.fingerprint()
+    ck = SparseCheckpoint(tempfile.mkdtemp(prefix="ck_"), keep=2)
+    acc = np.arange(6, dtype=np.float32)
+    ck.save(1, tensors, {"state": acc}, blocking=True)
+    assert ck.stale_operands(tensors) == []
+    # corrupt B in place -> detected by CRC, healed by restore
+    B.vals.reshape(-1)[0] += 3.0
+    assert ck.stale_operands(tensors) == ["B"]
+    step, extra, info = ck.restore(tensors, {"state": acc})
+    assert step == 1
+    assert np.array_equal(extra["state"], acc)
+    assert info["restored"] == ["B"]
+    assert "C" in info["reused"]          # untouched operand not re-written
+    assert B.fingerprint() == fp0         # tree healed bit-for-bit
+    assert ck.stale_operands(tensors) == []
+
+
+def test_sparse_checkpoint_carries_tuned_plans(tmp_path):
+    rng = np.random.default_rng(3)
+    stmt = _spmm_stmt(rng, 40, 32, 4)
+    tensors = {a.tensor.name: a.tensor for a in stmt.accesses()}
+    clear_lowering_caches()
+    k = lower(stmt, rc.Machine(("x", 2)), schedule="auto")
+    assert len(PS.export_tuned_entries()) >= 1
+    key = PS.export_tuned_entries()[-1][0]
+    ck = SparseCheckpoint(str(tmp_path), keep=2)
+    ck.save(1, tensors, blocking=True)
+    PS.clear_tuned_plan_cache()
+    assert PS.export_tuned_entries() == []
+    _, _, info = ck.restore(tensors)
+    assert info["tuned_imported"] >= 1
+    assert any(k2 == key for k2, _ in PS.export_tuned_entries())
+
+
+# ---------------------------------------------------------------------------
+# Injected-fault recovery through run_with_recovery
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(fault_step=st.integers(1, 4), piece=st.integers(0, 3),
+       seed=st.integers(0, 999))
+def test_device_loss_recovers_bitforbit(fault_step, piece, seed):
+    rng = np.random.default_rng(seed)
+    dB = _int_sparse(rng, 48, 40)
+    dC = rng.integers(-3, 4, (40, 8)).astype(np.float32)
+
+    def mkstmt():
+        B = Tensor.from_dense("B", dB.copy(), F.CSR())
+        C = Tensor.from_dense("C", dC.copy())
+        return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (48, 8)), B=B, C=C)
+
+    M4 = rc.Machine(("x", 4))
+    clear_lowering_caches()
+    ref, ref_rep = run_with_recovery(
+        mkstmt(), M4, 6, ckpt_dir=tempfile.mkdtemp(prefix="ref_"))
+    assert ref_rep.restarts == 0 and ref_rep.final_pieces == 4
+
+    clear_lowering_caches()
+    inj = FaultInjector(
+        [FaultEvent(step=fault_step, kind="device_loss", piece=piece)])
+    state, rep = run_with_recovery(
+        mkstmt(), M4, 6, ckpt_dir=tempfile.mkdtemp(prefix="flt_"),
+        injector=inj)
+    # kill one device mid-loop -> checkpoint restore + P−1 re-plan ->
+    # bit-for-bit the unfaulted result, with ≥ 50% shard reuse
+    assert np.array_equal(state, ref)
+    assert rep.restarts == 1
+    assert rep.initial_pieces == 4 and rep.final_pieces == 3
+    assert rep.shard_reuse >= 0.5
+    assert rep.faults == [f"device_loss:{piece}@{fault_step}"]
+    assert rep.restored_step is not None and rep.restored_step <= fault_step
+
+
+def test_corruption_heals_and_matches(tmp_path_factory):
+    rng = np.random.default_rng(5)
+    dB = _int_sparse(rng, 48, 40)
+    dC = rng.integers(-3, 4, (40, 8)).astype(np.float32)
+
+    def mkstmt():
+        B = Tensor.from_dense("B", dB.copy(), F.CSR())
+        C = Tensor.from_dense("C", dC.copy())
+        return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (48, 8)), B=B, C=C)
+
+    M4 = rc.Machine(("x", 4))
+    clear_lowering_caches()
+    ref, _ = run_with_recovery(mkstmt(), M4, 6,
+                               ckpt_dir=str(tmp_path_factory.mktemp("r")))
+    clear_lowering_caches()
+    inj = FaultInjector([FaultEvent(step=2, kind="corrupt", tensor="B")])
+    state, rep = run_with_recovery(
+        mkstmt(), M4, 6, ckpt_dir=str(tmp_path_factory.mktemp("c")),
+        injector=inj)
+    assert np.array_equal(state, ref)
+    assert rep.healed == ["B"] and rep.restarts == 0
+    assert rep.final_pieces == 4          # corruption does not shrink
+
+
+def test_straggler_triggers_weighted_replan(tmp_path_factory):
+    rng = np.random.default_rng(6)
+    dB = _int_sparse(rng, 48, 40)
+    dC = rng.integers(-3, 4, (40, 8)).astype(np.float32)
+
+    def mkstmt():
+        B = Tensor.from_dense("B", dB.copy(), F.CSR())
+        C = Tensor.from_dense("C", dC.copy())
+        return rc.parse_tin("A(i,j) = B(i,k) * C(k,j)",
+                            A=Tensor.zeros_dense("A", (48, 8)), B=B, C=C)
+
+    M4 = rc.Machine(("x", 4))
+    s0 = mkstmt()
+    clear_lowering_caches()
+    ref, _ = run_with_recovery(s0, M4, 8,
+                               ckpt_dir=str(tmp_path_factory.mktemp("r")),
+                               schedule=default_nnz_schedule(s0, M4))
+    clear_lowering_caches()
+    s1 = mkstmt()
+    inj = FaultInjector([FaultEvent(step=s, kind="straggler", piece=2,
+                                    slowdown_s=0.05) for s in (3, 4, 5)])
+    mit = StragglerMitigator(4, report_budget=2)
+    state, rep = run_with_recovery(
+        s1, M4, 8, ckpt_dir=str(tmp_path_factory.mktemp("s")),
+        schedule=default_nnz_schedule(s1, M4), injector=inj, mitigator=mit)
+    assert np.array_equal(state, ref)     # weights change splits, not math
+    assert rep.replans >= 1               # the lower(weights=) re-plan fired
+
+
+# ---------------------------------------------------------------------------
+# Satellites: jitter, warm-up, tmp sweep, name collisions, machine resize
+# ---------------------------------------------------------------------------
+
+def test_restart_backoff_jitter_spreads_delays():
+    p = RestartPolicy(max_restarts=6, backoff_s=1.0, backoff_factor=2.0,
+                      jitter=0.5, seed=42)
+    sleeps, calls = [], {"n": 0}
+
+    def boom():
+        calls["n"] += 1
+        if calls["n"] <= 4:
+            raise RuntimeError("boom")
+
+    p.run_with_restarts(boom, sleep=lambda s: sleeps.append(s))
+    assert len(sleeps) == 4
+    # jitter keeps each delay within ±50% of its nominal backoff value
+    for s, nominal in zip(sleeps, (1.0, 2.0, 4.0, 8.0)):
+        assert 0.5 * nominal <= s <= 1.5 * nominal
+    assert len(set(sleeps)) == len(sleeps)   # not the lockstep herd
+    # reproducible: same seed -> same schedule
+    p2 = RestartPolicy(max_restarts=6, backoff_s=1.0, backoff_factor=2.0,
+                       jitter=0.5, seed=42)
+    sleeps2, calls["n"] = [], 0
+    p2.run_with_restarts(boom, sleep=lambda s: sleeps2.append(s))
+    assert sleeps == sleeps2
+    # a zero base delay stays exactly zero under jitter (pinned tests rely
+    # on this)
+    p3 = RestartPolicy(backoff_s=0.0, jitter=0.9, seed=1)
+    z, calls["n"] = [], 0
+    p3.run_with_restarts(boom, sleep=lambda s: z.append(s))
+    assert z == [0.0] * 4
+
+
+def test_watchdog_warmup_suppresses_early_flags():
+    wd = StepWatchdog(threshold=1.01, warmup=3)
+    # the first `warmup` stops can never flag, even when wildly slow
+    for dt in (0.001, 0.5, 0.9):
+        wd.start()
+        wd._t0 -= dt                     # simulate elapsed time
+        assert wd.stop() is False
+    wd.start()
+    wd._t0 -= 50.0
+    assert wd.stop() is True             # past warm-up, 50s ≫ median
+
+
+def test_restore_sweeps_orphan_tmp_dirs(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, process_index=0)
+    mgr.save(1, {"x": np.arange(4)}, blocking=True)
+    orphan = tmp_path / "step_00000007.tmp"
+    orphan.mkdir()
+    (orphan / "leaf_00000_p0.npy").write_bytes(b"garbage")
+    step, got = mgr.restore({"x": np.zeros(4, dtype=np.int64)})
+    assert step == 1 and np.array_equal(got["x"], np.arange(4))
+    assert not orphan.exists()           # crash debris swept
+    assert (tmp_path / "step_00000001").exists()
+
+
+def test_flatten_with_names_uniquifies_collisions():
+    tree = {"a": {"b": 1}, "a/b": 2, "c": [3, 4]}
+    names = [n for n, _ in _flatten_with_names(tree)]
+    assert len(names) == len(set(names))
+    assert sum(n.startswith("a/b") for n in names) == 2
+
+
+def test_machine_resize_helpers():
+    M = rc.Machine(("x", 4), ("y", 2))
+    assert [d.size for d in shrink_machine(M).dims] == [3, 2]
+    assert [d.size for d in shrink_machine(M, "y").dims] == [4, 1]
+    assert [d.size for d in resize_machine(M, "y", 5).dims] == [4, 5]
+    with pytest.raises(ValueError):
+        shrink_machine(rc.Machine(("x", 1)))
+    with pytest.raises(ValueError):
+        resize_machine(M, "z", 2)
