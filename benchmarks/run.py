@@ -27,9 +27,13 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
                         time split restore / re-plan / re-jit
 
 Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
-writes a machine-readable ``BENCH_<suite>.json`` (name → us_per_call) per
-suite to ``--out-dir`` — the perf-trajectory artifacts collected by
-nightly CI.
+writes a machine-readable ``BENCH_<suite>.json`` per suite to
+``--out-dir`` — the perf-trajectory artifacts collected by nightly CI.
+Each file is ``{"results": {name: us_per_call}, "telemetry": snapshot}``:
+the telemetry snapshot (cache hit rates, per-axis communication byte
+counters, per-piece skew when profiled) captures *why* the numbers moved,
+not just wall time. Counters/gauges/histograms reset per suite; the cache
+stats are process-cumulative.
 """
 from __future__ import annotations
 
@@ -49,6 +53,8 @@ def main() -> None:
     ap.add_argument("--out-dir", default=".",
                     help="directory for the BENCH_*.json files")
     args = ap.parse_args()
+
+    from repro.runtime import telemetry
 
     from . import (bench_autotune, bench_bcsr, bench_fault, bench_levels,
                    bench_load_balance, bench_mesh2d, bench_mismatch,
@@ -104,6 +110,7 @@ def main() -> None:
         if only is not None and name not in only:
             continue
         drain_results()        # reset the registry for this suite
+        telemetry.METRICS.clear()   # per-suite counters/gauges/histograms
         print(f"# --- {name} ---", flush=True)
         try:
             fn()
@@ -114,7 +121,9 @@ def main() -> None:
             os.makedirs(args.out_dir, exist_ok=True)
             path = os.path.join(args.out_dir, f"BENCH_{name}.json")
             with open(path, "w") as fh:
-                json.dump(drain_results(), fh, indent=2, sort_keys=True)
+                json.dump({"results": drain_results(),
+                           "telemetry": telemetry.METRICS.snapshot()},
+                          fh, indent=2, sort_keys=True)
             print(f"# wrote {path}", flush=True)
 
 

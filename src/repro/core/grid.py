@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import lower as L
+from ..runtime import telemetry
 from .partition import (Bounds, ShardedTensor, TensorPartition,
                         block_aligned_row_bounds, materialize_bcsr_grid,
                         materialize_coo3_grid, materialize_csr_grid,
@@ -406,47 +407,56 @@ def lower_grid(stmt: Assignment, machine: Machine, strat: DistStrategy,
                jit: bool, fallbacks, declared_formats, snap,
                distributions=None) -> "L.LoweredKernel":
     out_t: Tensor = stmt.lhs.tensor
-    gp = compute_grid_plan(stmt, strat)
+    with telemetry.span("lower.plan", sig=stmt.signature(),
+                        space=strat.space, pieces=strat.pieces,
+                        grid=list(strat.grid_shape)):
+        gp = compute_grid_plan(stmt, strat)
 
-    plan_key = L._plan_cache_key(stmt, strat, None)
-    plans = L._PLAN_CACHE.get(plan_key) if plan_key is not None else None
-    if plans is not None:
-        current: Dict[str, Tensor] = {}
-        for acc in stmt.accesses():
-            current.setdefault(acc.tensor.name, acc.tensor)
-        plans = {name: dataclasses.replace(p, tensor=current[name])
-                 for name, p in plans.items()}
-    else:
-        plans = _grid_plans(stmt, strat, gp)
-        if plan_key is not None:
-            L._PLAN_CACHE.put(plan_key, {
-                name: dataclasses.replace(p, tensor=None)
-                for name, p in plans.items()})
+        plan_key = L._plan_cache_key(stmt, strat, None)
+        plans = L._PLAN_CACHE.get(plan_key) if plan_key is not None else None
+        telemetry.instant("lower.plan.cache", hit=plans is not None,
+                          memoizable=plan_key is not None)
+        if plans is not None:
+            current: Dict[str, Tensor] = {}
+            for acc in stmt.accesses():
+                current.setdefault(acc.tensor.name, acc.tensor)
+            plans = {name: dataclasses.replace(p, tensor=current[name])
+                     for name, p in plans.items()}
+        else:
+            plans = _grid_plans(stmt, strat, gp)
+            if plan_key is not None:
+                L._PLAN_CACHE.put(plan_key, {
+                    name: dataclasses.replace(p, tensor=None)
+                    for name, p in plans.items()})
 
     comm = _grid_comm(stmt, strat, gp)
 
     # ---- materialize ------------------------------------------------------
     shards: Dict[str, ShardedTensor] = {}
-    for name, plan in plans.items():
-        if name == out_t.name:
-            continue                      # grid outputs assemble from leaves
-        t = plan.tensor
-        if plan.replicated:
-            shards[name] = materialize_replicated(t, gp.pieces)
-        elif plan.grid is not None and len(plan.grid) == 3:
-            shards[name] = materialize_coo3_grid(t, plan)
-        elif plan.grid is not None and t.format.is_sparse:
-            shards[name] = (materialize_bcsr_grid(t, plan)
-                            if t.format.is_blocked
-                            else materialize_csr_grid(t, plan))
-        elif plan.grid is not None:
-            shards[name] = materialize_dense_grid(
-                t, plan.levels[0].coord_bounds, plan.levels[1].coord_bounds)
-        elif plan.root_coord_bounds is None:
-            shards[name] = materialize_dense_cols(
-                t, plan.levels[1].coord_bounds)
-        else:
-            shards[name] = materialize_dense_rows(t, plan.root_coord_bounds)
+    with telemetry.span("lower.materialize", sig=stmt.signature(),
+                        pieces=gp.pieces):
+        for name, plan in plans.items():
+            if name == out_t.name:
+                continue                  # grid outputs assemble from leaves
+            t = plan.tensor
+            if plan.replicated:
+                shards[name] = materialize_replicated(t, gp.pieces)
+            elif plan.grid is not None and len(plan.grid) == 3:
+                shards[name] = materialize_coo3_grid(t, plan)
+            elif plan.grid is not None and t.format.is_sparse:
+                shards[name] = (materialize_bcsr_grid(t, plan)
+                                if t.format.is_blocked
+                                else materialize_csr_grid(t, plan))
+            elif plan.grid is not None:
+                shards[name] = materialize_dense_grid(
+                    t, plan.levels[0].coord_bounds,
+                    plan.levels[1].coord_bounds)
+            elif plan.root_coord_bounds is None:
+                shards[name] = materialize_dense_cols(
+                    t, plan.levels[1].coord_bounds)
+            else:
+                shards[name] = materialize_dense_rows(
+                    t, plan.root_coord_bounds)
 
     # data-vs-computation distribution mismatch cost (C4), as in the 1-D
     # path: a declared data distribution that does not match the grid plan
@@ -460,7 +470,11 @@ def lower_grid(stmt: Assignment, machine: Machine, strat: DistStrategy,
             if not L._plans_equal(want, have):
                 comm.redistribute_bytes += L._nbytes(plans[name].tensor)
 
-    leaf_name, runner = _emit_grid(stmt, strat, gp, plans, shards, jit=jit)
+    with telemetry.span("lower.emit", sig=stmt.signature(),
+                        space=strat.space) as esp:
+        leaf_name, runner = _emit_grid(stmt, strat, gp, plans, shards,
+                                       jit=jit)
+        esp.set(leaf=leaf_name)
     return L.LoweredKernel(
         stmt=stmt, strategy=strat, machine=machine, plans=plans,
         shards=shards, runner=runner, comm=comm, leaf_name=leaf_name,

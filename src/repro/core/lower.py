@@ -55,7 +55,8 @@ from .tdn import Distribution, Machine
 from .tensor import Tensor
 from .tin import Assignment, IndexVar
 
-log = logging.getLogger("repro.lower")
+log = logging.getLogger(__name__)
+from ..runtime import telemetry
 from ..kernels import ref as K
 from ..kernels.layout import (pack_mat_inner_blocks, pack_mat_row_blocks,
                               pack_rowwindow_blocks, pack_vec_blocks)
@@ -300,6 +301,57 @@ class LoweredKernel:
                 return acc.tensor.name
         return None
 
+    def explain(self) -> str:
+        """Human-readable plan provenance: what was chosen, what it costs,
+        and — for ``schedule="auto"`` lowers — every candidate the
+        autoscheduler scored and why this one won."""
+        lines = [f"kernel {self.cell_id()}  leaf={self.leaf_name}",
+                 f"  schedule: space={self.strategy.space} "
+                 f"mesh={self.strategy.mesh_label} "
+                 f"pieces={self.strategy.pieces}"]
+        if self.fallbacks:
+            lines.append("  fallbacks: " + "; ".join(self.fallbacks))
+        t = self.tuned
+        if t is not None:
+            cands = getattr(t, "candidates", None) or []
+            lines.append(
+                f"  autoscheduler winner: {t.label} "
+                f"est={t.est_cost_s:.3e}s"
+                + (f" measured={t.measured_s:.3e}s"
+                   if t.measured_s is not None else " (not measured)"))
+            if cands:
+                lines.append(f"  candidates scored: {len(cands)} "
+                             "(model cost order; top-K measured)")
+                for i, c in enumerate(cands):
+                    meas = (f" measured={c['measured_s']:.3e}s"
+                            if c.get("measured_s") is not None else "")
+                    mark = " <- winner" if c["label"] == t.label else ""
+                    lines.append(f"    {i + 1:2d}. {c['label']:<28s} "
+                                 f"est={c['est_cost_s']:.3e}s{meas}{mark}")
+        else:
+            lines.append("  hand-picked schedule (no candidate search ran)")
+        comm = self.comm
+        if comm.axes:
+            per_ax = ", ".join(
+                f"{n}: bcast={a.broadcast_bytes} reduce={a.reduce_bytes}"
+                for n, a in comm.axes.items())
+            lines.append(f"  comm: {per_ax} "
+                         f"(net={comm.total_network_bytes()})")
+        else:
+            lines.append(
+                f"  comm: replicate={comm.replicate_bytes} "
+                f"reduce={comm.reduce_bytes} "
+                f"redistribute={comm.redistribute_bytes} "
+                f"(net={comm.total_network_bytes()})")
+        cs = self.cache
+        lines.append(
+            f"  cache: plan {cs.plan_hits}h/{cs.plan_misses}m, "
+            f"shard {cs.shard_hits}h/{cs.shard_misses}m, "
+            f"runner {cs.runner_hits}h/{cs.runner_misses}m, "
+            f"tuned {cs.tuned_hits}h/{cs.tuned_misses}m"
+            + (" [warm]" if cs.warm else ""))
+        return "\n".join(lines)
+
 
 # ---------------------------------------------------------------------------
 # Helpers
@@ -500,9 +552,48 @@ def lower(
     keeps its one-entry-per-tensor accounting. ``init_bounds`` (pieces, 2)
     overrides the initial equal split — the elastic-resize entry point
     feeds merged survivor windows here (see relower)."""
-    with fingerprint_memo():   # one O(nnz) CRC per tensor per lower
-        return _lower_impl(stmt, machine, schedule, distributions, jit,
-                           weights, elastic=elastic, init_bounds=init_bounds)
+    with fingerprint_memo(), telemetry.span(
+            "lower", sig=stmt.signature()) as sp:
+        k = _lower_impl(stmt, machine, schedule, distributions, jit,
+                        weights, elastic=elastic, init_bounds=init_bounds)
+        sp.set(cell=k.cell_id(), leaf=k.leaf_name,
+               pieces=k.strategy.pieces, warm=k.cache.warm)
+        _record_lower_metrics(k)
+        return k
+
+
+def _record_lower_metrics(k: "LoweredKernel") -> None:
+    """Fold one lower's cache delta and communication ledger into the
+    process metrics registry (+ a trace instant with the cache delta)."""
+    cs = k.cache
+    for field, v in (("plan", cs.plan_hits), ("shard", cs.shard_hits),
+                     ("runner", cs.runner_hits), ("convert", cs.convert_hits),
+                     ("tuned", cs.tuned_hits)):
+        if v:
+            telemetry.METRICS.counter(f"lower.cache.{field}.hits", v)
+    for field, v in (("plan", cs.plan_misses), ("shard", cs.shard_misses),
+                     ("runner", cs.runner_misses),
+                     ("convert", cs.convert_misses),
+                     ("tuned", cs.tuned_misses)):
+        if v:
+            telemetry.METRICS.counter(f"lower.cache.{field}.misses", v)
+    telemetry.METRICS.counter("lower.count")
+    if k.cache.warm:
+        telemetry.METRICS.counter("lower.warm_count")
+    comm = k.comm
+    if comm.axes:
+        for name, ax in comm.axes.items():
+            telemetry.METRICS.counter(f"comm.axis.{name}.broadcast_bytes",
+                                      ax.broadcast_bytes)
+            telemetry.METRICS.counter(f"comm.axis.{name}.reduce_bytes",
+                                      ax.reduce_bytes)
+    else:
+        telemetry.METRICS.counter("comm.replicate_bytes",
+                                  comm.replicate_bytes)
+        telemetry.METRICS.counter("comm.reduce_bytes", comm.reduce_bytes)
+    telemetry.METRICS.counter("comm.network_bytes",
+                              comm.total_network_bytes())
+    telemetry.instant("lower.cache", **cs.as_dict())
 
 
 def _lower_impl(stmt, machine, schedule, distributions, jit, weights,
@@ -549,8 +640,13 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights,
     # ---- Step 1 & 2 of Fig. 9a: initial + derived partitions --------------
     # Memoized on (signature, strategy, operand fingerprints, weights): an
     # unchanged schedule over unchanged operands skips partitioning.
+    plan_span = telemetry.span("lower.plan", sig=sig, space=strat.space,
+                               pieces=pieces)
+    plan_span.__enter__()
     plan_key = _plan_cache_key(stmt, strat, weights, init_bounds)
     plans = _PLAN_CACHE.get(plan_key) if plan_key is not None else None
+    telemetry.instant("lower.plan.cache",
+                      hit=plans is not None, memoizable=plan_key is not None)
     if plans is not None:
         # Rebind each memoized plan to the CURRENT statement's tensor
         # objects: the cached plans pin the objects from the lower that
@@ -571,8 +667,11 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights,
             _PLAN_CACHE.put(plan_key, {
                 name: dataclasses.replace(p, tensor=None)
                 for name, p in plans.items()})
+    plan_span.__exit__(None, None, None)
 
     # ---- materialize -------------------------------------------------------
+    mat_span = telemetry.span("lower.materialize", sig=sig, pieces=pieces)
+    mat_span.__enter__()
     if (sig, strat.space) in _SELF_MATERIALIZING:
         # spadd3/nnz: the emitter consumes equal (or straggler-weighted)
         # chunks of the CONCATENATED stored-entry stream, packed by the
@@ -681,9 +780,12 @@ def _lower_impl(stmt, machine, schedule, distributions, jit, weights,
         comm.axes = axes
         comm.replicate_bytes = 0
         comm.reduce_bytes = 0
+    mat_span.__exit__(None, None, None)
 
     # ---- emit: pick leaf + build runner ------------------------------------
-    leaf_name, runner = _emit(stmt, strat, plans, shards, jit=jit)
+    with telemetry.span("lower.emit", sig=sig, space=strat.space) as esp:
+        leaf_name, runner = _emit(stmt, strat, plans, shards, jit=jit)
+        esp.set(leaf=leaf_name)
     return LoweredKernel(
         stmt=stmt, strategy=strat, machine=machine, plans=plans,
         shards=shards, runner=runner, comm=comm, leaf_name=leaf_name,
@@ -1110,7 +1212,12 @@ def _runner(jit, name, static, arrays, build):
     if not jit:
         return build()
     key = (name, tuple(static), avals_key(arrays))
-    return _RUNNER_CACHE.get_or_build(key, lambda: jax.jit(build()))
+
+    def _jit_build():
+        with telemetry.span("lower.jit", leaf=name):
+            return jax.jit(build())
+
+    return _RUNNER_CACHE.get_or_build(key, _jit_build)
 
 
 def _nnz_row_windows(B: ShardedTensor, n: int):

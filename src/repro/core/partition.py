@@ -28,6 +28,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import formats as fmt
+from ..runtime import telemetry
 from .cache import LRUCache
 from .tensor import Tensor, INT
 
@@ -691,7 +692,16 @@ def _cached_shards(key: Tuple, build: Callable[[], ShardedTensor],
     arrays are reused but the ``partition`` field is refreshed to the
     caller's plan object (the bounds are equal by key construction; the
     tensor reference inside may be an older content-identical object)."""
-    sh = SHARD_CACHE.get_or_build(key, build)
+    def _traced_build() -> ShardedTensor:
+        with telemetry.span("partition.materialize", kind=str(key[0]),
+                            fingerprint=str(key[1])[:64]) as sp:
+            sh = build()
+            sp.set(bytes=int(sum(np.asarray(a).nbytes
+                                 for a in sh.arrays.values())),
+                   pieces=sh.partition.pieces if sh.partition else None)
+            return sh
+
+    sh = SHARD_CACHE.get_or_build(key, _traced_build)
     if partition is not None:
         return dataclasses.replace(sh, partition=partition)
     return sh
@@ -1547,7 +1557,10 @@ def materialize_add_stream(tensors: Sequence[Tensor], pieces: int,
         ADD_STREAM_STATS["hits"] += 1
         return hit
     ADD_STREAM_STATS["misses"] += 1
-    sh = _materialize_add_stream_impl(tensors, pieces, weights)
+    with telemetry.span("partition.materialize", kind="add_stream") as sp:
+        sh = _materialize_add_stream_impl(tensors, pieces, weights)
+        sp.set(bytes=int(sum(np.asarray(a).nbytes
+                             for a in sh.arrays.values())))
     SHARD_CACHE.put(key, sh)
     return sh
 

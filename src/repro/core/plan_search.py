@@ -34,13 +34,14 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from . import formats as fmt
 from . import levels
 from . import lower as lower_mod
+from ..runtime import telemetry
 from .cache import LRUCache, _MISSING
 from .partition import (partition_by_bounds, tensor_fingerprint,
                         weights_fingerprint)
@@ -123,6 +124,11 @@ class SchedulePoint:
     replicated: bool = False         # 2.5-D: sparse operand replicated on z
     est_cost_s: float = float("inf")
     measured_s: Optional[float] = None
+    # Set on the WINNER only: every point the search scored, as plain
+    # dicts (label / est_cost_s / measured_s) in model-cost order — the
+    # provenance LoweredKernel.explain() renders, kept picklable so
+    # checkpointed tuned entries carry it.
+    candidates: Optional[List[Dict[str, Any]]] = None
 
     @property
     def label(self) -> str:
@@ -456,33 +462,47 @@ def search(stmt: Assignment, machine: Machine, *,
     """Enumerate, score, optionally measure, and return the winning
     point (None when nothing could be scored)."""
     cfg = config or DEFAULT_CONFIG
-    stats = structural_stats(stmt)
-    points = enumerate_points(stmt, machine, stats)
-    if not points:
-        return None
-    if stats is None:
-        # dense-only statement: nothing structural to rank — keep rows
-        return points[0]
-    for p in points:
-        try:
-            p.est_cost_s = estimate(stmt, p, stats, hw)
-        except Exception:                        # estimator gap: deprioritize
-            log.exception("plan_search: estimate failed for %s", p.label)
-            p.est_cost_s = float("inf")
-    points.sort(key=lambda p: p.est_cost_s)
-    if cfg.refine_top_k > 0 and len(points) > 1:
-        for p in points[:cfg.refine_top_k]:
+    with telemetry.span("plan_search.search",
+                        sig=stmt.signature()) as search_sp:
+        stats = structural_stats(stmt)
+        points = enumerate_points(stmt, machine, stats)
+        if not points:
+            return None
+        if stats is None:
+            # dense-only statement: nothing structural to rank — keep rows
+            return points[0]
+        for p in points:
             try:
-                p.measured_s = _measure(stmt, p, machine, weights, jit, cfg)
-            except Exception:
-                log.exception("plan_search: measurement failed for %s",
-                              p.label)
-                p.measured_s = float("inf")
-        measured = [p for p in points if p.measured_s is not None]
-        measured.sort(key=lambda p: p.measured_s)
-        winner = measured[0]
-    else:
-        winner = points[0]
+                p.est_cost_s = estimate(stmt, p, stats, hw)
+            except Exception:                    # estimator gap: deprioritize
+                log.exception("plan_search: estimate failed for %s", p.label)
+                p.est_cost_s = float("inf")
+        points.sort(key=lambda p: p.est_cost_s)
+        if cfg.refine_top_k > 0 and len(points) > 1:
+            for p in points[:cfg.refine_top_k]:
+                try:
+                    with telemetry.span("plan_search.measure",
+                                        candidate=p.label) as msp:
+                        p.measured_s = _measure(stmt, p, machine, weights,
+                                                jit, cfg)
+                        msp.set(measured_s=p.measured_s)
+                except Exception:
+                    log.exception("plan_search: measurement failed for %s",
+                                  p.label)
+                    p.measured_s = float("inf")
+            measured = [p for p in points if p.measured_s is not None]
+            measured.sort(key=lambda p: p.measured_s)
+            winner = measured[0]
+        else:
+            winner = points[0]
+        # Provenance: every scored candidate, model-cost order, on the
+        # winner (what LoweredKernel.explain() renders).
+        winner.candidates = [
+            {"label": p.label, "est_cost_s": p.est_cost_s,
+             "measured_s": (None if p.measured_s is None
+                            else float(p.measured_s))}
+            for p in points]
+        search_sp.set(winner=winner.label, n_candidates=len(points))
     log.info("plan_search: %s -> %s (est %.3es, measured %s)",
              lower_mod.expression_key(stmt.signature()), winner.label,
              winner.est_cost_s,
@@ -519,6 +539,7 @@ def resolve_auto(stmt: Assignment, machine: Machine, *, weights=None,
         # dry-run: no storage to score; default rows, uncached
         return lower_mod.default_row_schedule(stmt, machine), machine, None
     point = _TUNED_PLAN_CACHE.get(key, _MISSING)
+    telemetry.instant("plan_search.tuned_cache", hit=point is not _MISSING)
     if point is _MISSING:
         point = search(stmt, machine, weights=weights, jit=jit,
                        config=config)

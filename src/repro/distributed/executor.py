@@ -11,7 +11,9 @@ loop structure is coherent without real hardware.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 from typing import Callable, Dict
 
 import jax
@@ -25,6 +27,7 @@ from ..core.cache import LRUCache, avals_key
 from ..core.lower import LoweredKernel
 from ..core.tdn import Machine
 from ..kernels import ref as K
+from ..runtime import telemetry
 from ..kernels.layout import (pack_mat_inner_blocks, pack_mat_row_blocks,
                               pack_rowwindow_blocks, pack_vec_blocks)
 from .mesh import machine_to_mesh
@@ -55,7 +58,12 @@ def _spmd_runner(name, mesh, axis, static, arrays, build):
     """Return the jitted shard_map executable for a builder, reusing a
     cached one when (builder, mesh, axis, statics, shard avals) match."""
     key = (name, _mesh_key(mesh), axis, tuple(static), avals_key(arrays))
-    return _SPMD_RUN_CACHE.get_or_build(key, lambda: jax.jit(build()))
+
+    def _jit_build():
+        with telemetry.span("lower.jit", leaf=name, spmd=True):
+            return jax.jit(build())
+
+    return _SPMD_RUN_CACHE.get_or_build(key, _jit_build)
 
 
 def _assemble_vals(total, out_vals, arrays, vals_bounds):
@@ -913,4 +921,180 @@ def to_spmd(kernel: LoweredKernel, mesh: Mesh = None, axis: str = "x"):
         raise NotImplementedError(
             f"no shard_map builder for leaf {kernel.leaf_name}; "
             "the vmap simulation backend covers it")
-    return builder(kernel, mesh, axis=axis)
+    with telemetry.span("execute.spmd.build", leaf=kernel.leaf_name):
+        return builder(kernel, mesh, axis=axis)
+
+
+# ---------------------------------------------------------------------------
+# Per-piece leaf profiling (telemetry, ISSUE 9): run each color's leaf
+# kernel ALONE and wall-time it through block_until_ready. The emitters
+# vmap all pieces into one launch, so a straggler piece is invisible in
+# aggregate wall time; the per-piece profile is the skew histogram whose
+# flags feed the existing lower(weights=) straggler re-plan path.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PieceProfile:
+    """Per-piece leaf wall times for one lowered kernel."""
+
+    leaf_name: str
+    seconds: np.ndarray               # (pieces,) best-of-iters per piece
+
+    def skew(self) -> float:
+        """max/mean piece time — 1.0 is perfectly balanced."""
+        m = float(self.seconds.mean())
+        return float(self.seconds.max()) / m if m > 0 else 1.0
+
+    def stragglers(self, threshold: float = 1.5):
+        """Piece ids slower than ``threshold``× the mean."""
+        m = float(self.seconds.mean())
+        if m <= 0:
+            return []
+        return [int(p) for p in np.nonzero(self.seconds > threshold * m)[0]]
+
+    def replan_weights(self) -> np.ndarray:
+        """Mean-normalized inverse-time weights for ``lower(weights=)`` /
+        ``relower(weights=)`` — a faster piece gets proportionally more
+        non-zeros, the same convention as StragglerMitigator.weights."""
+        inv = 1.0 / np.maximum(self.seconds, 1e-12)
+        return inv / inv.mean()
+
+    def as_dict(self):
+        return {"leaf": self.leaf_name,
+                "seconds": [float(s) for s in self.seconds],
+                "skew": self.skew()}
+
+
+def _sparse_and_dense(kernel):
+    accs = kernel.stmt.rhs.accesses()
+    B = kernel.shards[accs[0].tensor.name]
+    C = kernel.shards[accs[1].tensor.name]
+    return B, C
+
+
+def _pieces_spmv_rows(kernel):
+    B, c = _sparse_and_dense(kernel)
+    a = B.arrays
+    cv = jnp.asarray(c.arrays["vals"])
+    pos, crd, vals = (jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
+                      jnp.asarray(a["vals"]))
+    return K.leaf_spmv_rows, [(pos[p], crd[p], vals[p], cv)
+                              for p in range(pos.shape[0])]
+
+
+def _pieces_spmm_rows(kernel):
+    B, C = _sparse_and_dense(kernel)
+    a = B.arrays
+    Cv = jnp.asarray(C.arrays["vals"])
+    pos, crd, vals = (jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
+                      jnp.asarray(a["vals"]))
+    return K.leaf_spmm_rows, [(pos[p], crd[p], vals[p], Cv)
+                              for p in range(pos.shape[0])]
+
+
+def _pieces_spmv_nnz(kernel):
+    from ..core.lower import _nnz_row_windows
+    B, c = _sparse_and_dense(kernel)
+    n = kernel.stmt.lhs.tensor.shape[0]
+    row_start, _, max_rows = _nnz_row_windows(B, n)
+    a = B.arrays
+    rl = jnp.clip(jnp.asarray(a["dim0"])
+                  - jnp.asarray(row_start)[:, None], 0, max_rows - 1)
+    cols, vals = jnp.asarray(a["dim1"]), jnp.asarray(a["vals"])
+    cv = jnp.asarray(c.arrays["vals"])
+
+    def leaf(r, cc, v, cvec):
+        return K.leaf_spmv_nnz(r, cc, v, cvec, max_rows)
+
+    return leaf, [(rl[p], cols[p], vals[p], cv)
+                  for p in range(rl.shape[0])]
+
+
+def _pieces_spmm_nnz(kernel):
+    from ..core.lower import _nnz_row_windows
+    B, C = _sparse_and_dense(kernel)
+    row_start, _, max_rows = _nnz_row_windows(
+        B, kernel.stmt.lhs.tensor.shape[0])
+    a = B.arrays
+    rl = jnp.clip(jnp.asarray(a["dim0"])
+                  - jnp.asarray(row_start)[:, None], 0, max_rows - 1)
+    cols, vals = jnp.asarray(a["dim1"]), jnp.asarray(a["vals"])
+    Cv = jnp.asarray(C.arrays["vals"])
+
+    def leaf(r, cc, v, Cm):
+        return K.leaf_spmm_nnz(r, cc, v, Cm, max_rows)
+
+    return leaf, [(rl[p], cols[p], vals[p], Cv)
+                  for p in range(rl.shape[0])]
+
+
+def _pieces_spmv_grid_rows(kernel):
+    B, c = _sparse_and_dense(kernel)
+    a = B.arrays
+    Q = int(B.meta["Q"])
+    cw = jnp.asarray(c.arrays["vals"])          # (Q, max_kw)
+    pos, crd, vals = (jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
+                      jnp.asarray(a["vals"]))
+    return K.leaf_spmv_rows, [(pos[p], crd[p], vals[p], cw[p % Q])
+                              for p in range(pos.shape[0])]
+
+
+def _pieces_spmm_grid_rows(kernel):
+    B, C = _sparse_and_dense(kernel)
+    a = B.arrays
+    Q = int(B.meta["Q"])
+    Cw = jnp.asarray(C.arrays["vals"])          # (Q, max_kw, J)
+    pos, crd, vals = (jnp.asarray(a["pos1"]), jnp.asarray(a["crd1"]),
+                      jnp.asarray(a["vals"]))
+    return K.leaf_spmm_rows, [(pos[p], crd[p], vals[p], Cw[p % Q])
+                              for p in range(pos.shape[0])]
+
+
+#: leaf name -> (kernel) -> (leaf_fn, [per-piece arg tuples]). Every
+#: piece's args share shapes, so the jitted leaf compiles once.
+PIECE_PROFILERS: Dict[str, Callable] = {
+    "spmv_rows": _pieces_spmv_rows,
+    "spmm_rows": _pieces_spmm_rows,
+    "spmv_nnz": _pieces_spmv_nnz,
+    "spmm_nnz": _pieces_spmm_nnz,
+    "spmv_grid_rows": _pieces_spmv_grid_rows,
+    "spmm_grid_rows": _pieces_spmm_grid_rows,
+}
+
+
+def profile_pieces(kernel: LoweredKernel, iters: int = 3,
+                   warmup: int = 1) -> PieceProfile:
+    """Wall-time every piece's leaf kernel individually (best of
+    ``iters`` after ``warmup``, synchronized with block_until_ready).
+
+    Records one ``execute.piece`` span + an ``executor.piece_seconds``
+    histogram observation per piece, and the profile's skew as the
+    ``executor.piece_skew`` gauge — the telemetry surface the serving
+    path's straggler re-plans read."""
+    slicer = PIECE_PROFILERS.get(kernel.leaf_name)
+    if slicer is None:
+        raise NotImplementedError(
+            f"no per-piece profiler for leaf {kernel.leaf_name}; "
+            f"supported: {sorted(PIECE_PROFILERS)}")
+    leaf, piece_args = slicer(kernel)
+    jleaf = jax.jit(leaf)
+    n = len(piece_args)
+    secs = np.full(n, np.inf)
+    for args in piece_args:                      # compile + warm every shape
+        for _ in range(max(warmup, 1)):
+            jax.block_until_ready(jleaf(*args))
+    for _ in range(max(iters, 1)):
+        for p, args in enumerate(piece_args):
+            with telemetry.span("execute.piece", piece=p,
+                                leaf=kernel.leaf_name) as sp:
+                t0 = time.perf_counter()
+                jax.block_until_ready(jleaf(*args))
+                dt = time.perf_counter() - t0
+                sp.set(seconds=dt)
+            secs[p] = min(secs[p], dt)
+    for s in secs:
+        telemetry.METRICS.observe("executor.piece_seconds", float(s))
+    prof = PieceProfile(leaf_name=kernel.leaf_name, seconds=secs)
+    telemetry.METRICS.gauge("executor.piece_skew", prof.skew())
+    return prof

@@ -1,4 +1,7 @@
-"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table."""
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline table, and
+render telemetry snapshots (:func:`telemetry_table`) — the markdown view
+of ``repro.runtime.telemetry.METRICS.snapshot()`` / the ``telemetry``
+block that ``benchmarks/run.py --json`` embeds in BENCH artifacts."""
 from __future__ import annotations
 
 import json
@@ -78,8 +81,72 @@ def summary(mesh="pod256"):
     return out
 
 
+def _fmt_bytes(n: float) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f}{unit}" if unit != "B" else f"{int(n)}B"
+        n /= 1024
+    return f"{n:.1f}GiB"
+
+
+def telemetry_table(snapshot: dict) -> str:
+    """Markdown render of a ``MetricsRegistry.snapshot()`` (or the
+    ``telemetry`` block of a ``BENCH_<suite>.json``): cache hit rates,
+    communication byte counters, histogram summaries, gauges."""
+    out = []
+    caches = snapshot.get("caches") or {}
+    if caches:
+        out += ["### Caches", "",
+                "| cache | hits | misses | hit rate |", "|---|---|---|---|"]
+        for name in sorted(caches):
+            c = caches[name]
+            rate = ("-" if c.get("hit_rate") is None
+                    else f"{c['hit_rate']:.1%}")
+            out.append(f"| {name} | {c['hits']} | {c['misses']} | {rate} |")
+        out.append("")
+    counters = snapshot.get("counters") or {}
+    comm = {k: v for k, v in counters.items() if k.startswith("comm.")}
+    other = {k: v for k, v in counters.items() if not k.startswith("comm.")}
+    if comm:
+        out += ["### Communication (modeled bytes, cumulative)", "",
+                "| counter | bytes |", "|---|---|"]
+        for k in sorted(comm):
+            out.append(f"| {k} | {_fmt_bytes(comm[k])} |")
+        out.append("")
+    if other:
+        out += ["### Counters", "", "| counter | value |", "|---|---|"]
+        for k in sorted(other):
+            v = other[k]
+            out.append(f"| {k} | {v:g} |")
+        out.append("")
+    hists = snapshot.get("histograms") or {}
+    if hists:
+        out += ["### Histograms", "",
+                "| name | count | mean | p50 | p90 | max |",
+                "|---|---|---|---|---|---|"]
+        for k in sorted(hists):
+            h = hists[k]
+            out.append(
+                f"| {k} | {h['count']} | {h['mean']:.3e} | {h['p50']:.3e} "
+                f"| {h['p90']:.3e} | {h['max']:.3e} |")
+        out.append("")
+    gauges = snapshot.get("gauges") or {}
+    if gauges:
+        out += ["### Gauges", "", "| gauge | value |", "|---|---|"]
+        for k in sorted(gauges):
+            out.append(f"| {k} | {gauges[k]:.4g} |")
+        out.append("")
+    return "\n".join(out) if out else "(empty telemetry snapshot)"
+
+
 if __name__ == "__main__":
     import sys
+    if len(sys.argv) > 2 and sys.argv[1] == "--telemetry":
+        # render the telemetry block of a BENCH json (or a bare snapshot)
+        payload = json.loads(Path(sys.argv[2]).read_text())
+        print(telemetry_table(payload.get("telemetry", payload)))
+        raise SystemExit(0)
     mesh = sys.argv[1] if len(sys.argv) > 1 else "pod256"
     print(table(mesh))
     print()

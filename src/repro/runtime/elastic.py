@@ -73,7 +73,16 @@ class RecoveryReport:
     """What the elastic loop observed and paid: fault trace, recovery wall
     time split (restore / re-plan / re-jit), and the shard-reuse fraction
     of the post-loss re-lower (the elastic claim: ≥ 50% of shard-cache
-    lookups hit on a migration-style P→P−1)."""
+    lookups hit on a migration-style P→P−1).
+
+    The time split is DERIVED FROM THE TRACE: every recovery phase runs
+    inside a ``recovery.restore`` / ``recovery.replan`` / ``recovery.rejit``
+    span (recorded on a loop-local tracer and, when enabled, the global
+    :data:`repro.runtime.telemetry.TRACER`), and the report sums span
+    durations per phase at the end. Phases never nest, so
+    ``restore_s + replan_s + rejit_s == recovery_s`` exactly — the
+    previous hand-timed splits could double-count a straggler re-plan
+    that landed in the same loop iteration as a device-loss re-plan."""
 
     steps: int = 0
     restarts: int = 0
@@ -84,6 +93,7 @@ class RecoveryReport:
     restore_s: float = 0.0
     replan_s: float = 0.0
     rejit_s: float = 0.0
+    recovery_s: float = 0.0          # total recovery wall time (all phases)
     shard_reuse: float = 0.0
     initial_pieces: int = 0
     final_pieces: int = 0
@@ -123,10 +133,26 @@ def run_with_recovery(stmt, machine, steps: int, *, ckpt_dir: str,
 
     Returns ``(state, report)``.
     """
+    import contextlib
+
     from ..core.lower import lower, relower
     from ..distributed.mesh import shrink_machine
+    from . import telemetry
     from .checkpoint import SparseCheckpoint
     from .fault import DeviceLoss, RestartPolicy, StepWatchdog
+
+    # Recovery phases are spans on a loop-local always-on tracer (the
+    # report is derived from it) AND on the global tracer when the user
+    # has tracing enabled.
+    trace = telemetry.Tracer(enabled=True)
+
+    @contextlib.contextmanager
+    def _phase(name: str, **attrs):
+        with contextlib.ExitStack() as st:
+            st.enter_context(trace.span(f"recovery.{name}", **attrs))
+            st.enter_context(
+                telemetry.TRACER.span(f"recovery.{name}", **attrs))
+            yield
 
     policy = policy if policy is not None else RestartPolicy(
         max_restarts=8, backoff_s=0.0, seed=0)
@@ -155,20 +181,22 @@ def run_with_recovery(stmt, machine, steps: int, *, ckpt_dir: str,
             bad = ck.stale_operands(tensors)
             if bad:
                 report.faults.append("corrupt:" + ",".join(bad))
-                t0 = time.perf_counter()
-                ck.restore(tensors, {"state": ctx["state"]})
-                report.restore_s += time.perf_counter() - t0
+                with _phase("restore", kind="corruption",
+                            tensors=",".join(bad)):
+                    ck.restore(tensors, {"state": ctx["state"]})
                 report.healed.extend(bad)
-                t1 = time.perf_counter()
-                ctx["kernel"] = relower(ctx["kernel"], ctx["machine"],
-                                        jit=jit)
-                report.replan_s += time.perf_counter() - t1
+                with _phase("replan", kind="corruption"):
+                    ctx["kernel"] = relower(ctx["kernel"], ctx["machine"],
+                                            jit=jit)
         watchdog.start()
-        t0 = time.perf_counter()
-        out = np.asarray(ctx["kernel"].run())
         if ctx["fresh"]:
-            report.rejit_s += time.perf_counter() - t0
+            # first run after a re-plan: the leaf re-compile (if the
+            # runner cache missed) dominates this call
+            with _phase("rejit", step=t):
+                out = np.asarray(ctx["kernel"].run())
             ctx["fresh"] = False
+        else:
+            out = np.asarray(ctx["kernel"].run())
         if slowdown:
             time.sleep(slowdown)
         flagged = watchdog.stop()
@@ -176,10 +204,11 @@ def run_with_recovery(stmt, machine, steps: int, *, ckpt_dir: str,
                 and injector.slow_piece is not None):
             if (mitigator.report_slow(injector.slow_piece)
                     and ctx["kernel"].strategy.space == "nnz"):
-                t1 = time.perf_counter()
-                ctx["kernel"] = relower(ctx["kernel"], ctx["machine"],
-                                        weights=mitigator.weights, jit=jit)
-                report.replan_s += time.perf_counter() - t1
+                with _phase("replan", kind="straggler",
+                            piece=injector.slow_piece):
+                    ctx["kernel"] = relower(ctx["kernel"], ctx["machine"],
+                                            weights=mitigator.weights,
+                                            jit=jit)
                 report.replans += 1
         nxt = t + 1
         ctx["state"] = ctx["state"] + nxt * out
@@ -197,27 +226,38 @@ def run_with_recovery(stmt, machine, steps: int, *, ckpt_dir: str,
                 raise
 
     def on_restart(n: int) -> None:
-        t0 = time.perf_counter()
-        step, extra, info = ck.restore(tensors, {"state": ctx["state"]})
-        report.restore_s += time.perf_counter() - t0
+        with _phase("restore", kind="restart", restart=n):
+            step, extra, info = ck.restore(tensors, {"state": ctx["state"]})
         ctx["state"] = np.asarray(extra["state"])
         ctx["next"] = int(step)
         report.restored_step = int(step)
         report.healed.extend(info["restored"])
         dead, ctx["dead"] = ctx["dead"], None
-        t1 = time.perf_counter()
         if dead is not None:
-            new_machine = shrink_machine(ctx["machine"])
-            ctx["kernel"] = relower(ctx["kernel"], new_machine, dead=dead,
-                                    jit=jit)
+            with _phase("replan", kind="device_loss", piece=dead):
+                new_machine = shrink_machine(ctx["machine"])
+                ctx["kernel"] = relower(ctx["kernel"], new_machine,
+                                        dead=dead, jit=jit)
             ctx["machine"] = new_machine
             report.shard_reuse = ctx["kernel"].cache.shard_reuse
         else:
-            ctx["kernel"] = relower(ctx["kernel"], ctx["machine"], jit=jit)
-        report.replan_s += time.perf_counter() - t1
+            with _phase("replan", kind="restart"):
+                ctx["kernel"] = relower(ctx["kernel"], ctx["machine"],
+                                        jit=jit)
         ctx["fresh"] = True
 
     report.restarts = policy.run_with_restarts(step_loop, on_restart,
                                                sleep=lambda s: None)
     report.final_pieces = ctx["kernel"].strategy.pieces
+
+    # Derive the time split from the trace: per-phase span duration sums.
+    # Phases never nest, so the three splits sum exactly to recovery_s.
+    durs: Dict[str, float] = {}
+    for ev in trace.spans():
+        if ev["dur_us"] is not None:
+            durs[ev["name"]] = durs.get(ev["name"], 0.0) + ev["dur_us"] / 1e6
+    report.restore_s = durs.get("recovery.restore", 0.0)
+    report.replan_s = durs.get("recovery.replan", 0.0)
+    report.rejit_s = durs.get("recovery.rejit", 0.0)
+    report.recovery_s = sum(durs.values())
     return ctx["state"], report

@@ -51,6 +51,7 @@ from repro.core.lower import (default_grid3_schedule,
                               default_replicated_schedule,
                               default_row_schedule, lower)
 from repro.core.tensor import Tensor
+from repro.runtime import telemetry
 
 # cell_id -> {"status": "direct"|"fallback", "fallbacks": [...]}
 CENSUS = {}
@@ -183,13 +184,16 @@ def _check_cell(expr, fmt_name, fmt_ctor, strategy, pieces, empty=False,
         machine = rc.Machine(("x", pieces))
         sched = (default_row_schedule(stmt, machine) if strategy == "rows"
                  else default_nnz_schedule(stmt, machine))
-    with caplog.at_level(logging.WARNING, logger="repro.lower"):
+    with caplog.at_level(logging.WARNING, logger="repro.core.lower"):
         kernel = lower(stmt, machine, schedule=sched)
     result = kernel.run()
     got = result.to_dense() if isinstance(result, Tensor) else result
     expected = interpret(stmt)     # the oracle (pinned by golden tests)
     np.testing.assert_allclose(got, expected, atol=1e-3,
                                err_msg=f"cell {kernel.cell_id()}")
+    # byte-ledger verification (telemetry): the statement-level model must
+    # reproduce the CommStats ledger the lowering recorded, per axis.
+    telemetry.verify_byte_ledger(kernel)
     # census + contract: a fallback cell must have logged its conversion.
     # Empty-operand cells are distinct matrix entries, not re-checks.
     cid = kernel.cell_id() + ("~empty" if empty else "")
