@@ -25,6 +25,10 @@ Prints ``name,us_per_call,derived`` CSV rows (paper §VI mapping):
   bench_fault         — elastic recovery: cold P−1 re-lower vs shard-
                         reusing relower(dead=…), plus the recovery wall
                         time split restore / re-plan / re-jit
+  bench_serving       — serving fast path: run_many batching vs a
+                        per-request loop, p50/p99 latency vs SLO through
+                        SparseKernelServer, and double-buffered
+                        comm/compute overlap efficiency
 
 Scale flag: ``--quick`` shrinks inputs for CI-speed runs. ``--json`` also
 writes a machine-readable ``BENCH_<suite>.json`` per suite to
@@ -59,7 +63,8 @@ def main() -> None:
     from . import (bench_autotune, bench_bcsr, bench_fault, bench_levels,
                    bench_load_balance, bench_mesh2d, bench_mismatch,
                    bench_pallas_kernels, bench_replan, bench_replication,
-                   bench_spadd3, bench_vs_interp, bench_weak_scaling)
+                   bench_serving, bench_spadd3, bench_vs_interp,
+                   bench_weak_scaling)
     from .common import drain_results
 
     print("name,us_per_call,derived")
@@ -97,6 +102,9 @@ def main() -> None:
             dims3=(96, 64, 48) if args.quick else (256, 128, 96),
             L=8 if args.quick else 16),
         "fault": lambda: bench_fault.run(
+            *((1024, 1024) if args.quick else (4096, 4096)),
+            j=32 if args.quick else 64),
+        "serving": lambda: bench_serving.run(
             *((1024, 1024) if args.quick else (4096, 4096)),
             j=32 if args.quick else 64),
     }

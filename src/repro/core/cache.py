@@ -26,6 +26,26 @@ def avals_key(arrays: Sequence) -> Tuple:
     return tuple((tuple(a.shape), str(a.dtype)) for a in arrays)
 
 
+#: Default batch-size buckets for the serving fast path. Every incoming
+#: batch pads up to the smallest bucket >= its size, so the compiled-runner
+#: caches (keyed on avals, hence on the padded batch width) see at most
+#: ``len(BATCH_BUCKETS)`` distinct SpMM widths no matter how request counts
+#: fluctuate — bounded recompilation under mixed traffic.
+BATCH_BUCKETS: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+
+def batch_bucket(n: int, buckets: Sequence[int] = BATCH_BUCKETS) -> int:
+    """Smallest bucket >= ``n`` (next power of two beyond the table, so an
+    oversized burst still lands on one of O(log n) shapes)."""
+    if n < 1:
+        raise ValueError(f"batch size must be >= 1, got {n}")
+    for b in sorted(buckets):
+        if n <= b:
+            return int(b)
+    b = 1 << (int(n) - 1).bit_length()
+    return int(b)
+
+
 # Private miss sentinel: ``None`` is a legitimate cached value (e.g. the
 # tuned-plan cache recording "no feasible candidate"), so misses must be
 # distinguishable from stored Nones.

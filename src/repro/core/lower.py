@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cache import LRUCache, avals_key
+from .cache import BATCH_BUCKETS, LRUCache, avals_key, batch_bucket
 from . import formats as fmt
 from . import levels
 from .partition import (CONVERT_CACHE_STATS, SHARD_CACHE_STATS,
@@ -43,7 +43,8 @@ from .partition import (CONVERT_CACHE_STATS, SHARD_CACHE_STATS,
                         elastic_row_bounds, fingerprint_memo,
                         materialize_add_stream, materialize_bcsr_nnz,
                         materialize_bcsr_rows, materialize_coo_nnz,
-                        materialize_csr_rows, materialize_dense_rows,
+                        materialize_csr_rows, materialize_dense_cols,
+                        materialize_dense_grid, materialize_dense_rows,
                         materialize_dense_rows_pieces, materialize_pieces,
                         materialize_replicated,
                         materialize_replicated_elastic, partition_by_bounds,
@@ -53,7 +54,7 @@ from .partition import (CONVERT_CACHE_STATS, SHARD_CACHE_STATS,
 from .schedule import DistStrategy, Schedule
 from .tdn import Distribution, Machine
 from .tensor import Tensor
-from .tin import Assignment, IndexVar
+from .tin import Access, Assignment, IndexVar, Mul
 
 log = logging.getLogger(__name__)
 from ..runtime import telemetry
@@ -100,13 +101,20 @@ class CommStats:
     (paper §II-D final paragraph — legal but costed).
     ``axes``: per-machine-axis breakdown for grid (multi-axis) schedules —
     bytes live EITHER in the flat fields (1-D strategies) or in ``axes``
-    (grid strategies), never both, so totals never double count."""
+    (grid strategies), never both, so totals never double count.
+    ``overlap_total_bytes`` / ``overlap_hidden_bytes``: set by the
+    double-buffered executor (distributed.executor.run_overlapped) — how
+    much of the shard-transfer traffic was in flight while a leaf kernel
+    ran. Attribution only: these RE-DESCRIBE bytes already counted above,
+    so they never enter ``total_network_bytes``."""
 
     pieces: int = 1
     replicate_bytes: int = 0
     reduce_bytes: int = 0
     redistribute_bytes: int = 0
     axes: Dict[str, AxisComm] = dataclasses.field(default_factory=dict)
+    overlap_total_bytes: int = 0
+    overlap_hidden_bytes: int = 0
 
     def total_network_bytes(self) -> int:
         # all-gather of b bytes to P nodes moves b*(P-1); reductions likewise
@@ -125,6 +133,9 @@ class CommStats:
         }
         if self.axes:
             out["axes"] = {n: a.as_dict() for n, a in self.axes.items()}
+        if self.overlap_total_bytes:
+            out["overlap_total_bytes"] = self.overlap_total_bytes
+            out["overlap_hidden_bytes"] = self.overlap_hidden_bytes
         return out
 
 
@@ -1874,3 +1885,237 @@ _EMITTERS = {
     ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "universe"): _emit_spmttkrp_rows,
     ("d2(i,l)=s3(i,j,k)*d2(j,l)*d2(k,l)", "nnz"): _emit_spmttkrp_nnz,
 }
+
+
+# ---------------------------------------------------------------------------
+# Serving fast path (ISSUE 10): request batching over a lowered kernel.
+#
+# A request queue of B right-hand-side vectors against one frozen sparse
+# operand is ONE SpMM: stacking the vectors as columns promotes SpMV to
+# SpMM (or widens an SpMM), so B requests share a single plan, a single
+# shard materialization of the sparse operand, and a single jitted runner.
+# Batch sizes are padded up to a bucket (cache.batch_bucket) so the
+# runner caches see at most len(buckets) distinct widths under mixed
+# traffic. The per-call work is only: pack the batch columns, re-pack the
+# dense RHS shard (rebind_dense — no plan, no fingerprinting, runner-cache
+# hit), execute, slice the per-request outputs back out.
+# ---------------------------------------------------------------------------
+
+def _materialize_dense_operand(t: Tensor, plan: TensorPartition, pieces: int,
+                               cache: bool = False) -> ShardedTensor:
+    """Re-pack ONE all-dense operand under its existing partition geometry
+    — the same branch structure the 1-D and grid lowering paths use, minus
+    every sparse case (rebinds only ever swap dense request data)."""
+    if plan.replicated:
+        return materialize_replicated(t, pieces, cache=cache)
+    if plan.grid is not None:
+        return materialize_dense_grid(t, plan.levels[0].coord_bounds,
+                                      plan.levels[1].coord_bounds,
+                                      cache=cache)
+    if plan.root_coord_bounds is None:
+        return materialize_dense_cols(t, plan.levels[1].coord_bounds,
+                                      cache=cache)
+    return materialize_dense_rows(t, plan.root_coord_bounds, cache=cache)
+
+
+def rebind_dense(kernel: LoweredKernel, mapping: Dict[str, Tensor], *,
+                 jit: bool = True, cache: bool = False) -> LoweredKernel:
+    """A copy of ``kernel`` with dense operands swapped by name.
+
+    The partition geometry is kept (bounds depend only on shapes and the
+    sparse pattern, both unchanged), so the swap re-packs just the named
+    operands' shards and re-emits — a pure runner-cache hit when the new
+    values have the old shapes. This is the serving hot path: no plan
+    recompute, no content fingerprinting of any operand. ``comm`` is
+    carried over unchanged (the model depends on shapes, not values).
+
+    Only all-dense operands can rebind; a sparse swap changes the
+    partition itself and must go through ``lower()`` / ``relower()``."""
+    strat = kernel.strategy
+    stmt = kernel.stmt.with_tensors(mapping)
+    plans = dict(kernel.plans)
+    shards = dict(kernel.shards)
+    for name, t in mapping.items():
+        old = plans.get(name)
+        if old is None:
+            raise KeyError(f"operand {name!r} not in kernel plans "
+                           f"({sorted(plans)})")
+        if (old.tensor is not None and old.tensor.format.is_sparse) \
+                or t.format.is_sparse:
+            raise ValueError(
+                f"rebind_dense only swaps all-dense operands; {name!r} is "
+                "sparse — re-plan through lower()/relower() instead")
+        plans[name] = dataclasses.replace(old, tensor=t)
+        if name in shards:
+            shards[name] = _materialize_dense_operand(
+                t, plans[name], strat.pieces, cache=cache)
+    if strat.is_grid and strat.space == "universe":
+        from . import grid as grid_mod
+        gp = grid_mod.compute_grid_plan(stmt, strat)
+        leaf_name, runner = grid_mod._emit_grid(stmt, strat, gp, plans,
+                                                shards, jit=jit)
+    else:
+        leaf_name, runner = _emit(stmt, strat, plans, shards, jit=jit)
+    return dataclasses.replace(kernel, stmt=stmt, plans=plans,
+                               shards=shards, runner=runner,
+                               leaf_name=leaf_name)
+
+
+#: Batchable signatures: per-request RHS shape, promoted signature.
+_BATCHABLE = {
+    "d1(i)=s2(i,j)*d1(j)": "spmv",        # requests are (m,) vectors
+    "d2(i,j)=s2(i,k)*d2(k,j)": "spmm",    # requests are (m, jw) panels
+}
+
+
+@dataclasses.dataclass
+class _BucketEntry:
+    kernel: LoweredKernel
+    rhs_name: str
+    out_name: str
+    bucket: int
+    jw: int                      # per-request column width (1 for spmv)
+    m: int                       # RHS rows
+
+
+class BatchedKernel:
+    """Bucketized request batching over one scheduled sparse statement.
+
+    ``run_many([x_0, ..., x_{B-1}])`` stacks the request vectors (or
+    fixed-width panels) as columns of one dense RHS, pads the batch up to
+    the smallest registered bucket, executes the per-bucket lowered SpMM
+    once, and slices per-request outputs back out. Each bucket lowers
+    lazily exactly once — one plan, one set of sparse shards, one jitted
+    runner — and later batches of any size in that bucket reuse all three
+    via :func:`rebind_dense`.
+
+    ``schedule`` may be a Schedule, None, the string ``"auto"``, or a
+    callable ``(stmt, machine) -> Schedule`` applied to the PROMOTED
+    statement (e.g. ``default_nnz_schedule`` / ``default_grid_schedule``).
+    ``mesh`` routes execution through the shard_map SPMD executor instead
+    of the vmap simulation (bounded identically: _SPMD_RUN_CACHE keys on
+    the bucket-padded avals).
+    """
+
+    def __init__(self, stmt: Assignment, machine: Machine,
+                 schedule: Any = None, *, buckets=BATCH_BUCKETS,
+                 jit: bool = True, mesh: Any = None):
+        sig = stmt.signature()
+        if sig not in _BATCHABLE:
+            raise NotImplementedError(
+                f"lower_batched supports {sorted(_BATCHABLE)}; got {sig}")
+        self.stmt = stmt
+        self.machine = machine
+        self.schedule = schedule
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self.jit = jit
+        self.mesh = mesh
+        self.kind = _BATCHABLE[sig]
+        self._entries: Dict[int, _BucketEntry] = {}
+
+    # -- construction ------------------------------------------------------
+    def _promoted_stmt(self, bucket: int) -> Tuple[Assignment, str, str, int]:
+        stmt = self.stmt
+        sparse_acc = stmt.rhs.accesses()[0]
+        rhs_acc = stmt.rhs.accesses()[-1]
+        rhs_name = rhs_acc.tensor.name
+        out_name = stmt.lhs.tensor.name
+        n = stmt.lhs.tensor.shape[0]
+        m = rhs_acc.tensor.shape[0]
+        if self.kind == "spmv":
+            # promote a(i) = B(i,j) * c(j)  →  A(i,j) = B(i,k) * C(k,j):
+            # each request vector is one column of C. Index vars are
+            # rebuilt with the canonical SpMM names (the emitter table and
+            # default schedules key on them); a caller-tuned schedule is
+            # passed as a callable over the promoted statement.
+            i, k, j = IndexVar("i"), IndexVar("k"), IndexVar("j")
+            out = Tensor.zeros_dense(out_name, (n, bucket))
+            X = Tensor.from_dense(rhs_name,
+                                  np.zeros((m, bucket), np.float32))
+            bstmt = Assignment(
+                Access(out, (i, j)),
+                Mul(Access(sparse_acc.tensor, (i, k)),
+                    Access(X, (k, j))))
+            return bstmt, rhs_name, out_name, 1
+        # spmm: widen the dense RHS to bucket panels of the original width
+        jw = stmt.lhs.tensor.shape[1]
+        out = Tensor.zeros_dense(out_name, (n, bucket * jw))
+        X = Tensor.from_dense(rhs_name,
+                              np.zeros((m, bucket * jw), np.float32))
+        bstmt = stmt.with_tensors({out_name: out, rhs_name: X})
+        return bstmt, rhs_name, out_name, jw
+
+    def _entry(self, bucket: int) -> _BucketEntry:
+        e = self._entries.get(bucket)
+        if e is not None:
+            return e
+        bstmt, rhs_name, out_name, jw = self._promoted_stmt(bucket)
+        sched = self.schedule
+        if callable(sched) and not isinstance(sched, Schedule):
+            sched = sched(bstmt, self.machine)
+        with telemetry.span("serve.batch.lower", bucket=bucket):
+            kernel = lower(bstmt, self.machine, schedule=sched, jit=self.jit)
+        telemetry.METRICS.counter("serve.buckets_lowered")
+        e = _BucketEntry(kernel=kernel, rhs_name=rhs_name,
+                         out_name=out_name, bucket=bucket, jw=jw,
+                         m=bstmt.rhs.accesses()[-1].tensor.shape[0])
+        self._entries[bucket] = e
+        return e
+
+    def warm(self, batch: int) -> "BatchedKernel":
+        """Pre-lower the bucket that will serve batches of size ``batch``."""
+        self._entry(batch_bucket(batch, self.buckets))
+        return self
+
+    # -- execution ---------------------------------------------------------
+    def run_many(self, rhs_batch) -> List[np.ndarray]:
+        """Execute one batched step over ``len(rhs_batch)`` requests and
+        return the per-request outputs ((n,) each for spmv requests,
+        (n, jw) for spmm panels), bit-for-bit equal to running the
+        original statement once per request."""
+        B = len(rhs_batch)
+        bucket = batch_bucket(B, self.buckets)
+        with telemetry.span("serve.batch", requests=B, bucket=bucket) as sp:
+            e = self._entry(bucket)
+            buf = np.zeros((e.m, bucket * e.jw), np.float32)
+            for r, x in enumerate(rhs_batch):
+                x = np.asarray(x, np.float32)
+                if e.jw == 1:
+                    buf[:, r] = x.reshape(e.m)
+                else:
+                    buf[:, r * e.jw:(r + 1) * e.jw] = x.reshape(e.m, e.jw)
+            X = Tensor.from_dense(e.rhs_name, buf)
+            e.kernel = rebind_dense(e.kernel, {e.rhs_name: X},
+                                    jit=self.jit, cache=False)
+            if self.mesh is not None:
+                from ..distributed.executor import to_spmd
+                y = np.asarray(to_spmd(e.kernel, self.mesh)())
+            else:
+                y = np.asarray(e.kernel.run())
+            sp.set(leaf=e.kernel.leaf_name)
+        telemetry.METRICS.counter("serve.requests", B)
+        telemetry.METRICS.counter("serve.batches")
+        telemetry.METRICS.observe("serve.batch.occupancy", B / bucket)
+        telemetry.METRICS.observe("serve.batch.padded_slot_waste",
+                                  (bucket - B) / bucket)
+        if e.jw == 1:
+            return [y[:, r] for r in range(B)]
+        return [y[:, r * e.jw:(r + 1) * e.jw] for r in range(B)]
+
+    def explain(self) -> str:
+        lines = [f"batched kernel over {self.stmt.signature()} "
+                 f"buckets={self.buckets}"]
+        for b, e in sorted(self._entries.items()):
+            lines.append(f"  bucket {b}: leaf={e.kernel.leaf_name} "
+                         f"pieces={e.kernel.strategy.pieces}")
+        return "\n".join(lines)
+
+
+def lower_batched(stmt: Assignment, machine: Machine, batch: int = 8,
+                  schedule: Any = None, *, buckets=BATCH_BUCKETS,
+                  jit: bool = True, mesh: Any = None) -> BatchedKernel:
+    """Batched-serving entry point: a :class:`BatchedKernel` for ``stmt``
+    with the bucket covering ``batch`` pre-lowered (one plan + one jitted
+    runner, shared by every later ``run_many`` call in that bucket)."""
+    return BatchedKernel(stmt, machine, schedule, buckets=buckets,
+                         jit=jit, mesh=mesh).warm(batch)

@@ -45,3 +45,18 @@ def ppermute_ring(x: jax.Array, axis: str, shift: int = 1) -> jax.Array:
     n = jax.lax.axis_size(axis)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis_name=axis, perm=perm)
+
+
+def prefetch(arrays):
+    """Asynchronously start a shard transfer: ``jax.device_put`` on a
+    pytree dispatches immediately and returns futures-like arrays, so the
+    caller can run a leaf kernel while the transfer is in flight and only
+    ``jax.block_until_ready`` the result when the data is next consumed —
+    the double-buffering primitive behind
+    ``distributed.executor.run_overlapped``."""
+    return jax.device_put(arrays)
+
+
+def wait(arrays):
+    """Block until a :func:`prefetch` transfer has landed."""
+    return jax.block_until_ready(arrays)

@@ -897,7 +897,8 @@ SPMD_BUILDERS: Dict[str, Callable] = {
 }
 
 
-def to_spmd(kernel: LoweredKernel, mesh: Mesh = None, axis: str = "x"):
+def to_spmd(kernel: LoweredKernel, mesh: Mesh = None, axis: str = "x",
+            overlap: bool = False, overlap_chunks: int = 2):
     """SPMD executor for a lowered kernel, when a builder exists.
 
     ``mesh`` is data, not trace state: pass nothing to realize the
@@ -907,7 +908,15 @@ def to_spmd(kernel: LoweredKernel, mesh: Mesh = None, axis: str = "x"):
 
     Grid (multi-axis) NON-ZERO kernels reuse their 1-D builders with the
     flat color axis sharded over BOTH mesh axes and the reduction psum
-    scoped to both — the nested pos-split is the flat P*Q split."""
+    scoped to both — the nested pos-split is the flat P*Q split.
+
+    ``overlap=True`` selects the comm/compute-overlapped builder variant
+    where one exists (grid SpMM): the dense co-operand is consumed in
+    ``overlap_chunks`` column chunks whose SUMMA psums have no data
+    dependence on the following chunk's leaf, so the compiled program can
+    run chunk t's reduction while chunk t+1's leaf computes — bit-for-bit
+    equal to the unchunked builder (column chunking never reorders any
+    per-element reduction)."""
     if mesh is None:
         mesh = machine_to_mesh(kernel.machine)
     elif isinstance(mesh, Machine):
@@ -916,6 +925,16 @@ def to_spmd(kernel: LoweredKernel, mesh: Mesh = None, axis: str = "x"):
     if getattr(strat, "is_grid", False) and strat.space == "nnz" \
             and len(mesh.axis_names) >= 2:
         axis = tuple(mesh.axis_names)
+    if overlap:
+        builder = OVERLAP_SPMD_BUILDERS.get(kernel.leaf_name)
+        if builder is None:
+            raise NotImplementedError(
+                f"no overlapped shard_map builder for leaf "
+                f"{kernel.leaf_name}; supported: "
+                f"{sorted(OVERLAP_SPMD_BUILDERS)}")
+        with telemetry.span("execute.spmd.build", leaf=kernel.leaf_name,
+                            overlap=True, chunks=overlap_chunks):
+            return builder(kernel, mesh, axis=axis, chunks=overlap_chunks)
     builder = SPMD_BUILDERS.get(kernel.leaf_name)
     if builder is None:
         raise NotImplementedError(
@@ -1098,3 +1117,228 @@ def profile_pieces(kernel: LoweredKernel, iters: int = 3,
     prof = PieceProfile(leaf_name=kernel.leaf_name, seconds=secs)
     telemetry.METRICS.gauge("executor.piece_skew", prof.skew())
     return prof
+
+
+# -- Comm/compute overlap ---------------------------------------------------
+#
+# The serving fast path's second layer: double-buffered shard transfers.
+# The dense co-operand of an SpMM is consumed in column chunks; while the
+# leaf kernel contracts chunk t-1, chunk t's shard transfer is already in
+# flight (collectives.prefetch dispatches jax.device_put asynchronously).
+# Column chunking is bit-for-bit exact — every output element's k-reduction
+# runs in the same order as the unchunked kernel; chunks are independent
+# output-column lanes concatenated at the end.
+
+#: Leaves whose dense operand flows straight into the jitted runner as a
+#: device array. The bcsr paths re-pack on the host (pack_mat_row_blocks
+#: over np.asarray), which would force the transferred chunk back through
+#: host memory and defeat the double buffering.
+_OVERLAP_LEAVES = ("spmm_rows", "spmm_nnz", "spmm_grid_rows")
+
+
+def _chunk_bounds(J: int, chunks: int):
+    """Equal-width column chunks (last takes the remainder) — at most two
+    distinct widths, so the runner caches hold at most two entries per
+    leaf regardless of chunk count."""
+    chunks = max(1, min(int(chunks), int(J)))
+    cw = -(-int(J) // chunks)
+    return [(s, min(int(J), s + cw)) for s in range(0, int(J), cw)]
+
+
+def run_overlapped(kernel: LoweredKernel, chunks: int = 2,
+                   overlap: bool = True) -> np.ndarray:
+    """Execute an SpMM kernel with double-buffered dense-operand chunks.
+
+    Pipelined loop: issue chunk t's shard transfer, compute chunk t-1's
+    leaf (the transfer rides under it), block on the transfer, emit chunk
+    t's runner against the landed device arrays. ``overlap=False`` runs
+    the same chunking sequentially (issue, wait, compute) — the baseline
+    the bench compares against; both orders return bit-for-bit identical
+    results (and identical to ``kernel.run()``).
+
+    Per-chunk attribution lands as ``execute.overlap.chunk`` instants
+    (comm_s, hidden_s, bytes) under one ``execute.overlap`` span, rolled
+    up by :func:`repro.runtime.telemetry.overlap_report`; byte totals are
+    mirrored into ``kernel.comm.overlap_total_bytes`` /
+    ``overlap_hidden_bytes`` (attribution only — never added to
+    ``total_network_bytes``). ``hidden_s`` is the wall-clock window the
+    transfer spent under the previous chunk's compute: the host cannot
+    observe the exact landing instant without a callback, so the window
+    is clamped to the measured issue→ready duration.
+    """
+    from ..core import grid as grid_mod
+    from ..core import lower as lower_mod
+    from ..core.tensor import Tensor
+    from .collectives import prefetch, wait
+
+    if kernel.leaf_name not in _OVERLAP_LEAVES:
+        raise NotImplementedError(
+            f"run_overlapped supports leaves {_OVERLAP_LEAVES}; got "
+            f"{kernel.leaf_name} (bcsr paths re-pack on host)")
+    stmt = kernel.stmt
+    strat = kernel.strategy
+    _, Cacc = stmt.rhs.accesses()
+    cname = Cacc.tensor.name
+    oname = stmt.lhs.tensor.name
+    cplan = kernel.plans[cname]
+    if not cplan.replicated and cplan.grid is None \
+            and cplan.root_coord_bounds is None:
+        raise NotImplementedError(
+            "run_overlapped chunks the dense operand by columns; a "
+            "column-partitioned operand's bounds would change per chunk")
+    Cfull = np.asarray(cplan.tensor.to_dense(), np.float32)
+    n, J = (int(d) for d in stmt.lhs.tensor.shape)
+    bounds = _chunk_bounds(J, chunks)
+
+    def prep(c0, c1):
+        """Host-side pack of one chunk's shard (NOT the transfer)."""
+        Ct = Tensor.from_dense(cname, Cfull[:, c0:c1])
+        plan_t = dataclasses.replace(cplan, tensor=Ct)
+        hs = lower_mod._materialize_dense_operand(
+            Ct, plan_t, strat.pieces, cache=False)
+        nb = int(sum(np.asarray(v).nbytes for v in hs.arrays.values()))
+        return Ct, plan_t, hs, nb
+
+    def build(c0, c1, Ct, plan_t, host_shard, dev_arrays):
+        """Emit the chunk runner against the landed device arrays."""
+        Ot = Tensor.from_dense(oname, np.zeros((n, c1 - c0), np.float32))
+        cstmt = stmt.with_tensors({cname: Ct, oname: Ot})
+        plans = dict(kernel.plans)
+        plans[cname] = plan_t
+        if oname in plans:
+            plans[oname] = dataclasses.replace(plans[oname], tensor=Ot)
+        shards = dict(kernel.shards)
+        shards[cname] = dataclasses.replace(host_shard, arrays=dev_arrays)
+        if getattr(strat, "is_grid", False) and strat.space == "universe":
+            gp = grid_mod.compute_grid_plan(cstmt, strat)
+            _, runner = grid_mod._emit_grid(cstmt, strat, gp, plans,
+                                            shards, jit=True)
+        else:
+            _, runner = lower_mod._emit(cstmt, strat, plans, shards,
+                                        jit=True)
+        return runner
+
+    results = [None] * len(bounds)
+    total_comm = total_hidden = 0.0
+    total_bytes = hidden_bytes = 0
+    with telemetry.span("execute.overlap", leaf=kernel.leaf_name,
+                        chunks=len(bounds), overlap=bool(overlap)) as osp:
+        if not overlap or len(bounds) == 1:
+            for t, (c0, c1) in enumerate(bounds):
+                Ct, plan_t, hs, nb = prep(c0, c1)
+                t0 = time.perf_counter()
+                with telemetry.span("execute.overlap.xfer", chunk=t,
+                                    bytes=nb):
+                    dev = wait(prefetch(hs.arrays))
+                comm = max(time.perf_counter() - t0, 1e-9)
+                runner = build(c0, c1, Ct, plan_t, hs, dev)
+                with telemetry.span("execute.overlap.compute", chunk=t):
+                    results[t] = np.asarray(runner())
+                telemetry.instant("execute.overlap.chunk", chunk=t,
+                                  comm_s=comm, hidden_s=0.0, bytes=nb)
+                total_comm += comm
+                total_bytes += nb
+        else:
+            preps = [prep(c0, c1) for (c0, c1) in bounds]
+            pending = None                # (chunk index, emitted runner)
+            for t in range(len(bounds) + 1):
+                inflight = None
+                if t < len(bounds):
+                    Ct, plan_t, hs, nb = preps[t]
+                    t_issue = time.perf_counter()
+                    with telemetry.span("execute.overlap.xfer", chunk=t,
+                                        bytes=nb):
+                        dev = prefetch(hs.arrays)      # async dispatch
+                    inflight = (t, Ct, plan_t, hs, dev, t_issue, nb)
+                t_comp_end = None
+                if pending is not None:
+                    pt, runner = pending
+                    with telemetry.span("execute.overlap.compute",
+                                        chunk=pt):
+                        results[pt] = np.asarray(runner())
+                    t_comp_end = time.perf_counter()
+                    pending = None
+                if inflight is not None:
+                    ct, Ct, plan_t, hs, dev, t_issue, nb = inflight
+                    dev = wait(dev)
+                    t_ready = time.perf_counter()
+                    comm = max(t_ready - t_issue, 1e-9)
+                    hid = 0.0
+                    if t_comp_end is not None:
+                        hid = min(max(t_comp_end - t_issue, 0.0), comm)
+                    telemetry.instant("execute.overlap.chunk", chunk=ct,
+                                      comm_s=comm, hidden_s=hid, bytes=nb)
+                    total_comm += comm
+                    total_hidden += hid
+                    total_bytes += nb
+                    hidden_bytes += int(nb * (hid / comm))
+                    c0, c1 = bounds[ct]
+                    pending = (ct, build(c0, c1, Ct, plan_t, hs, dev))
+        eff = (total_hidden / total_comm) if total_comm > 0 else 0.0
+        osp.set(comm_s=total_comm, hidden_s=total_hidden, efficiency=eff)
+    telemetry.METRICS.counter("executor.overlap.comm_seconds", total_comm)
+    telemetry.METRICS.counter("executor.overlap.hidden_seconds",
+                              total_hidden)
+    telemetry.METRICS.counter("executor.overlap.bytes", float(total_bytes))
+    telemetry.METRICS.counter("executor.overlap.hidden_bytes",
+                              float(hidden_bytes))
+    telemetry.METRICS.gauge("executor.overlap.efficiency", eff)
+    kernel.comm.overlap_total_bytes += total_bytes
+    kernel.comm.overlap_hidden_bytes += hidden_bytes
+    return np.concatenate(results, axis=1)
+
+
+def spmm_grid_rows_overlap_spmd(kernel: LoweredKernel, mesh: Mesh,
+                                axis: str = "x", chunks: int = 2):
+    """Overlapped 2-D SpMM: identical SUMMA to :func:`spmm_grid_rows_spmd`
+    but the dense k-window is consumed in column chunks whose psums carry
+    no data dependence on the next chunk's leaf — the compiled program is
+    free to run chunk t's y-axis reduction while chunk t+1's local
+    contraction executes. Bit-for-bit equal to the unchunked builder:
+    column chunks are independent output lanes, and each lane's k-order
+    psum tree is unchanged."""
+    ax, ay = _grid_axes(mesh)
+    Bacc, Cacc = kernel.stmt.rhs.accesses()
+    B = kernel.shards[Bacc.tensor.name]
+    C = kernel.shards[Cacc.tensor.name]
+    n, J = kernel.stmt.lhs.tensor.shape
+    a = B.arrays
+    P_, Q_ = int(B.meta["P"]), int(B.meta["Q"])
+    pos = _grid_reshape(a["pos1"], P_, Q_)
+    crd = _grid_reshape(a["crd1"], P_, Q_)
+    vals = _grid_reshape(a["vals"], P_, Q_)
+    Cw = C.arrays["vals"]                       # (Q, max_kw, J)
+    bounds = tuple(_chunk_bounds(int(J), chunks))
+
+    def build():
+        @functools.partial(
+            shard_map, mesh=mesh,
+            in_specs=(P(ax, ay), P(ax, ay), P(ax, ay), P(ay)),
+            out_specs=P(ax))
+        def run(pos, crd, vals, Cw):
+            outs = []
+            for c0, c1 in bounds:
+                y = K.leaf_spmm_rows(pos[0, 0], crd[0, 0], vals[0, 0],
+                                     Cw[0][:, c0:c1])
+                outs.append(jax.lax.psum(y, axis_name=ay))
+            return jnp.concatenate(outs, axis=-1)[None]
+        return run
+
+    run = _spmd_runner("spmm_grid_rows_overlap", mesh, (ax, ay), (bounds,),
+                       (pos, crd, vals, Cw), build)
+
+    def call():
+        yb = np.asarray(run(jnp.asarray(pos), jnp.asarray(crd),
+                            jnp.asarray(vals), jnp.asarray(Cw)))
+        out = np.zeros((n, J), np.float32)
+        rs, cnt = np.asarray(a["row_start"]), np.asarray(a["row_count"])
+        for p in range(yb.shape[0]):
+            out[rs[p]: rs[p] + cnt[p]] = yb[p, : cnt[p]]
+        return out
+
+    return call
+
+
+OVERLAP_SPMD_BUILDERS: Dict[str, Callable] = {
+    "spmm_grid_rows": spmm_grid_rows_overlap_spmd,
+}

@@ -22,8 +22,45 @@ from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..core import formats as F
+from ..core.tensor import Tensor
 from .layers import NO_SHARD, ShardCtx, dense_init
+
+
+def dispatch_tensor(tope, topw, n_experts: int,
+                    name: str = "dispatch") -> Tensor:
+    """The router's top-k assignment as the paper's sparse matrix: a
+    (tokens × experts) CSR Tensor whose row ``t`` holds token ``t``'s
+    combine weights at its chosen expert columns — the same object the
+    coordinate-fusion dispatch in :func:`moe_apply` flattens and sorts,
+    now first-class so the format/partition machinery (and the serving
+    fast path) can consume it."""
+    tope = np.asarray(tope)
+    topw = np.asarray(topw, np.float32)
+    N, k = tope.shape
+    coords = np.stack([np.repeat(np.arange(N, dtype=np.int64), k),
+                       tope.reshape(-1).astype(np.int64)], axis=1)
+    return Tensor.from_coo(name, (N, int(n_experts)), coords,
+                           topw.reshape(-1), F.CSR(), dedupe=True)
+
+
+def combine_kernel(disp: Tensor, machine, *, batch: int = 8,
+                   schedule=None):
+    """The MoE combine ``y(t) = dispatch(t, e) * c(e)`` lowered as a
+    batched serving kernel: each request is one model-dimension column of
+    the stacked per-expert outputs, and ``run_many`` folds a batch of
+    columns into a single SpMM against the frozen dispatch matrix.
+    Returns a :class:`repro.core.lower.BatchedKernel`."""
+    from ..core.lower import lower_batched
+    from ..core.tin import parse_tin
+    N, E = disp.shape
+    stmt = parse_tin("y(i) = dispatch(i,j) * c(j)",
+                     y=Tensor.zeros_dense("y", (int(N),)),
+                     dispatch=disp,
+                     c=Tensor.zeros_dense("c", (int(E),)))
+    return lower_batched(stmt, machine, batch=batch, schedule=schedule)
 
 
 def moe_init(key, d: int, f: int, n_experts: int, dtype=jnp.float32) -> Dict:

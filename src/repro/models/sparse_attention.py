@@ -42,6 +42,29 @@ def band_plan(seq_len: int, q_block: int, window: int,
     return Tensor.from_coo(name, (nq, nq), coords, vals, F.CSR())
 
 
+def band_decode_kernel(seq_len: int, q_block: int, window: int,
+                       machine, *, batch: int = 8, schedule=None):
+    """The band mask lowered as the frozen sparse operand of a batched
+    serving kernel (the ISSUE-10 fast path).
+
+    Each decode request carries a per-kv-block summary vector ``v`` (one
+    entry per block — e.g. a pooled value/score statistic), and
+    ``y = attn_mask @ v`` aggregates it under the sliding-window pattern.
+    The mask never changes between requests, so the plan, the packed CSR
+    shards, and the per-bucket jitted runner are all built exactly once;
+    ``run_many`` batches concurrent decode streams into one SpMM.
+    Returns a :class:`repro.core.lower.BatchedKernel`."""
+    from ..core.lower import lower_batched
+    from ..core.tin import parse_tin
+    mask = band_plan(seq_len, q_block, window)
+    nq = mask.shape[0]
+    stmt = parse_tin("y(i) = attn_mask(i,j) * v(j)",
+                     y=Tensor.zeros_dense("y", (nq,)),
+                     attn_mask=mask,
+                     v=Tensor.zeros_dense("v", (nq,)))
+    return lower_batched(stmt, machine, batch=batch, schedule=schedule)
+
+
 def mask_to_ell(mask: Tensor, block_r: int = 1):
     """Pack the block mask's CSR into the ELL layout the gather kernel
     consumes: (nq, max_blocks) kv-block ids + validity."""
